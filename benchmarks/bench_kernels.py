@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode — CPU container; on a
+real TPU the same call dispatches the compiled kernel) vs jnp oracle.
+Reported timings on CPU measure the ORACLE (the deployable CPU path);
+interpret-mode timings are correctness-only and not indicative.
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.byteplane import byteplane_decode_ref
+from repro.kernels.ef_decode import ef_decode_ref
+from repro.kernels.pq_adc import pq_adc_ref
+from repro.kernels.rerank_l2 import rerank_l2_ref
+from repro.core.codec.elias_fano import encode_slot
+
+from .common import csv
+
+
+def _bench(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(quiet=False):
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 256, (4096, 8), dtype=np.uint8))
+    lut = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))
+    us = _bench(jax.jit(pq_adc_ref), codes, lut)
+    csv("kernel/pq_adc_ref", us, "n=4096;m=8;oracle=jnp")
+
+    slots = jnp.asarray(np.stack([
+        encode_slot(np.sort(rng.choice(10**6, 24, replace=False)
+                            .astype(np.uint64)), 32, 10**6)
+        for _ in range(256)]))
+    us = _bench(jax.jit(lambda s: ef_decode_ref(s, 32, 10**6)), slots)
+    csv("kernel/ef_decode_ref", us, "lists=256;r=32;oracle=jnp")
+
+    q = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(8, 128, 128)).astype(np.float32))
+    us = _bench(jax.jit(rerank_l2_ref), q, c)
+    csv("kernel/rerank_l2_ref", us, "q=8;c=128;d=128;oracle=jnp")
+
+    packed = jnp.asarray(rng.integers(0, 256, (4096, 128), dtype=np.uint8))
+    base = jnp.asarray(rng.integers(0, 256, 128, dtype=np.uint8))
+    us = _bench(jax.jit(byteplane_decode_ref), packed, base)
+    csv("kernel/byteplane_ref", us, "n=4096;v=128;oracle=jnp")
+
+
+if __name__ == "__main__":
+    main()

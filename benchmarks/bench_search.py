@@ -1,0 +1,77 @@
+"""Exp#3/#4 (Fig. 7/8): search throughput & latency vs recall frontier.
+
+Sweeps the candidate list size L for DiskANN, PipeANN and DecoupleVS and
+reports (recall@10, modeled QPS, modeled mean latency) per point — the
+paper's accuracy/throughput frontier, in I/O-model units.
+"""
+import time
+
+import numpy as np
+
+from repro.core.index import recall_at_k
+from repro.core.search.engine import (EngineConfig, search_colocated,
+                                      search_decoupled)
+
+from .common import csv, reset_io, world
+
+L_SWEEP = (24, 48, 96, 160)
+
+
+def _frontier(w, system: str):
+    pts = []
+    for l in L_SWEEP:
+        reset_io(w)
+        ids_all, stats = [], []
+        for q in w["queries"]:
+            if system in ("diskann", "pipeann"):
+                cfg = EngineConfig(l_size=l, pipelined=system == "pipeann")
+                ids, st = search_colocated(w["colo"], w["codes"], w["cb"],
+                                           q, cfg)
+            else:
+                cfg = EngineConfig(l_size=l, latency_aware=True,
+                                   compressed=True)
+                ids, st = search_decoupled(w["comp_ix"], w["vs"], w["codes"],
+                                           w["cb"], q, cfg)
+            ids_all.append(np.pad(ids, (0, 10 - len(ids)),
+                                  constant_values=-1))
+            stats.append(st)
+        lat = float(np.mean([s.latency_us for s in stats]))
+        p99 = float(np.percentile([s.latency_us for s in stats], 99))
+        rec = recall_at_k(np.stack(ids_all), w["gt"], 10)
+        pts.append(dict(l=l, recall=rec, latency_us=lat, p99_us=p99,
+                        qps=1e6 / lat))
+    return pts
+
+
+def main(quiet=False):
+    w = world("sift-like")
+    out = {}
+    for system in ("diskann", "pipeann", "decouplevs"):
+        t0 = time.time()
+        pts = _frontier(w, system)
+        us = (time.time() - t0) * 1e6 / (len(L_SWEEP) * len(w["queries"]))
+        frontier = ";".join(f"L{p['l']}:r={p['recall']:.3f}:"
+                            f"qps={p['qps']:.0f}:p99={p['p99_us']:.0f}"
+                            for p in pts)
+        csv(f"exp3/{system}", us, frontier)
+        out[system] = pts
+    # Exp#9 (appendix): P99 tail latency at the mid-recall operating point
+    for system, pts in out.items():
+        mid = pts[len(pts) // 2]
+        csv(f"exp9/{system}", 0.0,
+            f"L{mid['l']}:recall={mid['recall']:.3f};"
+            f"p99_us={mid['p99_us']:.0f};mean_us={mid['latency_us']:.0f};"
+            f"tail_ratio={mid['p99_us']/mid['latency_us']:.2f}")
+    # Exp#3 headline: throughput gain at matched recall (best common point)
+    best_dvs = max(out["decouplevs"], key=lambda p: p["recall"])
+    match_dk = min(out["diskann"],
+                   key=lambda p: abs(p["recall"] - best_dvs["recall"]))
+    csv("exp3/headline", 0.0,
+        f"dvs_vs_diskann_qps_gain="
+        f"{best_dvs['qps']/match_dk['qps']:.2f}x_at_recall~"
+        f"{best_dvs['recall']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Shared benchmark world: datasets + a built index, cached across tables.
+
+Scale note: the paper evaluates on 100M–1.4B-vector corpora; inside this
+container we run the same *pipeline* at 10^4 scale with generators matched
+to the paper datasets' statistics (see repro.data.synthetic). All reported
+savings/relative numbers are scale-free (per-vector layout arithmetic +
+relative I/O units); absolute GiB at paper scale are extrapolated where
+labelled "@100M".
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core.graph.pq import encode_pq, train_pq
+from repro.core.graph.vamana import build_vamana
+from repro.core.storage.colocated import ColocatedStore
+from repro.core.storage.index_store import CompressedIndexStore, RawIndexStore
+from repro.core.storage.vector_store import DecoupledVectorStore, StoreConfig
+from repro.data.synthetic import ground_truth, make_queries, make_vector_dataset
+
+N = 6000
+DIM = 64
+R = 24
+N_QUERIES = 48
+CACHE_BYTES = 64 << 10
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(kind: str):
+    return make_vector_dataset(kind, N, DIM, seed=0)
+
+
+@functools.lru_cache(maxsize=None)
+def world(kind: str = "sift-like"):
+    """Graph + PQ + all three store layouts for one dataset kind."""
+    t0 = time.time()
+    vecs = dataset(kind)
+    vf = vecs.astype(np.float32)
+    graph = build_vamana(vf, r=R, l_build=48, seed=0)
+    cb = train_pq(vf, m=8, seed=0)
+    codes = encode_pq(vf, cb)
+    queries = make_queries(kind, N_QUERIES, DIM).astype(np.float32)
+    gt = ground_truth(vecs, queries, k=10)
+    colo = ColocatedStore.build(vecs, graph.adjacency, graph.medoid, R,
+                                cache_bytes=CACHE_BYTES)
+    comp_ix = CompressedIndexStore.from_graph(graph.adjacency, graph.medoid,
+                                              R, cache_bytes=CACHE_BYTES)
+    raw_ix = RawIndexStore.from_graph(graph.adjacency, graph.medoid, R,
+                                      cache_bytes=CACHE_BYTES)
+    vs = DecoupledVectorStore(StoreConfig(dim=DIM, dtype=vecs.dtype,
+                                          segment_capacity=2048))
+    vs.append(np.arange(len(vecs)), vecs)
+    vs.seal_active()
+    vs_raw = DecoupledVectorStore(StoreConfig(dim=DIM, dtype=vecs.dtype,
+                                              segment_capacity=2048,
+                                              compress=False))
+    vs_raw.append(np.arange(len(vecs)), vecs)
+    vs_raw.seal_active()
+    return dict(kind=kind, vecs=vecs, graph=graph, cb=cb, codes=codes,
+                queries=queries, gt=gt, colo=colo, comp_ix=comp_ix,
+                raw_ix=raw_ix, vs=vs, vs_raw=vs_raw,
+                build_s=time.time() - t0)
+
+
+def reset_io(w):
+    for s in (w["colo"], w["comp_ix"], w["raw_ix"]):
+        s.io.reads = s.io.read_bytes = 0
+        s.cache.reset_stats()
+        s.cache._d.clear()
+    for s in (w["vs"], w["vs_raw"]):
+        s.io.reads = s.io.read_bytes = 0
+
+
+def csv(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

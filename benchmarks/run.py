@@ -1,0 +1,36 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Mapping:
+  bench_entropy      Table 1        bench_search       Exp#3/#4 (Fig 7/8)
+  bench_storage      Exp#2 (Fig 6)  bench_update       Exp#5/#7 (Fig 9/10)
+  bench_components   Exp#1 (Fig 5)  bench_compression  Exp#8 (Fig 11)
+  bench_breakdown    Exp#6 (Tab 3)  bench_roofline     §Roofline (dry-run)
+  bench_kernels      Pallas kernel oracles
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_breakdown, bench_components, bench_compression,
+                   bench_entropy, bench_kernels, bench_roofline,
+                   bench_search, bench_storage, bench_update)
+    print("name,us_per_call,derived")
+    t00 = time.time()
+    for mod in (bench_entropy, bench_storage, bench_components, bench_search,
+                bench_breakdown, bench_update, bench_compression,
+                bench_kernels, bench_roofline):
+        t0 = time.time()
+        try:
+            mod.main(quiet=True)
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{mod.__name__},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {mod.__name__} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    print(f"# total {time.time()-t00:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,49 @@
+"""Serve a small LM with batched requests + DecoupleVS retrieval (RAG).
+
+    PYTHONPATH=src python examples/rag_serve.py --requests 4
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.data.synthetic import make_token_batch
+from repro.models.api import Model
+from repro.serve.engine import ServeEngine
+from repro.serve.rag import RAGPipeline
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--docs", type=int, default=512)
+    ap.add_argument("--doc-len", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch), d_model=128)
+    model = Model.from_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params)
+    print(f"serving {cfg.name}: {model.n_params()/1e6:.2f}M params")
+
+    docs = make_token_batch(cfg.vocab, args.docs, args.doc_len, seed=3)
+    rag = RAGPipeline(engine, doc_tokens=docs, k=2)
+    print(f"indexed {args.docs} docs "
+          f"(compressed index {rag.index_store.physical_bytes/2**10:.0f} KiB, "
+          f"vector store {rag.vector_store.physical_bytes/2**10:.0f} KiB)")
+
+    queries = make_token_batch(cfg.vocab, args.requests, 8, seed=9)
+    gen, stats = rag.answer(queries, max_new=args.max_new)
+    for i in range(args.requests):
+        print(f"req {i}: retrieved docs {stats['retrieved'][i].tolist()} "
+              f"-> generated {gen[i].tolist()}")
+    print(f"retrieval I/O: {stats['graph_ios']} graph + "
+          f"{stats['vector_ios']} vector block reads, "
+          f"{stats['cache_hits']} cache hits across the batch")
+
+
+if __name__ == "__main__":
+    main()

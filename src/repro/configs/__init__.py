@@ -1,0 +1,3 @@
+from . import shapes  # noqa: F401
+from .registry import ARCHS, get_config, reduce_config  # noqa: F401
+from .shapes import SHAPES, ShapeSpec, applicable  # noqa: F401

@@ -1,0 +1,3 @@
+# DecoupleVS core: component-aware compressed decoupled storage for
+# disk-resident graph ANNS, adapted to the TPU memory hierarchy (DESIGN.md §2).
+from . import codec, graph, index, search, storage, update  # noqa: F401

@@ -1,0 +1,9 @@
+"""Component-aware lossless codecs (paper §3.2).
+
+- :mod:`huffman` — canonical Huffman over bytes (vector data payload codec).
+- :mod:`xor_delta` — dimension-aligned base-vector XOR transform.
+- :mod:`elias_fano` — monotone integer lists (auxiliary index codec).
+- :mod:`bitpack` — fixed-width bit packing (shared substrate + TPU byte-plane).
+- :mod:`entropy` — Table-1 compressibility characterization.
+"""
+from . import bitpack, elias_fano, entropy, huffman, xor_delta  # noqa: F401

@@ -1,0 +1,94 @@
+"""Fixed-width bit packing.
+
+Host-side (numpy) encode, plus a pure-jnp decode used on device. Words are
+little-endian uint32; bit ``i`` of the stream lives in word ``i // 32`` at
+in-word offset ``i % 32``. All decoders accept an arbitrary base bit offset so
+several packed streams can share one word buffer (Elias-Fano slots do this).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def words_for_bits(nbits: int) -> int:
+    return (int(nbits) + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_fixed(values: np.ndarray, width: int, *, out: np.ndarray | None = None,
+               bit_offset: int = 0) -> np.ndarray:
+    """Pack ``values`` (uint64-safe ints < 2**width) at ``width`` bits each.
+
+    Returns a uint32 word array (newly allocated unless ``out`` is given).
+    """
+    values = np.asarray(values, dtype=np.uint64)
+    n = values.shape[0]
+    total_bits = bit_offset + n * width
+    if out is None:
+        out = np.zeros(words_for_bits(total_bits), dtype=np.uint32)
+    if width == 0 or n == 0:
+        return out
+    if width > 33:  # value << (in-word offset <= 31) must fit in uint64 below
+        raise ValueError(f"width {width} too large")
+    start = bit_offset + np.arange(n, dtype=np.int64) * width
+    word = start // WORD_BITS
+    off = (start % WORD_BITS).astype(np.uint64)
+    # A width<=57-bit value at in-word offset <32 spans at most 3 uint32 words.
+    v = values << off
+    for k, shift in enumerate((np.uint64(0), np.uint64(32), np.uint64(64))):
+        part = ((v >> shift) & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        idx = word + k
+        live = part != 0
+        if np.any(live):
+            np.bitwise_or.at(out, idx[live], part[live])
+    return out
+
+
+def unpack_fixed_np(words: np.ndarray, n: int, width: int, *,
+                    bit_offset: int = 0) -> np.ndarray:
+    """numpy inverse of :func:`pack_fixed` -> uint64 array of length n."""
+    if width == 0:
+        return np.zeros(n, dtype=np.uint64)
+    w64 = words.astype(np.uint64)
+    start = bit_offset + np.arange(n, dtype=np.int64) * width
+    word = start // WORD_BITS
+    off = (start % WORD_BITS).astype(np.uint64)
+    nw = len(w64)
+    g0 = w64[word]
+    g1 = np.where(word + 1 < nw, w64[np.minimum(word + 1, nw - 1)], 0)
+    g2 = np.where(word + 2 < nw, w64[np.minimum(word + 2, nw - 1)], 0)
+    val = (g0 >> off) | (g1 << (np.uint64(32) - off))  # shift 32 is valid on u64
+    need_hi = (off.astype(np.int64) + width) > 64
+    if np.any(need_hi):
+        hi = g2 << (np.uint64(64) - off)  # off>0 whenever need_hi
+        val = np.where(need_hi, val | hi, val)
+    mask = (np.uint64(1) << np.uint64(width)) - np.uint64(1)
+    return val & mask
+
+
+def unpack_fixed_jnp(words: jnp.ndarray, n: int, width: int, *,
+                     bit_offset=0) -> jnp.ndarray:
+    """Pure-jnp decode -> uint32 array of length n (requires width <= 32).
+
+    ``bit_offset`` may be a traced scalar; ``n``/``width`` are static.
+    """
+    if width == 0:
+        return jnp.zeros((n,), dtype=jnp.uint32)
+    if width > 32:
+        raise ValueError("jnp unpack supports width <= 32")
+    start = bit_offset + jnp.arange(n, dtype=jnp.int32) * width
+    word = start // WORD_BITS
+    off = (start % WORD_BITS).astype(jnp.uint32)
+    nw = words.shape[0]
+    w = words.astype(jnp.uint32)
+    g0 = w[jnp.clip(word, 0, nw - 1)]
+    g1 = w[jnp.clip(word + 1, 0, nw - 1)]
+    lo = jnp.right_shift(g0, off)
+    # (32 - off) == 32 must not shift by >=32 (UB-ish); mask it out instead.
+    hi = jnp.where(off > 0, jnp.left_shift(g1, jnp.uint32(32) - off), 0)
+    val = lo | hi
+    if width < 32:
+        val = val & jnp.uint32((1 << width) - 1)
+    return val.astype(jnp.uint32)

@@ -1,0 +1,207 @@
+"""Elias-Fano encoding of monotone integer sequences (paper §3.2).
+
+Two-level representation: the low ``l = floor(log2(U/n))`` bits of each value
+are stored at fixed width; the high bits are stored as a unary-coded bitmap
+(bit ``high[i] + i`` set). Worst-case size for n values over universe U is
+``2n + n*ceil(log2(U/n))`` bits — the bound the paper uses both for its sparse
+in-memory index sizing and for fixed-size LRU cache entries (§3.3, §3.4).
+
+Host encode/decode are numpy; :func:`decode_slot_jnp` is the pure-jnp decoder
+for the fixed-size *slot* format used by the device-resident graph (see
+``core/storage/index_store.py``): fixed slots let the device address any
+adjacency list directly by vertex ID — the TPU analogue of the paper's
+fixed-entry LRU cache.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from .bitpack import pack_fixed, unpack_fixed_np, unpack_fixed_jnp, words_for_bits
+
+WORD_BITS = 32
+
+
+def low_bits_width(n: int, universe: int) -> int:
+    """l = max(0, ceil(log2(U/n))).
+
+    The ceil split keeps the high bitmap within ``2n + 1`` bits, matching the
+    paper's worst-case form ``2R + R*ceil(log2(N/R))`` exactly (§3.3)."""
+    if n <= 0:
+        return 0
+    return max(0, int(math.ceil(math.log2(max(1, universe) / n))))
+
+
+def worst_case_bits(n: int, universe: int) -> int:
+    """Paper bound: 2n + n*ceil(log2(U/n)) bits (§3.3)."""
+    if n <= 0:
+        return 0
+    return 2 * n + n * int(math.ceil(math.log2(max(2, universe) / n)))
+
+
+@dataclass(frozen=True)
+class EFList:
+    """A variable-size Elias-Fano encoded monotone list."""
+    n: int
+    universe: int
+    low_width: int
+    low_words: np.ndarray    # uint32
+    high_words: np.ndarray   # uint32 unary bitmap, n + (max_high) + 1 bits
+
+    @property
+    def size_bits(self) -> int:
+        return 32 * (len(self.low_words) + len(self.high_words))
+
+
+def encode(values: np.ndarray, universe: int) -> EFList:
+    values = np.asarray(values, dtype=np.uint64)
+    n = len(values)
+    if n and (np.any(np.diff(values.astype(np.int64)) < 0)):
+        raise ValueError("Elias-Fano requires a non-decreasing sequence")
+    if n and int(values[-1]) >= universe:
+        raise ValueError("value out of universe")
+    l = low_bits_width(n, universe)
+    low = values & np.uint64((1 << l) - 1) if l else np.zeros(n, np.uint64)
+    high = (values >> np.uint64(l)).astype(np.int64)
+    low_words = pack_fixed(low, l) if l else np.zeros(0, np.uint32)
+    hb_bits = n + (int(high[-1]) if n else 0) + 1
+    high_words = np.zeros(words_for_bits(hb_bits), dtype=np.uint32)
+    if n:
+        pos = high + np.arange(n, dtype=np.int64)
+        np.bitwise_or.at(high_words, pos // WORD_BITS,
+                         (np.uint32(1) << (pos % WORD_BITS).astype(np.uint32)))
+    return EFList(n=n, universe=universe, low_width=l,
+                  low_words=low_words, high_words=high_words)
+
+
+def decode(ef: EFList) -> np.ndarray:
+    if ef.n == 0:
+        return np.zeros(0, dtype=np.uint64)
+    bits = np.unpackbits(ef.high_words.view(np.uint8), bitorder="little")
+    pos = np.flatnonzero(bits)[: ef.n].astype(np.int64)
+    high = (pos - np.arange(ef.n)).astype(np.uint64)
+    low = unpack_fixed_np(ef.low_words, ef.n, ef.low_width)
+    return (high << np.uint64(ef.low_width)) | low
+
+
+# ---------------------------------------------------------------------------
+# Compact byte-record format (block-based on-disk index store, §3.3)
+# ---------------------------------------------------------------------------
+# Record: u8 count | u8 low_width | low bytes (ceil(count*lw/8)) | high bytes.
+# Trailing zero bits of the high bitmap are trimmed (decode re-pads), so the
+# record size tracks the true encoded size, not word-rounded slack.
+
+
+def encode_record(values: np.ndarray, universe: int) -> np.ndarray:
+    values = np.asarray(values, dtype=np.uint64)
+    n = len(values)
+    if n > 255:
+        raise ValueError("record format supports <= 255 neighbors")
+    e = encode(values, universe)
+    low_bytes = e.low_words.view(np.uint8)[: (n * e.low_width + 7) // 8]
+    hb_bits = n + (int(values[-1]) >> e.low_width if n else 0) + 1
+    high_bytes = e.high_words.view(np.uint8)[: (hb_bits + 7) // 8]
+    return np.concatenate([
+        np.asarray([n, e.low_width], dtype=np.uint8), low_bytes, high_bytes])
+
+
+def decode_record(rec: np.ndarray, universe: int) -> np.ndarray:
+    rec = np.asarray(rec, dtype=np.uint8)
+    n, lw = int(rec[0]), int(rec[1])
+    if n == 0:
+        return np.zeros(0, dtype=np.uint64)
+    nlb = (n * lw + 7) // 8
+    low_b = rec[2:2 + nlb]
+    high_b = rec[2 + nlb:]
+    def _pad_words(b):
+        pad = (-len(b)) % 4
+        if pad:
+            b = np.concatenate([b, np.zeros(pad, np.uint8)])
+        return b.copy().view(np.uint32)
+    ef = EFList(n=n, universe=universe, low_width=lw,
+                low_words=_pad_words(low_b), high_words=_pad_words(high_b))
+    return decode(ef)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-size slot format (device-resident graph / LRU cache entries)
+# ---------------------------------------------------------------------------
+# Slot layout, uint32 words:
+#   word 0            : n (actual neighbor count, <= r_max)
+#   words [1 .. LW]   : packed low bits (r_max * l bits, fixed l from r_max/U)
+#   words [LW+1 .. ]  : high bitmap (2*r_max + 1 bits worst case)
+# Unused trailing entries encode value `universe-1` padding removed on decode.
+
+
+def slot_layout(r_max: int, universe: int) -> tuple[int, int, int, int]:
+    """Returns (low_width, low_words, high_words, slot_words)."""
+    l = low_bits_width(r_max, universe)
+    lw = words_for_bits(r_max * l)
+    # high bitmap: r_max set bits, max high value (universe-1)>>l < 2*r_max + 1
+    hb = words_for_bits(r_max + ((universe - 1) >> l) + 1)
+    return l, lw, hb, 1 + lw + hb
+
+
+def encode_slot(values: np.ndarray, r_max: int, universe: int) -> np.ndarray:
+    """Encode an ascending list (len <= r_max) into a fixed-size uint32 slot.
+
+    The list is padded to r_max with ``universe - 1`` sentinels so the slot
+    shape is static — decode recovers the true length from word 0.
+    """
+    values = np.asarray(values, dtype=np.uint64)
+    n = len(values)
+    if n > r_max:
+        raise ValueError(f"{n} > r_max {r_max}")
+    l, lw, hb, total = slot_layout(r_max, universe)
+    padded = np.concatenate([values,
+                             np.full(r_max - n, universe - 1, dtype=np.uint64)])
+    slot = np.zeros(total, dtype=np.uint32)
+    slot[0] = n
+    low = padded & np.uint64((1 << l) - 1) if l else np.zeros(r_max, np.uint64)
+    if l:
+        slot[1:1 + lw] = pack_fixed(low, l, out=np.zeros(lw, np.uint32))
+    high = (padded >> np.uint64(l)).astype(np.int64)
+    pos = high + np.arange(r_max, dtype=np.int64)
+    hw = np.zeros(hb, dtype=np.uint32)
+    np.bitwise_or.at(hw, pos // WORD_BITS,
+                     (np.uint32(1) << (pos % WORD_BITS).astype(np.uint32)))
+    slot[1 + lw:] = hw
+    return slot
+
+
+def decode_slot_np(slot: np.ndarray, r_max: int, universe: int) -> np.ndarray:
+    l, lw, hb, _ = slot_layout(r_max, universe)
+    n = int(slot[0])
+    bits = np.unpackbits(slot[1 + lw:].view(np.uint8), bitorder="little")
+    pos = np.flatnonzero(bits)[:r_max].astype(np.int64)
+    high = (pos - np.arange(r_max)).astype(np.uint64)
+    low = unpack_fixed_np(slot[1:1 + lw], r_max, l)
+    return ((high << np.uint64(l)) | low)[:n]
+
+
+def decode_slot_jnp(slot: jnp.ndarray, r_max: int, universe: int):
+    """Pure-jnp decode of one slot -> (neighbors[r_max] int32, count int32).
+
+    Padding entries decode to ``universe - 1``; callers mask with ``count``.
+    The select-in-bitmap uses a cumulative-sum rank: position of the i-th set
+    bit is ``argmax(cumsum(bits) == i+1)`` — O(r_max * bitmap_bits) compares,
+    VREG-friendly for the bounded bitmaps the paper's worst case guarantees.
+    """
+    l, lw, hb, _ = slot_layout(r_max, universe)
+    n = slot[0].astype(jnp.int32)
+    hw = slot[1 + lw:].astype(jnp.uint32)
+    nbits = hb * WORD_BITS
+    bitidx = jnp.arange(nbits, dtype=jnp.uint32)
+    bits = (hw[bitidx // WORD_BITS] >> (bitidx % WORD_BITS)) & jnp.uint32(1)
+    csum = jnp.cumsum(bits.astype(jnp.int32))
+    ranks = jnp.arange(1, r_max + 1, dtype=jnp.int32)
+    # pos[i] = first index where csum == i+1 (and bit set there).
+    hit = (csum[None, :] == ranks[:, None])
+    pos = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    high = pos - jnp.arange(r_max, dtype=jnp.int32)
+    low = unpack_fixed_jnp(slot[1:1 + lw], r_max, l).astype(jnp.int32)
+    vals = jnp.left_shift(high, l) | low
+    return vals, n

@@ -1,0 +1,181 @@
+"""Canonical Huffman coding over byte symbols (paper §3.2).
+
+One frequency table per *segment* (paper §3.3: a single global table ignores
+local statistics, per-chunk tables cost too much metadata). Encode/decode are
+vectorised across records: every record advances one symbol per step in
+lockstep, so a segment of ``n`` vectors of ``V`` bytes decodes in ``V`` numpy
+steps instead of ``n*V`` python iterations. Records are byte-aligned so block
+headers can address them with byte offsets (§3.3 block layout).
+
+Code lengths are limited to MAX_LEN (16) — table-driven decode peeks MAX_LEN
+bits and looks up (symbol, length) in a 64 Ki-entry LUT, mirroring the
+FSE/fast-Huffman implementation the paper adopts [45].
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+MAX_LEN = 16
+NSYM = 256
+
+
+def _huffman_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Code length per symbol from frequencies (0 for absent symbols)."""
+    freqs = np.asarray(freqs, dtype=np.int64)
+    present = np.flatnonzero(freqs)
+    lengths = np.zeros(NSYM, dtype=np.int32)
+    if len(present) == 0:
+        return lengths
+    if len(present) == 1:
+        lengths[present[0]] = 1
+        return lengths
+    heap = [(int(freqs[s]), int(s), (int(s),)) for s in present]
+    heapq.heapify(heap)
+    counter = NSYM  # tiebreak id
+    while len(heap) > 1:
+        fa, _, sa = heapq.heappop(heap)
+        fb, _, sb = heapq.heappop(heap)
+        for s in sa + sb:
+            lengths[s] += 1
+        heapq.heappush(heap, (fa + fb, counter, sa + sb))
+        counter += 1
+    return lengths
+
+
+def _limit_lengths(freqs: np.ndarray, max_len: int = MAX_LEN) -> np.ndarray:
+    """Rebuild with flattened frequencies until max code length fits.
+
+    Simple iterative damping (zlib-style heuristic): still a valid prefix
+    code, with a negligible ratio loss on byte alphabets.
+    """
+    f = np.asarray(freqs, dtype=np.int64).copy()
+    lengths = _huffman_lengths(f)
+    while lengths.max(initial=0) > max_len:
+        f = (f + 1) // 2
+        f[np.asarray(freqs) > 0] = np.maximum(f[np.asarray(freqs) > 0], 1)
+        lengths = _huffman_lengths(f)
+    return lengths
+
+
+@dataclass
+class HuffmanTable:
+    """Canonical code: codes assigned in (length, symbol) order."""
+    lengths: np.ndarray          # [256] int32
+    codes: np.ndarray            # [256] uint32 (MSB-first canonical code)
+    decode_sym: np.ndarray       # [2**MAX_LEN] uint8
+    decode_len: np.ndarray       # [2**MAX_LEN] uint8
+
+    @property
+    def size_bytes(self) -> int:
+        # Persisted form is just the 256 code lengths (canonical reconstruction).
+        return NSYM
+
+    @classmethod
+    def from_frequencies(cls, freqs: np.ndarray) -> "HuffmanTable":
+        lengths = _limit_lengths(freqs)
+        return cls.from_lengths(lengths)
+
+    @classmethod
+    def from_lengths(cls, lengths: np.ndarray) -> "HuffmanTable":
+        lengths = np.asarray(lengths, dtype=np.int32)
+        codes = np.zeros(NSYM, dtype=np.uint32)
+        code = 0
+        for ln in range(1, MAX_LEN + 1):
+            for sym in np.flatnonzero(lengths == ln):
+                codes[sym] = code
+                code += 1
+            code <<= 1
+        # Decode LUT: index by the next MAX_LEN bits (MSB-first).
+        decode_sym = np.zeros(1 << MAX_LEN, dtype=np.uint8)
+        decode_len = np.zeros(1 << MAX_LEN, dtype=np.uint8)
+        for sym in np.flatnonzero(lengths > 0):
+            ln = int(lengths[sym])
+            prefix = int(codes[sym]) << (MAX_LEN - ln)
+            span = 1 << (MAX_LEN - ln)
+            decode_sym[prefix:prefix + span] = sym
+            decode_len[prefix:prefix + span] = ln
+        return cls(lengths, codes, decode_sym, decode_len)
+
+    @classmethod
+    def from_data(cls, data: np.ndarray) -> "HuffmanTable":
+        freqs = np.bincount(np.asarray(data, dtype=np.uint8).reshape(-1),
+                            minlength=NSYM)
+        return cls.from_frequencies(freqs)
+
+
+def encode_records(data: np.ndarray, table: HuffmanTable
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Encode rows of ``data`` [n, V] uint8 -> (payload bytes, byte offsets).
+
+    Returns ``payload`` (concatenated byte-aligned records) and ``offsets``
+    [n+1] int64 such that record i is ``payload[offsets[i]:offsets[i+1]]``.
+    Bits are MSB-first within each byte.
+    """
+    data = np.asarray(data, dtype=np.uint8)
+    n, v = data.shape
+    lens = table.lengths[data].astype(np.int64)          # [n, V]
+    codes = table.codes[data].astype(np.uint64)          # [n, V]
+    row_bits = lens.sum(axis=1)
+    row_bytes = (row_bits + 7) // 8
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(row_bytes, out=offsets[1:])
+    payload = np.zeros(int(offsets[-1]), dtype=np.uint8)
+    # Absolute bit position of each symbol (record start is byte aligned).
+    bitpos = np.cumsum(lens, axis=1) - lens + (offsets[:n, None] * 8)
+    end = bitpos + lens  # exclusive
+    # Scatter symbol-by-symbol across all rows at once (V steps).
+    payload64 = np.zeros((len(payload) + 8), dtype=np.uint8)  # slack for spill
+    for j in range(v):
+        bp, ln, cd = bitpos[:, j], lens[:, j], codes[:, j]
+        byte = bp >> 3
+        off = (bp & 7).astype(np.uint64)
+        # Place code MSB-first starting at bit `off` of payload[byte]:
+        # shift code into a 32-bit window aligned to the byte.
+        shifted = cd << (np.uint64(32) - off - ln.astype(np.uint64))
+        for k in range(4):  # max 16-bit code + 7-bit offset spans 3 bytes; 4 is safe
+            part = ((shifted >> np.uint64(24 - 8 * k)) & np.uint64(0xFF)).astype(np.uint8)
+            live = part != 0
+            if np.any(live):
+                np.bitwise_or.at(payload64, byte[live] + k, part[live])
+    payload[:] = payload64[:len(payload)]
+    del end
+    return payload, offsets
+
+
+def decode_records(payload: np.ndarray, offsets: np.ndarray, v: int,
+                   table: HuffmanTable, select: np.ndarray | None = None
+                   ) -> np.ndarray:
+    """Decode records (all, or the subset ``select``) -> [m, V] uint8."""
+    offsets = np.asarray(offsets, dtype=np.int64)
+    starts = offsets[:-1] if select is None else offsets[:-1][select]
+    return decode_at(payload, starts, v, table)
+
+
+def decode_at(payload: np.ndarray, starts: np.ndarray, v: int,
+              table: HuffmanTable) -> np.ndarray:
+    """Decode records at absolute byte offsets ``starts`` -> [m, V] uint8.
+
+    Lockstep vectorised decode: V steps, each peeking MAX_LEN bits per row via
+    a 4-byte gather and the canonical LUT.
+    """
+    payload = np.asarray(payload, dtype=np.uint8)
+    starts = np.asarray(starts, dtype=np.int64)
+    m = len(starts)
+    out = np.zeros((m, v), dtype=np.uint8)
+    buf = np.concatenate([payload, np.zeros(4, dtype=np.uint8)]).astype(np.uint32)
+    bitpos = starts * 8
+    for j in range(v):
+        byte = bitpos >> 3
+        off = (bitpos & 7).astype(np.uint32)
+        window = (buf[byte] << 24) | (buf[byte + 1] << 16) | (buf[byte + 2] << 8) | buf[byte + 3]
+        peek = (window >> (np.uint32(32 - MAX_LEN) - off)) & np.uint32((1 << MAX_LEN) - 1)
+        out[:, j] = table.decode_sym[peek]
+        bitpos = bitpos + table.decode_len[peek]
+    return out
+
+
+def encoded_size_bits(data: np.ndarray, table: HuffmanTable) -> int:
+    return int(table.lengths[np.asarray(data, np.uint8)].sum())

@@ -1,0 +1,52 @@
+"""XOR-delta transform against a dimension-aligned base vector (paper §3.2).
+
+The base vector takes the most frequent byte value at each *byte position*
+across the vectors under consideration (per chunk, §3.3). XOR-ing each vector
+against it concentrates the byte distribution near zero while preserving
+losslessness, feeding a single unified Huffman stream instead of one stream
+per byte column. The transform is applied only when a sampled entropy test
+says it wins (§3.3 two-stage compression) — see :func:`delta_wins`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .entropy import byte_entropy
+
+
+def as_bytes(vectors: np.ndarray) -> np.ndarray:
+    """View an [n, d] numeric array as [n, V] raw bytes (lossless)."""
+    vectors = np.ascontiguousarray(vectors)
+    return vectors.view(np.uint8).reshape(vectors.shape[0], -1)
+
+
+def build_base(vec_bytes: np.ndarray) -> np.ndarray:
+    """Most frequent byte per byte position -> base vector [V] uint8."""
+    n, v = vec_bytes.shape
+    base = np.zeros(v, dtype=np.uint8)
+    for j in range(v):
+        counts = np.bincount(vec_bytes[:, j], minlength=256)
+        base[j] = counts.argmax()
+    return base
+
+
+def apply_delta(vec_bytes: np.ndarray, base: np.ndarray) -> np.ndarray:
+    return np.bitwise_xor(vec_bytes, base[None, :])
+
+
+def delta_wins(vec_bytes: np.ndarray, sample_frac: float = 0.1,
+               margin_bits: float = 0.05) -> tuple[bool, np.ndarray]:
+    """Two-stage test (paper §3.3): sample the first ``sample_frac`` of the
+    chunk, build a candidate base, and compare raw vs XOR-delta entropy.
+
+    ``margin_bits`` guards against sample overfit (the base is built from the
+    same sample): delta must win by a real margin, since applying it also
+    costs a base vector of chunk metadata. Returns (use_delta, base).
+    """
+    n = vec_bytes.shape[0]
+    m = max(1, int(n * sample_frac))
+    sample = vec_bytes[:m]
+    base = build_base(sample)
+    raw_h = byte_entropy(sample)
+    delta_h = byte_entropy(apply_delta(sample, base))
+    return bool(delta_h < raw_h - margin_bits), base

@@ -1,0 +1,4 @@
+from . import sharded_index  # noqa: F401
+from .sharded_index import (ShardedIndex, build_sharded_index,  # noqa: F401
+                            lower_production_search, make_sharded_search,
+                            place_on_mesh)

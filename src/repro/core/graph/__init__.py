@@ -1,0 +1,1 @@
+from . import pq, vamana  # noqa: F401

@@ -1,0 +1,61 @@
+"""End-to-end index construction: Vamana graph + PQ codes + compressed
+device-resident structures (paper §3.1 architecture, JAX edition).
+
+``build_device_index`` is the offline path: build the graph (expensive, as in
+the paper), then apply DecoupleVS's compression/layout transform (cheap) to
+produce the HBM-resident search state. The host-tier stores (segments, block
+layouts, Huffman payloads) live in ``core.storage`` and are built from the
+same artifacts.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .codec.elias_fano import encode_slot, slot_layout
+from .graph.pq import PQCodebook, encode_pq, train_pq
+from .graph.vamana import VamanaGraph, build_vamana
+from .search.beam import DeviceIndex
+
+
+def ef_slots_from_graph(graph: VamanaGraph, universe: int | None = None
+                        ) -> np.ndarray:
+    """Encode every adjacency list (sorted ascending — search is
+    order-independent, §3.2) into fixed-size EF slots."""
+    n = graph.n
+    universe = universe or n
+    _, _, _, words = slot_layout(graph.r, universe)
+    slots = np.zeros((n, words), dtype=np.uint32)
+    for i, adj in enumerate(graph.adjacency):
+        slots[i] = encode_slot(np.sort(adj.astype(np.uint64)), graph.r, universe)
+    return slots
+
+
+def build_device_index(vectors: np.ndarray, r: int = 32, l_build: int = 64,
+                       alpha: float = 1.2, pq_m: int = 8, seed: int = 0
+                       ) -> tuple[DeviceIndex, VamanaGraph, PQCodebook]:
+    vectors = np.asarray(vectors, dtype=np.float32)
+    n = len(vectors)
+    graph = build_vamana(vectors, r=r, l_build=l_build, alpha=alpha, seed=seed)
+    cb = train_pq(vectors, m=pq_m, seed=seed)
+    codes = encode_pq(vectors, cb)
+    nbrs, counts = graph.to_padded()
+    slots = ef_slots_from_graph(graph)
+    index = DeviceIndex(
+        neighbors=jnp.asarray(nbrs),
+        counts=jnp.asarray(counts),
+        ef_slots=jnp.asarray(slots),
+        pq_codes=jnp.asarray(codes),
+        pq_centroids=jnp.asarray(cb.centroids),
+        vectors=jnp.asarray(vectors),
+        medoid=jnp.int32(graph.medoid),
+    )
+    return index, graph, cb
+
+
+def recall_at_k(pred_ids: np.ndarray, gt_ids: np.ndarray, k: int) -> float:
+    """Fraction of true top-k found (paper's recall@10 metric, §4.1)."""
+    hits = 0
+    for p, g in zip(np.asarray(pred_ids), np.asarray(gt_ids)):
+        hits += len(set(p[:k].tolist()) & set(g[:k].tolist()))
+    return hits / (len(gt_ids) * k)

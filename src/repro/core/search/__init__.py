@@ -1,0 +1,2 @@
+from . import beam  # noqa: F401
+from .beam import DeviceIndex, SearchParams, search  # noqa: F401

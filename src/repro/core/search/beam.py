@@ -1,0 +1,247 @@
+"""Device-side graph beam search (`jax.lax.while_loop`) + latency-aware
+re-ranking (paper §3.4), batched over queries with `vmap`.
+
+Faithful mapping of the paper's search path:
+
+- Traversal touches ONLY the auxiliary index (Elias-Fano slots or raw
+  adjacency) + in-HBM PQ codes — never full-precision vectors. In the paper
+  this is a runtime scheduling decision; here it is a *compile-time program
+  property* (the traversal while_loop simply has no dependence on the vector
+  store).
+- Phase 1 prefetch trigger: once the top-(K+B) heap survives B consecutive
+  expansions unchanged, the top-K candidate set is frozen as the prefetch set
+  (§3.4 "stability"); we record the trigger iteration for the I/O model.
+- Phase 2 re-rank: batches of B exact distances, early-terminated when the
+  *benefit ratio* (fraction of a batch entering the top-K) drops below the
+  threshold (default 0.01).
+
+The uncompressed-adjacency variant exists for the paper's ablation (Exp#1
+"Decouple" / "DecoupleSearch" arms). PQ ADC and EF decode have Pallas TPU
+kernels (`repro.kernels`); here we call their jnp oracles so the same program
+runs on CPU tests and TPU (kernel dispatch switched in `ops.py`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..codec.elias_fano import decode_slot_jnp, slot_layout
+from ..graph.pq import adc_lookup_jnp, build_lut_jnp
+
+
+class DeviceIndex(NamedTuple):
+    """HBM-resident search state (one shard)."""
+    neighbors: jnp.ndarray      # [n, R] int32 (-1 padded) — raw variant
+    counts: jnp.ndarray         # [n] int32
+    ef_slots: jnp.ndarray       # [n, slot_words] uint32 — compressed variant
+    pq_codes: jnp.ndarray       # [n, M] uint8
+    pq_centroids: jnp.ndarray   # [M, K, dsub] f32
+    vectors: jnp.ndarray        # [n, d] full precision (re-rank tier)
+    medoid: jnp.ndarray         # scalar int32
+
+
+class SearchParams(NamedTuple):
+    l_size: int = 64            # candidate list size L
+    beam_width: int = 4         # W
+    k: int = 10                 # result set size K
+    rerank_batch: int = 10      # B (also prefetch stability threshold)
+    benefit_threshold: float = 0.01
+    max_iters: int = 256
+    max_rerank_batches: int = 16
+    use_ef: bool = True         # compressed index traversal
+    r_max: int = 32
+    universe: int = 0           # vector-id universe for EF slots (0 -> n)
+    visited_hash_bits: int = 0  # >0: open-addressing visited set of 2^bits
+                                # slots instead of [n]-bool arrays (§Perf B)
+
+
+class SearchStats(NamedTuple):
+    iters: jnp.ndarray             # traversal rounds (graph I/O batches)
+    lists_fetched: jnp.ndarray     # adjacency lists read from the index tier
+    prefetch_iter: jnp.ndarray     # iteration at which prefetch triggered (-1: never)
+    rerank_batches: jnp.ndarray    # re-rank batches actually executed
+    exact_dists: jnp.ndarray       # full-precision distance computations
+
+
+def _gather_neighbors(index: DeviceIndex, sel_ids: jnp.ndarray,
+                      p: SearchParams, n: int) -> jnp.ndarray:
+    """[W] vertex ids -> [W, r_max] neighbor ids (-1 = invalid)."""
+    valid_sel = sel_ids >= 0
+    safe = jnp.clip(sel_ids, 0, n - 1)
+    if p.use_ef:
+        universe = p.universe or n
+        def dec(slot):
+            vals, cnt = decode_slot_jnp(slot, p.r_max, universe)
+            j = jnp.arange(p.r_max, dtype=jnp.int32)
+            return jnp.where(j < cnt, vals, -1)
+        nbrs = jax.vmap(dec)(index.ef_slots[safe])
+    else:
+        nbrs = index.neighbors[safe]
+    return jnp.where(valid_sel[:, None], nbrs, -1)
+
+
+def _hash_slots(ids, bits: int):
+    h = (ids.astype(jnp.uint32) * jnp.uint32(2654435761))
+    return (h >> jnp.uint32(32 - bits)).astype(jnp.int32)
+
+
+def traverse(index: DeviceIndex, lut: jnp.ndarray, p: SearchParams):
+    """Beam traversal for one query LUT -> (cand_ids[L], cand_d[L], stats).
+
+    Two visited-set representations (§Perf iteration B):
+    - dense [n]-bool arrays (exact; O(n) HBM per query), or
+    - a 2^visited_hash_bits open-addressing fingerprint table plus
+      per-list-slot expansion flags (O(2^bits); a hash eviction can only
+      cause a re-visit — extra work, never a wrong result).
+    """
+    n = index.pq_codes.shape[0]
+    L, W = p.l_size, p.beam_width
+    KB = min(p.k + p.rerank_batch, L)
+    use_hash = p.visited_hash_bits > 0
+
+    entry = index.medoid.astype(jnp.int32)
+    e_d = adc_lookup_jnp(index.pq_codes[entry][None, :], lut)[0]
+    cand_ids = jnp.full((L,), -1, jnp.int32).at[0].set(entry)
+    cand_d = jnp.full((L,), jnp.inf, jnp.float32).at[0].set(e_d)
+    if use_hash:
+        visited = jnp.full((1 << p.visited_hash_bits,), -1, jnp.int32
+                           ).at[_hash_slots(entry, p.visited_hash_bits)].set(entry)
+        expanded = jnp.zeros((L,), jnp.bool_)       # per candidate slot
+    else:
+        visited = jnp.zeros((n,), jnp.bool_).at[entry].set(True)
+        expanded = jnp.zeros((n,), jnp.bool_)
+    prev_top = jnp.full((KB,), -1, jnp.int32)
+    state = (cand_ids, cand_d, visited, expanded,
+             jnp.int32(0),            # iters
+             jnp.int32(0),            # lists fetched
+             jnp.int32(0),            # stability counter
+             jnp.int32(-1),           # prefetch iteration
+             prev_top)
+
+    def _unexpanded(cand_ids, expanded):
+        valid = cand_ids >= 0
+        if use_hash:
+            return valid & ~expanded
+        return valid & ~expanded[jnp.clip(cand_ids, 0, n - 1)]
+
+    def has_frontier(st):
+        cand_ids, cand_d, _, expanded, iters, *_ = st
+        return jnp.any(_unexpanded(cand_ids, expanded)) & (iters < p.max_iters)
+
+    def step(st):
+        cand_ids, cand_d, visited, expanded, iters, fetched, stab, pf_iter, prev_top = st
+        unexp = _unexpanded(cand_ids, expanded)
+        frontier_d = jnp.where(unexp, cand_d, jnp.inf)
+        _, sel_slot = jax.lax.top_k(-frontier_d, W)
+        sel_ids = jnp.where(jnp.isfinite(frontier_d[sel_slot]),
+                            cand_ids[sel_slot], -1)
+        if use_hash:
+            expanded = expanded.at[sel_slot].set(
+                expanded[sel_slot] | (sel_ids >= 0))
+        else:
+            expanded = expanded.at[jnp.where(sel_ids >= 0, sel_ids, n)].set(
+                True, mode="drop")
+        fetched = fetched + jnp.sum(sel_ids >= 0).astype(jnp.int32)
+
+        nbrs = _gather_neighbors(index, sel_ids, p, n).reshape(-1)   # [W*R]
+        # Dedupe within the batch (sort + first-occurrence flag).
+        order = jnp.argsort(nbrs)
+        sorted_n = nbrs[order]
+        first = jnp.concatenate([jnp.array([True]),
+                                 sorted_n[1:] != sorted_n[:-1]])
+        uniq = jnp.where(first, sorted_n, -1)
+        if use_hash:
+            slots = _hash_slots(jnp.maximum(uniq, 0), p.visited_hash_bits)
+            seen = visited[slots] == uniq
+            ok = (uniq >= 0) & ~seen
+            visited = visited.at[jnp.where(ok, slots, 0)].set(
+                jnp.where(ok, uniq, visited[jnp.where(ok, slots, 0)]))
+        else:
+            ok = (uniq >= 0) & ~visited[jnp.clip(uniq, 0, n - 1)]
+            visited = visited.at[jnp.where(ok, uniq, n)].set(True, mode="drop")
+        new_ids = jnp.where(ok, uniq, -1)
+        codes = index.pq_codes[jnp.clip(new_ids, 0, n - 1)]
+        new_d = jnp.where(ok, adc_lookup_jnp(codes, lut), jnp.inf)
+
+        merged_ids = jnp.concatenate([cand_ids, new_ids])
+        merged_d = jnp.concatenate([cand_d, new_d])
+        top_d, top_i = jax.lax.top_k(-merged_d, L)
+        cand_ids, cand_d = merged_ids[top_i], -top_d
+        if use_hash:
+            merged_exp = jnp.concatenate(
+                [expanded, jnp.zeros((new_ids.shape[0],), jnp.bool_)])
+            expanded = merged_exp[top_i]
+
+        # §3.4 stability: top-(K+B) id set unchanged across expansions.
+        top_now = jnp.sort(cand_ids[:KB])
+        same = jnp.all(top_now == prev_top)
+        stab = jnp.where(same, stab + W, 0)
+        trigger = (stab >= p.rerank_batch) & (pf_iter < 0)
+        pf_iter = jnp.where(trigger, iters + 1, pf_iter)
+        return (cand_ids, cand_d, visited, expanded, iters + 1, fetched,
+                stab, pf_iter, top_now)
+
+    st = jax.lax.while_loop(has_frontier, step, state)
+    cand_ids, cand_d, _, _, iters, fetched, _, pf_iter, _ = st
+    return cand_ids, cand_d, (iters, fetched, pf_iter)
+
+
+def rerank(index: DeviceIndex, query: jnp.ndarray, cand_ids: jnp.ndarray,
+           p: SearchParams):
+    """Phase-2 adaptive re-ranking (§3.4) -> (ids[K], dists[K], stats)."""
+    n, K, B = index.vectors.shape[0], p.k, p.rerank_batch
+    # Candidates beyond L don't exist; bound the batch loop statically.
+    max_batches = min(p.max_rerank_batches, max(0, (p.l_size - K) // B))
+
+    def exact(ids):
+        v = index.vectors[jnp.clip(ids, 0, n - 1)].astype(jnp.float32)
+        d = ((v - query[None, :].astype(jnp.float32)) ** 2).sum(-1)
+        return jnp.where(ids >= 0, d, jnp.inf)
+
+    # Batch 0: the prefetched top-K (always re-ranked).
+    heap_ids = cand_ids[:K]
+    heap_d = exact(heap_ids)
+
+    def cond(st):
+        _, _, b, go, _ = st
+        return go & (b < max_batches)
+
+    def body(st):
+        heap_ids, heap_d, b, go, pending_stop = st
+        start = K + b * B
+        ids = jax.lax.dynamic_slice(cand_ids, (start,), (B,))
+        d = exact(ids)
+        m_ids = jnp.concatenate([heap_ids, ids])
+        m_d = jnp.concatenate([heap_d, d])
+        top_d, top_i = jax.lax.top_k(-m_d, K)
+        new_ids, new_d = m_ids[top_i], -top_d
+        displaced = jnp.sum(top_i >= K).astype(jnp.float32)
+        below = displaced / B < p.benefit_threshold
+        # one-batch lookahead (§3.4): the next batch is already in flight
+        # when the benefit test fires, so termination lags one batch.
+        go_next = ~pending_stop | ~below
+        return (new_ids, new_d, b + 1, go_next, below)
+
+    heap_ids, heap_d, batches, _, _ = jax.lax.while_loop(
+        cond, body, (heap_ids, heap_d, jnp.int32(0), jnp.bool_(True),
+                     jnp.bool_(False)))
+    order = jnp.argsort(heap_d)
+    exact_ct = (K + batches * B).astype(jnp.int32)
+    return heap_ids[order], heap_d[order], (batches, exact_ct)
+
+
+def search_one(index: DeviceIndex, query: jnp.ndarray, p: SearchParams):
+    lut = build_lut_jnp(query.astype(jnp.float32), index.pq_centroids)
+    cand_ids, cand_d, (iters, fetched, pf_iter) = traverse(index, lut, p)
+    ids, dists, (batches, exact_ct) = rerank(index, query, cand_ids, p)
+    stats = SearchStats(iters, fetched, pf_iter, batches, exact_ct)
+    return ids, dists, stats
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def search(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
+    """Batched search -> (ids [nq, K], dists [nq, K], stats of [nq] each)."""
+    return jax.vmap(lambda q: search_one(index, q, p))(queries)

@@ -1,0 +1,255 @@
+"""Host-side search engines with block-level I/O accounting.
+
+These mirror the systems compared in the paper's evaluation:
+
+- ``colocated`` + ``pipelined=False``  -> DiskANN   (blocking beam reads)
+- ``colocated`` + ``pipelined=True``   -> PipeANN   (I/O-compute overlap)
+- ``decoupled`` + ``latency_aware=False`` -> "Decouple(Comp)" ablation arms
+- ``decoupled`` + ``latency_aware=True``  -> DecoupleVS (§3.4 search path)
+
+The device (`jax`) engine in ``beam.py`` is the data-plane implementation;
+this host engine is the *I/O model* that produces the paper's
+hardware-independent metrics (graph I/Os, vector I/Os, cache hits, CPU ops)
+plus a documented latency model for QPS-style comparisons:
+
+    round-trip block read  T_IO   = 80 µs   (NVMe 4 KiB random read)
+    PQ distance            T_PQ   = 0.05 µs
+    exact distance         T_EX   = 0.10 µs
+    list/vector decompress T_DEC  = 0.20 µs  (per record, paper Table 3 scale)
+
+Blocking engines pay T_IO per beam round; pipelined engines overlap compute
+with I/O (latency = max(io, cpu) per round + tail); DecoupleVS additionally
+removes vector reads from the traversal critical path (§3.4) so they only
+contribute if re-ranking outlasts traversal.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..graph.pq import PQCodebook, adc_lookup_np, build_lut
+
+T_IO = 80.0
+T_PQ = 0.05
+T_EX = 0.10
+T_DEC = 0.20
+
+
+@dataclass
+class QueryStats:
+    graph_ios: int = 0
+    vector_ios: int = 0
+    cache_hits: int = 0
+    pq_ops: int = 0
+    exact_ops: int = 0
+    decompressions: int = 0
+    traversal_rounds: int = 0
+    io_rounds: int = 0              # rounds with >=1 uncached block read
+    rerank_batches: int = 0
+    latency_us: float = 0.0
+
+
+@dataclass
+class EngineConfig:
+    l_size: int = 100
+    beam_width: int = 4
+    k: int = 10
+    rerank_batch: int = 10          # B
+    benefit_threshold: float = 0.01
+    pipelined: bool = False
+    latency_aware: bool = False     # §3.4 differentiated I/O + prefetch
+    compressed: bool = False        # index/vector decompression accounting
+
+
+class _CandidateList:
+    """Sorted candidate list of bounded size (DiskANN search state)."""
+
+    def __init__(self, l_size: int):
+        self.l = l_size
+        self.items: list[tuple[float, int]] = []   # (dist, id) sorted
+        self.expanded: set[int] = set()
+        self.seen: set[int] = set()
+
+    def push(self, d: float, vid: int) -> None:
+        if vid in self.seen:
+            return
+        self.seen.add(vid)
+        lo, hi = 0, len(self.items)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.items[mid][0] < d:
+                lo = mid + 1
+            else:
+                hi = mid
+        self.items.insert(lo, (d, vid))
+        del self.items[self.l:]
+
+    def next_frontier(self, w: int) -> list[int]:
+        out = []
+        for d, vid in self.items:
+            if vid not in self.expanded:
+                out.append(vid)
+                if len(out) >= w:
+                    break
+        return out
+
+    def top_ids(self, k: int) -> list[int]:
+        return [vid for _, vid in self.items[:k]]
+
+
+def _traverse(store_get_neighbors, pq_codes: np.ndarray, lut: np.ndarray,
+              medoid: int, cfg: EngineConfig, st: QueryStats,
+              colocated_vectors: dict | None = None,
+              store_get_record=None, io=None) -> _CandidateList:
+    cl = _CandidateList(cfg.l_size)
+    d0 = float(adc_lookup_np(pq_codes[medoid][None, :], lut)[0])
+    st.pq_ops += 1
+    cl.push(d0, medoid)
+    stability = 0
+    prefetch_at = -1
+    kb_prev: tuple = ()
+    while True:
+        frontier = cl.next_frontier(cfg.beam_width)
+        if not frontier:
+            break
+        st.traversal_rounds += 1
+        reads_before = io.reads if io is not None else 0
+        for vid in frontier:
+            cl.expanded.add(vid)
+            if store_get_record is not None:             # co-located read
+                vec, nbrs = store_get_record(vid)
+                colocated_vectors[vid] = vec
+            else:
+                nbrs = store_get_neighbors(vid)
+                if cfg.compressed:
+                    st.decompressions += 1
+            new = [v for v in nbrs if v not in cl.seen]
+            if new:
+                nd = adc_lookup_np(pq_codes[np.asarray(new, np.int64)], lut)
+                st.pq_ops += len(new)
+                for v, d in zip(new, nd):
+                    cl.push(float(d), int(v))
+        if io is not None and io.reads > reads_before:
+            st.io_rounds += 1       # this round stalls on at least one read
+        kb_now = tuple(cl.top_ids(cfg.k + cfg.rerank_batch))
+        if kb_now == kb_prev:
+            stability += len(frontier)
+            if stability >= cfg.rerank_batch and prefetch_at < 0:
+                prefetch_at = st.traversal_rounds
+        else:
+            stability = 0
+        kb_prev = kb_now
+    st.prefetch_round = prefetch_at
+    return cl
+
+
+def search_decoupled(index_store, vector_store, pq_codes: np.ndarray,
+                     cb: PQCodebook, query: np.ndarray, cfg: EngineConfig
+                     ) -> tuple[np.ndarray, QueryStats]:
+    """DecoupleVS / Decouple / DecoupleComp search paths."""
+    st = QueryStats()
+    io0 = index_store.io.snapshot()
+    vio0 = vector_store.io.snapshot()
+    h0 = index_store.cache.hits
+    lut = build_lut(query, cb)
+    cl = _traverse(index_store.get_neighbors, pq_codes, lut,
+                   index_store.medoid, cfg, st, io=index_store.io)
+    K, B = cfg.k, cfg.rerank_batch
+    cand = cl.top_ids(cfg.l_size)
+
+    def exact(ids: list[int]) -> np.ndarray:
+        vecs = vector_store.get(np.asarray(ids, np.int64)).astype(np.float32)
+        st.exact_ops += len(ids)
+        if cfg.compressed:
+            st.decompressions += len(ids)
+        return ((vecs - query[None].astype(np.float32)) ** 2).sum(-1)
+
+    if cfg.latency_aware:
+        # Phase 1 prefetched top-K; phase 2 adaptive batches (§3.4).
+        heap = list(zip(exact(cand[:K]).tolist(), cand[:K]))
+        heap.sort()
+        b = 0
+        stop_after = None   # §3.4: next batch is already in flight when the
+        while K + (b + 1) * B <= len(cand):   # benefit test fires (lookahead)
+            ids = cand[K + b * B: K + (b + 1) * B]
+            d = exact(ids)
+            st.rerank_batches += 1
+            displaced = 0
+            for dd, vid in zip(d.tolist(), ids):
+                if dd < heap[-1][0]:
+                    heap.append((dd, vid))
+                    heap.sort()
+                    heap = heap[:K]
+                    displaced += 1
+            b += 1
+            if stop_after is not None and b >= stop_after:
+                break
+            if displaced / B < cfg.benefit_threshold and stop_after is None:
+                stop_after = b + 1
+    else:
+        # Baseline (DiskANN §2.2): re-rank EVERY visited (expanded) vertex
+        # with full-precision vectors, not just the final top of the list.
+        ids = sorted(cl.expanded)
+        d = exact(ids)
+        heap = sorted(zip(d.tolist(), ids))[:K]
+        st.rerank_batches = -(-len(ids) // B)
+
+    io1 = index_store.io.snapshot()
+    vio1 = vector_store.io.snapshot()
+    st.graph_ios = io1["reads"] - io0["reads"]
+    st.vector_ios = vio1["reads"] - vio0["reads"]
+    st.cache_hits = index_store.cache.hits - h0
+    st.latency_us = _latency_decoupled(st, cfg)
+    return np.asarray([vid for _, vid in heap], np.int64), st
+
+
+def search_colocated(store, pq_codes: np.ndarray, cb: PQCodebook,
+                     query: np.ndarray, cfg: EngineConfig
+                     ) -> tuple[np.ndarray, QueryStats]:
+    """DiskANN (blocking) / PipeANN (pipelined) search on co-located layout."""
+    st = QueryStats()
+    io0 = store.io.snapshot()
+    h0 = store.cache.hits
+    lut = build_lut(query, cb)
+    fetched: dict[int, np.ndarray] = {}
+    cl = _traverse(None, pq_codes, lut, store.medoid, cfg, st,
+                   colocated_vectors=fetched, store_get_record=store.get_record,
+                   io=store.io)
+    # Final re-rank over the vectors already co-fetched during traversal.
+    ids = [vid for vid in cl.top_ids(cfg.l_size) if vid in fetched]
+    vecs = np.stack([fetched[i] for i in ids]).astype(np.float32)
+    d = ((vecs - query[None].astype(np.float32)) ** 2).sum(-1)
+    st.exact_ops += len(ids)
+    heap = sorted(zip(d.tolist(), ids))[:cfg.k]
+    io1 = store.io.snapshot()
+    st.graph_ios = io1["reads"] - io0["reads"]
+    st.cache_hits = store.cache.hits - h0
+    st.latency_us = _latency_colocated(st, cfg)
+    return np.asarray([vid for _, vid in heap], np.int64), st
+
+
+def _cpu_us(st: QueryStats) -> float:
+    return st.pq_ops * T_PQ + st.exact_ops * T_EX + st.decompressions * T_DEC
+
+
+def _latency_colocated(st: QueryStats, cfg: EngineConfig) -> float:
+    # W reads per round are issued in parallel; rounds fully served by the
+    # LRU cache do not stall (cache-hit fast path).
+    io = st.io_rounds * T_IO
+    cpu = _cpu_us(st)
+    return max(io, cpu) + min(io, cpu) * 0.1 if cfg.pipelined else io + cpu
+
+
+def _latency_decoupled(st: QueryStats, cfg: EngineConfig) -> float:
+    io = st.io_rounds * T_IO
+    cpu = _cpu_us(st)
+    if cfg.latency_aware:
+        # Vector I/O off the critical path (§3.4): only the final rerank
+        # batches that outlast traversal add latency.
+        tail = max(0, st.rerank_batches - 1) * T_IO * 0.5
+        return max(io, cpu) + min(io, cpu) * 0.1 + tail
+    # Vector reads serialize after traversal (the Exp#1 "Decouple" penalty).
+    vio = st.vector_ios * T_IO / max(1, cfg.beam_width)
+    return max(io, cpu) + min(io, cpu) * 0.1 + vio

@@ -1,0 +1,4 @@
+from . import colocated, index_store, layout, vector_store  # noqa: F401
+from .index_store import CompressedIndexStore, LRUCache, RawIndexStore  # noqa: F401
+from .layout import BLOCK_SIZE  # noqa: F401
+from .vector_store import DecoupledVectorStore, IOStats, StoreConfig  # noqa: F401

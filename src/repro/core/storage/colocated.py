@@ -1,0 +1,68 @@
+"""Co-located DiskANN-style baseline store (paper §2.2, Figure 1).
+
+Each vertex record bundles the full-precision vector with its neighbor list
+(count + R ids), page-aligned: records are fixed size, and the number of
+records per 4 KiB block is ``floor(4096 / record_size)`` — any remainder is
+the internal fragmentation the paper measures (Limitation #1). A single read
+fetches vector + adjacency together (the search-friendly, storage-inefficient
+layout DecoupleVS replaces)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .layout import BLOCK_SIZE
+from .index_store import LRUCache
+from .vector_store import IOStats
+
+
+@dataclass
+class ColocatedStore:
+    vectors: np.ndarray        # [n, d]
+    neighbors: list            # list[np.ndarray]
+    r: int
+    medoid: int
+    io: IOStats = None
+    cache: LRUCache = None
+
+    @classmethod
+    def build(cls, vectors: np.ndarray, adjacency: list, medoid: int, r: int,
+              cache_bytes: int = 0) -> "ColocatedStore":
+        v_bytes = vectors.dtype.itemsize * vectors.shape[1]
+        entry_bytes = v_bytes + 4 * (r + 1)
+        return cls(vectors=vectors,
+                   neighbors=[np.asarray(a, np.int64) for a in adjacency],
+                   r=r, medoid=medoid, io=IOStats(),
+                   cache=LRUCache(cache_bytes // max(1, entry_bytes), entry_bytes))
+
+    @property
+    def record_bytes(self) -> int:
+        v_bytes = self.vectors.dtype.itemsize * self.vectors.shape[1]
+        return v_bytes + 4 * (self.r + 1)
+
+    @property
+    def records_per_block(self) -> int:
+        return max(1, BLOCK_SIZE // self.record_bytes)
+
+    @property
+    def physical_bytes(self) -> int:
+        if self.record_bytes > BLOCK_SIZE:
+            blocks_per_rec = -(-self.record_bytes // BLOCK_SIZE)
+            return len(self.neighbors) * blocks_per_rec * BLOCK_SIZE
+        return -(-len(self.neighbors) // self.records_per_block) * BLOCK_SIZE
+
+    def get_record(self, vid: int) -> tuple[np.ndarray, np.ndarray]:
+        """One I/O returns (vector, neighbor list) — co-located semantics."""
+        cached = self.cache.get(vid)
+        if cached is not None:
+            return cached
+        nblocks = max(1, -(-self.record_bytes // BLOCK_SIZE))
+        self.io.read(nblocks * BLOCK_SIZE, n=nblocks)
+        out = (self.vectors[int(vid)], self.neighbors[int(vid)])
+        self.cache.put(int(vid), out)
+        return out
+
+    def rewrite_all(self) -> None:
+        """Full index rewrite (what FreshDiskANN merges pay on this layout)."""
+        self.io.write(self.physical_bytes)

@@ -1,0 +1,157 @@
+"""Block-based compressed auxiliary-index store (paper §3.3) with the
+fixed-entry LRU cache of §3.4.
+
+Each 4 KiB block holds multiple Elias-Fano-compressed adjacency lists behind
+a block header; a sparse in-memory index maps boundary vertex IDs to block
+offsets (4 B/entry — the paper's ~19.6 MiB @ SIFT100M structure). The LRU
+cache stores *compressed* lists in fixed-size entries sized to the EF
+worst-case bound, so more lists fit than with 32-bit raw lists (≥20.9% at
+R=128, N=1e9 — §3.4).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..codec import elias_fano as ef
+from .layout import BLOCK_SIZE, pack_blocks, locate_block
+from .vector_store import IOStats
+
+
+class LRUCache:
+    """Fixed-entry-size LRU (paper §3.4): capacity in entries, every entry
+    reserves ``entry_bytes`` regardless of the stored list's actual size."""
+
+    def __init__(self, capacity: int, entry_bytes: int):
+        self.capacity = capacity
+        self.entry_bytes = entry_bytes
+        self._d: OrderedDict[int, object] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: int):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: int, value) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    @property
+    def memory_bytes(self) -> int:
+        return len(self._d) * self.entry_bytes
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = 0
+
+
+@dataclass
+class CompressedIndexStore:
+    """EF-compressed adjacency lists in 4 KiB blocks + sparse index."""
+    data: np.ndarray             # physical block image (uint8)
+    n_blocks: int
+    sparse_index: np.ndarray     # [n_blocks] boundary first-id (int64)
+    rec_block: np.ndarray        # [n] block per vertex
+    rec_start: np.ndarray        # [n] absolute byte offset of the EF record
+    rec_len: np.ndarray          # [n] record byte length
+    universe: int
+    r: int
+    medoid: int
+    io: IOStats = None
+    cache: LRUCache = None
+
+    @classmethod
+    def from_graph(cls, adjacency: list, medoid: int, r: int,
+                   universe: int | None = None,
+                   cache_bytes: int = 0) -> "CompressedIndexStore":
+        n = len(adjacency)
+        universe = universe or n
+        records = [ef.encode_record(np.sort(np.asarray(adj, np.uint64)), universe)
+                   for adj in adjacency]
+        pk = pack_blocks(np.arange(n), records, implicit_ids=True)
+        entry_bytes = (ef.worst_case_bits(r, universe) + 7) // 8
+        return cls(data=pk.data, n_blocks=pk.n_blocks,
+                   sparse_index=pk.block_first_id, rec_block=pk.rec_block,
+                   rec_start=pk.rec_start, rec_len=pk.rec_len,
+                   universe=universe, r=r, medoid=medoid, io=IOStats(),
+                   cache=LRUCache(cache_bytes // max(1, entry_bytes), entry_bytes))
+
+    # ------------------------------------------------------------- reads
+    def _decode_record(self, vid: int) -> np.ndarray:
+        s = int(self.rec_start[vid])
+        rec = self.data[s:s + int(self.rec_len[vid])]
+        return ef.decode_record(rec, self.universe).astype(np.int64)
+
+    def get_neighbors(self, vid: int) -> np.ndarray:
+        cached = self.cache.get(vid)
+        if cached is not None:
+            return cached
+        self.io.read(BLOCK_SIZE)                 # one block read
+        out = self._decode_record(int(vid))
+        self.cache.put(int(vid), out)
+        return out
+
+    # ------------------------------------------------------------- sizes
+    @property
+    def physical_bytes(self) -> int:
+        return self.n_blocks * BLOCK_SIZE
+
+    @property
+    def sparse_index_bytes(self) -> int:
+        return 4 * self.n_blocks                  # 4 B/entry (§3.3)
+
+    @classmethod
+    def sparse_index_worst_case_bytes(cls, n: int, r: int) -> int:
+        bits = ef.worst_case_bits(r, n)
+        return -(-n * bits // 8192)               # paper formula (§3.3)
+
+
+@dataclass
+class RawIndexStore:
+    """Uncompressed decoupled adjacency store ("Decouple" ablation arm):
+    fixed-size records (count + R ids), direct offset by vertex ID."""
+    neighbors: list
+    r: int
+    medoid: int
+    io: IOStats = None
+    cache: LRUCache = None
+
+    @classmethod
+    def from_graph(cls, adjacency: list, medoid: int, r: int,
+                   cache_bytes: int = 0) -> "RawIndexStore":
+        entry_bytes = 4 * (r + 1)
+        return cls(neighbors=[np.asarray(a, np.int64) for a in adjacency],
+                   r=r, medoid=medoid, io=IOStats(),
+                   cache=LRUCache(cache_bytes // max(1, entry_bytes), entry_bytes))
+
+    def get_neighbors(self, vid: int) -> np.ndarray:
+        cached = self.cache.get(vid)
+        if cached is not None:
+            return cached
+        self.io.read(BLOCK_SIZE)
+        out = self.neighbors[int(vid)]
+        self.cache.put(int(vid), out)
+        return out
+
+    @property
+    def record_bytes(self) -> int:
+        return 4 * (self.r + 1)
+
+    @property
+    def physical_bytes(self) -> int:
+        # fixed-size records packed into blocks (no spanning)
+        per_block = BLOCK_SIZE // self.record_bytes
+        if per_block == 0:
+            per_blk_blocks = -(-self.record_bytes // BLOCK_SIZE)
+            return len(self.neighbors) * per_blk_blocks * BLOCK_SIZE
+        return -(-len(self.neighbors) // per_block) * BLOCK_SIZE

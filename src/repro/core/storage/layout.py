@@ -1,0 +1,124 @@
+"""Hierarchical layout arithmetic + 4 KiB block packing (paper §3.3).
+
+The paper's closed forms, implemented exactly:
+
+- chunk-metadata overhead ratio  β = (V + 12)/C + α/1024
+- chunk size from a user budget  C = (V + 12)/(β − α/1024)
+- per-chunk metadata bytes       4·(αC/4096 + 3) + V
+- EF worst case                  2R + R·ceil(log2(N/R)) bits
+- sparse index worst case        ceil(N·EF_bits / 8192) bytes
+
+Blocks are the minimum I/O unit (4 KiB). A block holds whole records
+(records never span blocks → the internal fragmentation the paper measures)
+preceded by a block header: u16 count + per-record (u32 id, u16 offset).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+BLOCK_SIZE = 4096
+_HDR_FIXED = 2            # u16 record count
+_HDR_PER_REC = 6          # u32 id + u16 byte offset
+
+
+def beta_for_chunk(c_bytes: int, v_bytes: int, alpha: float = 1.0) -> float:
+    """β = (V+12)/C + α/1024 (paper §3.3)."""
+    return (v_bytes + 12) / c_bytes + alpha / 1024.0
+
+
+def chunk_size_for_beta(beta: float, v_bytes: int, alpha: float = 1.0) -> int:
+    """Solve β for C. With unknown α, α=1 is the conservative bound."""
+    denom = beta - alpha / 1024.0
+    if denom <= 0:
+        raise ValueError(f"beta {beta} infeasible for alpha {alpha} "
+                         f"(needs beta > alpha/1024)")
+    return int(round((v_bytes + 12) / denom))
+
+
+def chunk_metadata_bytes(c_bytes: int, v_bytes: int, alpha: float = 1.0) -> int:
+    """4*(αC/4096 + 3) + V bytes per chunk (paper §3.3)."""
+    return int(4 * (alpha * c_bytes / BLOCK_SIZE + 3) + v_bytes)
+
+
+@dataclass
+class PackedBlocks:
+    """Records packed into 4 KiB blocks (one physical byte image)."""
+    data: np.ndarray          # uint8 [n_blocks * BLOCK_SIZE]
+    n_blocks: int
+    rec_block: np.ndarray     # [m] int32 block index per record
+    rec_start: np.ndarray     # [m] int64 absolute payload offset in `data`
+    rec_len: np.ndarray       # [m] int32
+    block_first_id: np.ndarray  # [n_blocks] int64 (boundary ids, §3.3)
+
+    @property
+    def physical_bytes(self) -> int:
+        return self.n_blocks * BLOCK_SIZE
+
+    def record_bytes(self, i: int) -> np.ndarray:
+        s = int(self.rec_start[i])
+        return self.data[s:s + int(self.rec_len[i])]
+
+
+def pack_blocks(ids: np.ndarray, records: list[bytes | np.ndarray],
+                implicit_ids: bool = False) -> PackedBlocks:
+    """Greedy first-fit packing of (id-ordered) variable-size records.
+
+    ``implicit_ids=True`` is the auxiliary-index layout (§3.3): vertex IDs
+    are dense/consecutive, so the block header stores only the first id +
+    u16 record offsets (the per-record u32 id column is elided).
+    """
+    m = len(records)
+    ids = np.asarray(ids, dtype=np.int64)
+    per_rec = 2 if implicit_ids else _HDR_PER_REC
+    hdr_fixed = (_HDR_FIXED + 4) if implicit_ids else _HDR_FIXED
+    lens = np.array([len(r) for r in records], dtype=np.int64)
+    if np.any(lens + hdr_fixed + per_rec > BLOCK_SIZE):
+        raise ValueError("record larger than a block")
+    rec_block = np.zeros(m, np.int32)
+    blocks: list[list[int]] = []
+    used = BLOCK_SIZE + 1  # force new block at first record
+    for i in range(m):
+        need = per_rec + int(lens[i])
+        if used + need > BLOCK_SIZE:
+            blocks.append([])
+            used = hdr_fixed
+        blocks[-1].append(i)
+        used += need
+        rec_block[i] = len(blocks) - 1
+    n_blocks = len(blocks)
+    data = np.zeros(n_blocks * BLOCK_SIZE, dtype=np.uint8)
+    rec_start = np.zeros(m, np.int64)
+    block_first_id = np.zeros(n_blocks, np.int64)
+    for b, members in enumerate(blocks):
+        base = b * BLOCK_SIZE
+        cnt = len(members)
+        data[base:base + 2] = np.frombuffer(
+            np.uint16(cnt).tobytes(), dtype=np.uint8)
+        if implicit_ids:
+            data[base + 2:base + 6] = np.frombuffer(
+                np.uint32(ids[members[0]]).tobytes(), np.uint8)
+        off = hdr_fixed + cnt * per_rec
+        block_first_id[b] = ids[members[0]]
+        for j, i in enumerate(members):
+            h = base + hdr_fixed + j * per_rec
+            if not implicit_ids:
+                data[h:h + 4] = np.frombuffer(np.uint32(ids[i]).tobytes(), np.uint8)
+                data[h + 4:h + 6] = np.frombuffer(np.uint16(off).tobytes(), np.uint8)
+            else:
+                data[h:h + 2] = np.frombuffer(np.uint16(off).tobytes(), np.uint8)
+            rec = np.frombuffer(bytes(records[i]), dtype=np.uint8) \
+                if not isinstance(records[i], np.ndarray) else records[i]
+            data[base + off:base + off + len(rec)] = rec
+            rec_start[i] = base + off
+            off += len(rec)
+    return PackedBlocks(data=data, n_blocks=n_blocks, rec_block=rec_block,
+                        rec_start=rec_start, rec_len=lens.astype(np.int32),
+                        block_first_id=block_first_id)
+
+
+def locate_block(block_first_id: np.ndarray, vector_id: int) -> int:
+    """Sparse-index lookup: boundary ids -> block index (§3.3)."""
+    b = int(np.searchsorted(block_first_id, vector_id, side="right")) - 1
+    return max(b, 0)

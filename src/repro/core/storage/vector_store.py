@@ -1,0 +1,348 @@
+"""Decoupled, log-structured, compressed vector data store (paper §3.3, §3.5).
+
+Segment -> chunk -> 4 KiB block hierarchy:
+
+- A *mutable* segment accepts log-structured appends. At capacity it is
+  *sealed*: each chunk (C uncompressed bytes) takes the two-stage compression
+  decision (sampled-entropy XOR-delta test, then a single per-segment Huffman
+  table over the transformed bytes), and records are packed into blocks.
+- Chunk metadata (block offsets/counts, block boundary ids, base vector) and
+  the per-segment frequency table are the in-memory compression metadata whose
+  footprint the β parameter bounds.
+- Deletions mark records stale; GC (§3.5) greedily rewrites the highest
+  garbage-ratio segments, copying live records into fresh mutable segments and
+  atomically switching the id→location mapping.
+
+I/O accounting models the paper's storage layer: every block touched is a
+4 KiB read; appends and GC copies are logged writes. These counters drive the
+Exp#2/5/6/7 benchmarks (hardware-independent I/O units).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..codec import huffman, xor_delta
+from .layout import (BLOCK_SIZE, PackedBlocks, beta_for_chunk,
+                     chunk_metadata_bytes, chunk_size_for_beta, pack_blocks)
+
+
+@dataclass
+class IOStats:
+    reads: int = 0
+    read_bytes: int = 0
+    writes: int = 0
+    write_bytes: int = 0
+
+    def read(self, nbytes: int, n: int = 1) -> None:
+        self.reads += n
+        self.read_bytes += nbytes
+
+    def write(self, nbytes: int, n: int = 1) -> None:
+        self.writes += n
+        self.write_bytes += nbytes
+
+    def snapshot(self) -> dict:
+        return dict(reads=self.reads, read_bytes=self.read_bytes,
+                    writes=self.writes, write_bytes=self.write_bytes)
+
+
+@dataclass
+class ChunkMeta:
+    first_block: int
+    n_blocks: int
+    boundary_ids: np.ndarray     # first id of each block in this chunk
+    base: np.ndarray | None      # XOR base (None -> delta not applied)
+
+    @property
+    def meta_bytes(self) -> int:
+        # offset(4) + n_blocks(4) + 4 per boundary id + base vector V bytes
+        return 8 + 4 * len(self.boundary_ids) + (len(self.base) if self.base is not None else 0)
+
+
+@dataclass
+class SealedSegment:
+    ids: np.ndarray              # [m] sorted int64
+    packed: PackedBlocks         # physical block image
+    chunks: list[ChunkMeta]
+    huff: huffman.HuffmanTable | None   # None -> stored uncompressed
+    v_bytes: int
+    dtype: np.dtype
+    dim: int
+    stale: np.ndarray = field(default=None)  # [m] bool
+
+    def __post_init__(self):
+        if self.stale is None:
+            self.stale = np.zeros(len(self.ids), dtype=bool)
+
+    @property
+    def physical_bytes(self) -> int:
+        return self.packed.physical_bytes
+
+    @property
+    def metadata_bytes(self) -> int:
+        t = sum(c.meta_bytes for c in self.chunks)
+        if self.huff is not None:
+            t += self.huff.size_bytes
+        return t
+
+    @property
+    def garbage_ratio(self) -> float:
+        return float(self.stale.mean()) if len(self.ids) else 0.0
+
+    def rows_of(self, ids: np.ndarray) -> np.ndarray:
+        rows = np.searchsorted(self.ids, ids)
+        ok = (rows < len(self.ids)) & (self.ids[np.minimum(rows, len(self.ids) - 1)] == ids)
+        if not np.all(ok):
+            raise KeyError(f"ids not in segment: {np.asarray(ids)[~ok][:5]}")
+        return rows
+
+    def decode_rows(self, rows: np.ndarray, io: IOStats | None = None) -> np.ndarray:
+        """Fetch + decompress records -> [k, dim] original dtype."""
+        rows = np.asarray(rows, dtype=np.int64)
+        if io is not None:
+            nblk = len(np.unique(self.packed.rec_block[rows]))
+            io.read(nblk * BLOCK_SIZE, n=nblk)
+        if self.huff is None:
+            raw = np.stack([self.packed.record_bytes(int(r)) for r in rows]) \
+                if len(rows) else np.zeros((0, self.v_bytes), np.uint8)
+        else:
+            raw = huffman.decode_at(self.packed.data,
+                                    self.packed.rec_start[rows],
+                                    self.v_bytes, self.huff)
+        rows_per_chunk = self._rows_per_chunk
+        for ci, cm in enumerate(self.chunks):
+            if cm.base is None:
+                continue
+            lo, hi = ci * rows_per_chunk, (ci + 1) * rows_per_chunk
+            m = (rows >= lo) & (rows < hi)
+            if m.any():
+                raw[m] = xor_delta.apply_delta(raw[m], cm.base)
+        return raw.view(self.dtype).reshape(len(rows), self.dim)
+
+    @property
+    def _rows_per_chunk(self) -> int:
+        return getattr(self, "_rpc", len(self.ids))
+
+
+@dataclass
+class MutableSegment:
+    capacity: int
+    v_bytes: int
+    dtype: np.dtype
+    dim: int
+    ids: list = field(default_factory=list)
+    rows: list = field(default_factory=list)
+    stale_set: set = field(default_factory=set)
+
+    def append(self, ids: np.ndarray, vecs: np.ndarray) -> int:
+        room = self.capacity - len(self.ids)
+        take = min(room, len(ids))
+        self.ids.extend(int(i) for i in ids[:take])
+        self.rows.extend(np.ascontiguousarray(v) for v in vecs[:take])
+        return take
+
+    @property
+    def full(self) -> bool:
+        return len(self.ids) >= self.capacity
+
+    def get(self, id_: int) -> np.ndarray:
+        return self.rows[self.ids.index(id_)]
+
+
+@dataclass
+class StoreConfig:
+    dim: int
+    dtype: np.dtype
+    segment_capacity: int = 4096        # vectors per segment (512 MiB / V in prod)
+    chunk_bytes: int = 4 << 20          # C (4 MiB paper default)
+    beta: float | None = None           # if set, derive C from β (§3.3)
+    compress: bool = True               # False -> "Decouple" ablation arm
+
+    @property
+    def v_bytes(self) -> int:
+        return int(np.dtype(self.dtype).itemsize * self.dim)
+
+    @property
+    def chunk_vectors(self) -> int:
+        c = self.chunk_bytes if self.beta is None else \
+            chunk_size_for_beta(self.beta, self.v_bytes)
+        return max(1, c // self.v_bytes)
+
+
+class DecoupledVectorStore:
+    """Log-structured compressed vector data tier (paper §3.3 + §3.5)."""
+
+    def __init__(self, config: StoreConfig):
+        self.cfg = config
+        self.io = IOStats()
+        self.sealed: dict[int, SealedSegment] = {}
+        self._next_seg = 0
+        self.active = self._new_mutable()
+        self.loc: dict[int, tuple[int, int]] = {}   # id -> (segment, row); -1 = active
+        self.compress_count = 0
+
+    # ------------------------------------------------------------- writes
+    def _new_mutable(self) -> MutableSegment:
+        return MutableSegment(capacity=self.cfg.segment_capacity,
+                              v_bytes=self.cfg.v_bytes,
+                              dtype=np.dtype(self.cfg.dtype), dim=self.cfg.dim)
+
+    def append(self, ids: np.ndarray, vecs: np.ndarray) -> None:
+        ids = np.asarray(ids, dtype=np.int64)
+        vecs = np.asarray(vecs, dtype=self.cfg.dtype)
+        while len(ids):
+            take = self.active.append(ids, vecs)
+            self.io.write(take * self.cfg.v_bytes)   # log-structured append
+            if self.active.full:
+                self.seal_active()
+            ids, vecs = ids[take:], vecs[take:]
+        # Active-segment locations (rows never move until seal).
+        for j, i in enumerate(self.active.ids):
+            self.loc[int(i)] = (-1, j)
+
+    def seal_active(self) -> None:
+        seg = self.active
+        if not seg.ids:
+            return
+        order = np.argsort(np.asarray(seg.ids, dtype=np.int64))
+        ids = np.asarray(seg.ids, dtype=np.int64)[order]
+        mat = np.stack([seg.rows[i] for i in order])
+        sealed = self._seal(ids, mat)
+        sid = self._next_seg
+        self._next_seg += 1
+        self.sealed[sid] = sealed
+        rows = np.arange(len(ids))
+        for i, r in zip(ids, rows):
+            self.loc[int(i)] = (sid, int(r))
+        for i in seg.stale_set:
+            row = int(np.searchsorted(ids, i))
+            if row < len(ids) and ids[row] == i:
+                sealed.stale[row] = True
+        self.io.write(sealed.physical_bytes)   # background compression write
+        self.active = self._new_mutable()
+
+    def _seal(self, ids: np.ndarray, mat: np.ndarray) -> SealedSegment:
+        vb = xor_delta.as_bytes(mat)
+        m = len(ids)
+        rpc = self.cfg.chunk_vectors
+        chunk_slices = [(s, min(s + rpc, m)) for s in range(0, m, rpc)]
+        if self.cfg.compress:
+            # Stage 1: per-chunk delta decision (sampled entropy test, §3.3).
+            transformed = vb.copy()
+            bases: list[np.ndarray | None] = []
+            for lo, hi in chunk_slices:
+                use, base = xor_delta.delta_wins(vb[lo:hi])
+                if use:
+                    transformed[lo:hi] = xor_delta.apply_delta(vb[lo:hi], base)
+                    bases.append(base)
+                else:
+                    bases.append(None)
+            # Stage 2: unified per-segment frequency table + encode.
+            table = huffman.HuffmanTable.from_data(transformed)
+            payload, offsets = huffman.encode_records(transformed, table)
+            records = [payload[offsets[i]:offsets[i + 1]] for i in range(m)]
+            self.compress_count += m
+        else:
+            table, bases = None, [None] * len(chunk_slices)
+            records = [vb[i] for i in range(m)]
+        # Pack per chunk so blocks never span chunks (Fig. 4).
+        chunk_packs, chunks = [], []
+        first_block = 0
+        for ci, (lo, hi) in enumerate(chunk_slices):
+            pk = pack_blocks(ids[lo:hi], records[lo:hi])
+            chunks.append(ChunkMeta(first_block=first_block, n_blocks=pk.n_blocks,
+                                    boundary_ids=pk.block_first_id,
+                                    base=bases[ci]))
+            chunk_packs.append(pk)
+            first_block += pk.n_blocks
+        data = np.concatenate([pk.data for pk in chunk_packs]) if chunk_packs \
+            else np.zeros(0, np.uint8)
+        rec_block = np.concatenate(
+            [pk.rec_block + cm.first_block for pk, cm in zip(chunk_packs, chunks)]) \
+            if chunk_packs else np.zeros(0, np.int32)
+        base_off = np.cumsum([0] + [pk.physical_bytes for pk in chunk_packs[:-1]]) \
+            if chunk_packs else np.zeros(1, np.int64)
+        rec_start = np.concatenate(
+            [pk.rec_start + off for pk, off in zip(chunk_packs, base_off)]) \
+            if chunk_packs else np.zeros(0, np.int64)
+        rec_len = np.concatenate([pk.rec_len for pk in chunk_packs]) \
+            if chunk_packs else np.zeros(0, np.int32)
+        merged = PackedBlocks(data=data, n_blocks=first_block,
+                              rec_block=rec_block.astype(np.int32),
+                              rec_start=rec_start.astype(np.int64),
+                              rec_len=rec_len.astype(np.int32),
+                              block_first_id=np.concatenate(
+                                  [pk.block_first_id for pk in chunk_packs])
+                              if chunk_packs else np.zeros(0, np.int64))
+        seg = SealedSegment(ids=ids, packed=merged, chunks=chunks, huff=table,
+                            v_bytes=self.cfg.v_bytes,
+                            dtype=np.dtype(self.cfg.dtype), dim=self.cfg.dim)
+        seg._rpc = rpc
+        return seg
+
+    # ------------------------------------------------------------- reads
+    def get(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, dtype=np.int64)
+        out = np.zeros((len(ids), self.cfg.dim), dtype=self.cfg.dtype)
+        by_seg: dict[int, list[int]] = {}
+        for pos, i in enumerate(ids):
+            sid, row = self.loc[int(i)]
+            by_seg.setdefault(sid, []).append(pos)
+        for sid, poss in by_seg.items():
+            if sid == -1:
+                for pos in poss:
+                    out[pos] = self.active.get(int(ids[pos]))
+                continue
+            seg = self.sealed[sid]
+            rows = seg.rows_of(ids[poss])
+            out[np.asarray(poss)] = seg.decode_rows(rows, io=self.io)
+        return out
+
+    # ------------------------------------------------------------- updates
+    def mark_stale(self, ids: np.ndarray) -> None:
+        for i in np.asarray(ids, dtype=np.int64):
+            sid, row = self.loc.pop(int(i), (None, None))
+            if sid is None:
+                continue
+            if sid == -1:
+                self.active.stale_set.add(int(i))
+            else:
+                self.sealed[sid].stale[row] = True
+
+    def gc(self, threshold: float = 0.3) -> int:
+        """Greedy GC by garbage ratio (§3.5). Returns segments reclaimed."""
+        victims = sorted((s for s in self.sealed.items()
+                          if s[1].garbage_ratio > threshold),
+                         key=lambda s: -s[1].garbage_ratio)
+        n = 0
+        for sid, seg in victims:
+            live = ~seg.stale
+            if live.any():
+                rows = np.flatnonzero(live)
+                vecs = seg.decode_rows(rows, io=self.io)      # GC read I/O
+                self.append(seg.ids[rows], vecs)              # copy-forward
+            # Atomic switch: old segment released only now (§3.5 consistency).
+            del self.sealed[sid]
+            n += 1
+        return n
+
+    # ------------------------------------------------------------- sizes
+    @property
+    def logical_bytes(self) -> int:
+        m = sum(len(s.ids) for s in self.sealed.values()) + len(self.active.ids)
+        return m * self.cfg.v_bytes
+
+    @property
+    def physical_bytes(self) -> int:
+        t = sum(s.physical_bytes for s in self.sealed.values())
+        return t + len(self.active.ids) * self.cfg.v_bytes
+
+    @property
+    def metadata_bytes(self) -> int:
+        return sum(s.metadata_bytes for s in self.sealed.values())
+
+    def beta_actual(self) -> float:
+        lb = self.logical_bytes
+        return self.metadata_bytes / lb if lb else 0.0

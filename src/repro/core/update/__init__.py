@@ -1,0 +1,3 @@
+from . import consistency, fresh  # noqa: F401
+from .consistency import Snapshot, SnapshotHandle  # noqa: F401
+from .fresh import StreamingIndex, UpdateConfig  # noqa: F401

@@ -1,0 +1,55 @@
+"""Batch-visible consistency model (paper §3.5).
+
+Searches run against an immutable *snapshot* (index store + vector store +
+tombstone set). A merge builds the next snapshot in the background and
+publishes it atomically; in-flight queries keep referencing the old snapshot
+(Python object lifetime models the paper's "stale segments released only
+after in-flight queries finalize"). Newly deleted vectors are filtered by the
+tombstone set even before their on-disk references are removed, so they are
+never returned mid-batch.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    version: int
+    index_store: object
+    vector_store: object
+    pq_codes: object
+    tombstones: frozenset = frozenset()
+    mem_rows: dict = field(default_factory=dict)   # buffered inserts id->vec
+
+
+class SnapshotHandle:
+    """Atomic snapshot publication point."""
+
+    def __init__(self, initial: Snapshot):
+        self._lock = threading.Lock()
+        self._snap = initial
+
+    def current(self) -> Snapshot:
+        with self._lock:
+            return self._snap
+
+    def publish(self, snap: Snapshot) -> None:
+        with self._lock:
+            if snap.version <= self._snap.version:
+                raise ValueError("snapshot versions must increase")
+            self._snap = snap
+
+    def with_tombstones(self, ids) -> None:
+        """Deletions become visible immediately (batch-visible reads)."""
+        with self._lock:
+            self._snap = replace(self._snap,
+                                 tombstones=self._snap.tombstones | frozenset(int(i) for i in ids),
+                                 version=self._snap.version)
+
+    def with_mem_rows(self, rows: dict) -> None:
+        with self._lock:
+            merged = dict(self._snap.mem_rows)
+            merged.update(rows)
+            self._snap = replace(self._snap, mem_rows=merged)

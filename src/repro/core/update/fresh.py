@@ -1,0 +1,229 @@
+"""Decoupled streaming updates (paper §3.5): FreshDiskANN-style batch merges
+for the auxiliary index + log-structured appends & GC for vector data.
+
+The asymmetric treatment is the paper's point:
+
+- the graph is globally interconnected -> buffered deletes/inserts are merged
+  in batches with robust-prune repair (full index-store rewrite per merge,
+  like FreshDiskANN — but the *compressed* index is much smaller to write);
+- vector data has no inter-record dependencies -> inserts append to the
+  active mutable segment at insert time, deletes only mark staleness, and a
+  background GC pass (greedy by garbage ratio) reclaims space without
+  rewriting the whole store.
+
+Write-amplification accounting: merge I/O = new index-store bytes (+ the GC
+copy traffic), vs. the co-located baseline which must rewrite vectors AND
+index together.
+
+ID contract: vertex ids are *dense* (id == graph array position), exactly as
+in DiskANN, where the disk offset is computed from the id. Fresh inserts must
+therefore allocate the next dense ids; production deployments put an
+id-allocator in front (the paper's "ID-to-location mapping within each
+segment group" plays this role for the vector tier).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..graph.pq import PQCodebook, encode_pq
+from ..graph.vamana import robust_prune
+from ..storage.index_store import CompressedIndexStore
+from ..storage.vector_store import DecoupledVectorStore
+from .consistency import Snapshot, SnapshotHandle
+
+
+@dataclass
+class UpdateConfig:
+    r: int = 32
+    l_build: int = 64
+    alpha: float = 1.2
+    merge_threshold: int = 256        # buffered inserts triggering a merge
+    gc_threshold: float = 0.25
+    cache_bytes: int = 0
+
+
+class StreamingIndex:
+    """DecoupleVS update path over (CompressedIndexStore, DecoupledVectorStore)."""
+
+    def __init__(self, adjacency: list, medoid: int,
+                 vector_store: DecoupledVectorStore, pq_codes: np.ndarray,
+                 codebook: PQCodebook, cfg: UpdateConfig):
+        self.adjacency = [np.asarray(a, np.int64) for a in adjacency]
+        self.medoid = medoid
+        self.vector_store = vector_store
+        self.pq_codes = pq_codes
+        self.cb = codebook
+        self.cfg = cfg
+        self.insert_buffer: dict[int, np.ndarray] = {}
+        self.delete_buffer: set[int] = set()
+        self.merges = 0
+        store = self._build_index_store()
+        self.handle = SnapshotHandle(Snapshot(
+            version=0, index_store=store, vector_store=vector_store,
+            pq_codes=pq_codes))
+
+    # ------------------------------------------------------------- helpers
+    def _build_index_store(self) -> CompressedIndexStore:
+        return CompressedIndexStore.from_graph(
+            self.adjacency, self.medoid, self.cfg.r,
+            universe=max(len(self.adjacency), self._max_id() + 1),
+            cache_bytes=self.cfg.cache_bytes)
+
+    def _max_id(self) -> int:
+        return max(self.vector_store.loc.keys(), default=len(self.adjacency) - 1)
+
+    def _vec(self, vid: int) -> np.ndarray:
+        if vid in self.insert_buffer:
+            return self.insert_buffer[vid]
+        return self.vector_store.get(np.asarray([vid]))[0]
+
+    def _vecs(self, ids: np.ndarray) -> np.ndarray:
+        return self.vector_store.get(np.asarray(ids, np.int64)).astype(np.float32)
+
+    # ------------------------------------------------------------- updates
+    def insert(self, ids: np.ndarray, vecs: np.ndarray) -> None:
+        vecs = np.asarray(vecs, np.float32)
+        # Vector data path: append to the active segment NOW (§3.5).
+        self.vector_store.append(ids, vecs)
+        rows = {}
+        for i, v in zip(ids, vecs):
+            self.insert_buffer[int(i)] = v
+            rows[int(i)] = v
+        self.handle.with_mem_rows(rows)
+        if len(self.insert_buffer) >= self.cfg.merge_threshold:
+            self.merge()
+
+    def delete(self, ids: np.ndarray) -> None:
+        ids = [int(i) for i in np.asarray(ids).reshape(-1)]
+        self.delete_buffer.update(ids)
+        self.handle.with_tombstones(ids)   # batch-visible immediately
+
+    # ------------------------------------------------------------- merge
+    def merge(self) -> None:
+        """Batch merge: delete-repair + insert + store rebuild + GC + publish."""
+        D = {d for d in self.delete_buffer if d < len(self.adjacency)}
+        # 1. Delete consolidation (FreshDiskANN): patch every vertex whose
+        #    list touches D with its deleted neighbors' neighbors.
+        if D:
+            live_vec_cache: dict[int, np.ndarray] = {}
+            def vec(v):
+                if v not in live_vec_cache:
+                    live_vec_cache[v] = self._vec(v)
+                return live_vec_cache[v]
+            for p in range(len(self.adjacency)):
+                if p in D:
+                    continue
+                nbrs = self.adjacency[p]
+                hit = [v for v in nbrs if v in D]
+                if not hit:
+                    continue
+                keep = [v for v in nbrs if v not in D]
+                pulled = {w for d in hit for w in self.adjacency[d]
+                          if w not in D and w != p}
+                cand = np.asarray(sorted(set(keep) | pulled), np.int64)
+                if len(cand) > self.cfg.r:
+                    vmat = np.stack([vec(int(c)) for c in cand] + [vec(p)])
+                    local = robust_prune(len(cand), np.arange(len(cand)),
+                                         vmat, self.cfg.alpha, self.cfg.r)
+                    cand = cand[local]
+                self.adjacency[p] = cand
+            for d in D:
+                self.adjacency[d] = np.zeros(0, np.int64)
+
+        # 2. Insert buffered points with greedy search + robust prune.
+        for vid, v in sorted(self.insert_buffer.items()):
+            visited = self._greedy_visit(v)
+            if vid < len(self.adjacency):
+                pass  # id reuse not supported; ids are fresh by contract
+            while len(self.adjacency) <= vid:
+                self.adjacency.append(np.zeros(0, np.int64))
+            cand_ids = np.asarray(visited, np.int64)
+            vmat = np.concatenate([self._vecs(cand_ids), v[None]]) \
+                if len(cand_ids) else v[None]
+            local = robust_prune(len(cand_ids), np.arange(len(cand_ids)),
+                                 vmat, self.cfg.alpha, self.cfg.r)
+            self.adjacency[vid] = cand_ids[local]
+            for q in self.adjacency[vid]:
+                q = int(q)
+                if vid not in self.adjacency[q]:
+                    merged = np.append(self.adjacency[q], vid)
+                    if len(merged) > self.cfg.r:
+                        qv = np.concatenate([self._vecs(merged), self._vec(q)[None]])
+                        keep = robust_prune(len(merged), np.arange(len(merged)),
+                                            qv, self.cfg.alpha, self.cfg.r)
+                        merged = merged[keep]
+                    self.adjacency[q] = merged
+            # PQ code for steering future traversals.
+            code = encode_pq(v[None], self.cb)[0]
+            if vid >= len(self.pq_codes):
+                grow = np.zeros((vid + 1 - len(self.pq_codes),
+                                 self.pq_codes.shape[1]), np.uint8)
+                self.pq_codes = np.concatenate([self.pq_codes, grow])
+            self.pq_codes[vid] = code
+
+        # 3. Vector-data path: tombstones -> stale marks, then GC (§3.5).
+        self.vector_store.mark_stale(np.asarray(sorted(D), np.int64))
+        self.vector_store.seal_active()
+        self.vector_store.gc(self.cfg.gc_threshold)
+
+        # 4. Rebuild the compressed index store (merge write I/O) + publish.
+        if self.medoid in D:
+            alive = [i for i, a in enumerate(self.adjacency)
+                     if len(a) and i not in D]
+            self.medoid = alive[0] if alive else 0
+        store = self._build_index_store()
+        store.io.write(store.physical_bytes)
+        old = self.handle.current()
+        self.handle.publish(Snapshot(
+            version=old.version + 1, index_store=store,
+            vector_store=self.vector_store, pq_codes=self.pq_codes,
+            tombstones=frozenset(), mem_rows={}))
+        self.insert_buffer.clear()
+        self.delete_buffer.clear()
+        self.merges += 1
+
+    def _greedy_visit(self, query: np.ndarray, l_size: int | None = None) -> list[int]:
+        """Greedy search over current adjacency using store-resident vectors."""
+        l_size = l_size or self.cfg.l_build
+        tomb = self.delete_buffer
+        entry = self.medoid
+        def dist(ids):
+            return ((self._vecs(np.asarray(ids, np.int64)) - query[None]) ** 2).sum(-1)
+        cand = {entry: float(dist([entry])[0])}
+        expanded: set[int] = set()
+        visited: list[int] = []
+        while True:
+            frontier = [(d, v) for v, d in cand.items() if v not in expanded]
+            if not frontier:
+                break
+            _, best = min(frontier)
+            expanded.add(best)
+            if best not in tomb:
+                visited.append(best)
+            nbrs = [int(x) for x in self.adjacency[best] if int(x) not in cand]
+            if nbrs:
+                for v, d in zip(nbrs, dist(nbrs)):
+                    cand[v] = float(d)
+            if len(cand) > l_size:
+                keep = sorted(cand.items(), key=lambda kv: kv[1])[:l_size]
+                cand = dict(keep)
+        return visited
+
+    # ------------------------------------------------------------- search
+    def search(self, query: np.ndarray, k: int = 10, l_size: int = 64
+               ) -> np.ndarray:
+        """Snapshot search honouring tombstones + buffered inserts (§3.5)."""
+        snap = self.handle.current()
+        query = np.asarray(query, np.float32)
+        visited = self._greedy_visit(query, l_size=l_size)
+        ids = [v for v in visited if v not in snap.tombstones]
+        d = ((self._vecs(np.asarray(ids, np.int64)) - query[None]) ** 2).sum(-1) \
+            if ids else np.zeros(0)
+        pool = list(zip(d.tolist(), ids))
+        for vid, vec in snap.mem_rows.items():
+            if vid not in snap.tombstones and vid not in set(ids):
+                pool.append((float(((vec - query) ** 2).sum()), vid))
+        pool.sort()
+        return np.asarray([vid for _, vid in pool[:k]], np.int64)

@@ -1,0 +1,5 @@
+from . import checkpoint, heartbeat, straggler  # noqa: F401
+from .checkpoint import (latest_step, restore_checkpoint,  # noqa: F401
+                         save_checkpoint)
+from .heartbeat import HeartbeatMonitor  # noqa: F401
+from .straggler import StragglerMitigator  # noqa: F401

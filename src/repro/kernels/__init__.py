@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for DecoupleVS's compute hot-spots.
+
+Each kernel directory contains:
+  <name>.py — `pl.pallas_call` kernel with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (kernel on TPU, jnp oracle elsewhere)
+  ref.py    — pure-jnp oracle used by tests/property sweeps
+
+Kernels (hot spots of the paper's search path, TPU-adapted per DESIGN.md §2):
+  pq_adc     — PQ asymmetric distance via one-hot × LUT matmul (MXU)
+  ef_decode  — Elias-Fano fixed-slot adjacency decode (VPU bit ops + rank)
+  rerank_l2  — exact L2 re-ranking distances (MXU tiles)
+  byteplane  — XOR-delta byte-plane decode of compressed vectors
+"""
+from . import byteplane, ef_decode, pq_adc, rerank_l2  # noqa: F401

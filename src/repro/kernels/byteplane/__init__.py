@@ -1,0 +1,3 @@
+from .byteplane import byteplane_decode_pallas  # noqa: F401
+from .ops import byteplane_decode  # noqa: F401
+from .ref import byteplane_decode_ref  # noqa: F401

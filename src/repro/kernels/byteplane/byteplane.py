@@ -1,0 +1,39 @@
+"""XOR-delta byte-plane decode (paper §3.2's delta transform, device side).
+
+The HBM-resident compressed vector tier stores XOR-deltas against the chunk
+base vector (DESIGN.md §2: the Huffman stage stays on the host tier; the
+device tier uses the delta + byte-plane layout so decode is branch-free).
+This is a bandwidth-bound kernel; its value is fusing the un-delta with the
+gather that feeds re-ranking, so decompressed vectors never round-trip HBM.
+
+Tiling: row blocks of BN vectors; base vector resident in VMEM across steps.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 256
+
+
+def _kernel(packed_ref, base_ref, out_ref):
+    out_ref[...] = jnp.bitwise_xor(packed_ref[...], base_ref[...][None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def byteplane_decode_pallas(packed: jnp.ndarray, base: jnp.ndarray,
+                            interpret: bool = True) -> jnp.ndarray:
+    n, v = packed.shape
+    pad = (-n) % BN
+    packed_p = jnp.pad(packed, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=((n + pad) // BN,),
+        in_specs=[pl.BlockSpec((BN, v), lambda i: (i, 0)),
+                  pl.BlockSpec((v,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((BN, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, v), jnp.uint8),
+        interpret=interpret,
+    )(packed_p, base)
+    return out[:n]

@@ -1,0 +1,14 @@
+"""Public byte-plane decode op."""
+import jax
+
+from .byteplane import byteplane_decode_pallas
+from .ref import byteplane_decode_ref
+
+
+def byteplane_decode(packed, base, *, force_kernel: bool | None = None):
+    use_kernel = force_kernel if force_kernel is not None \
+        else jax.default_backend() == "tpu"
+    if use_kernel:
+        return byteplane_decode_pallas(packed, base,
+                                       interpret=jax.default_backend() != "tpu")
+    return byteplane_decode_ref(packed, base)

@@ -1,0 +1,7 @@
+"""Oracle for XOR-delta byte-plane decode."""
+import jax.numpy as jnp
+
+
+def byteplane_decode_ref(packed: jnp.ndarray, base: jnp.ndarray) -> jnp.ndarray:
+    """packed [n, V] uint8 XOR base [V] uint8 -> [n, V] uint8 (lossless)."""
+    return jnp.bitwise_xor(packed, base[None, :])

@@ -1,0 +1,3 @@
+from .ef_decode import ef_decode_pallas  # noqa: F401
+from .ops import ef_decode  # noqa: F401
+from .ref import ef_decode_ref  # noqa: F401

@@ -1,0 +1,82 @@
+"""Elias-Fano fixed-slot decode kernel.
+
+The device-resident compressed graph stores each adjacency list in a
+fixed-size slot (worst-case bound 2R + R*ceil(log2(N/R)) bits, §3.3/§3.4), so
+vertex id -> slot address is direct. Decode = fixed-width low-bit unpack +
+select-in-bitmap for the high bits.
+
+TPU adaptation (DESIGN.md §2): CPU implementations use sequential rank/select
+structures; here the whole bitmap of one list is a VREG-friendly tile
+(<= 3R+1 bits) and select becomes a dense rank-compare:
+  pos(i) = argmax(cumsum(bits) == i+1)
+which is a [R, nbits] compare + argmax — pure VPU work, no serial loop.
+
+Tiling: grid over blocks of BL slots; per step VMEM holds the slot block
+[BL, W] uint32 plus the decode intermediates ([BL, R, nbits] compares are
+materialised per-slot via a fori_loop to bound VMEM).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.codec.elias_fano import slot_layout
+
+BL = 8  # slots per grid step
+
+
+def _make_kernel(r_max: int, universe: int):
+    l, lw, hb, total = slot_layout(r_max, universe)
+    nbits = hb * 32
+
+    def kernel(slots_ref, nbr_ref, cnt_ref):
+        slots = slots_ref[...]                       # [BL, total] uint32
+        cnt_ref[...] = slots[:, 0].astype(jnp.int32)
+        # ---- low bits: fixed-width unpack (vectorised over lists & slots)
+        if l:
+            start = jnp.arange(r_max, dtype=jnp.int32) * l
+            word = start // 32
+            off = (start % 32).astype(jnp.uint32)
+            low_words = slots[:, 1:1 + lw].astype(jnp.uint32)   # [BL, lw]
+            g0 = low_words[:, jnp.clip(word, 0, lw - 1)]
+            g1 = low_words[:, jnp.clip(word + 1, 0, lw - 1)]
+            lo = jnp.right_shift(g0, off[None, :])
+            hi = jnp.where(off[None, :] > 0,
+                           jnp.left_shift(g1, jnp.uint32(32) - off[None, :]), 0)
+            low = ((lo | hi) & jnp.uint32((1 << l) - 1)).astype(jnp.int32)
+        else:
+            low = jnp.zeros((slots.shape[0], r_max), jnp.int32)
+        # ---- high bits: rank-compare select over the unary bitmap
+        hw = slots[:, 1 + lw:].astype(jnp.uint32)                # [BL, hb]
+        bitidx = jnp.arange(nbits, dtype=jnp.uint32)
+        bits = (hw[:, bitidx // 32] >> (bitidx % 32)) & jnp.uint32(1)
+        csum = jnp.cumsum(bits.astype(jnp.int32), axis=1)        # [BL, nbits]
+        ranks = jnp.arange(1, r_max + 1, dtype=jnp.int32)
+        hit = csum[:, None, :] == ranks[None, :, None]           # [BL, R, nbits]
+        pos = jnp.argmax(hit, axis=2).astype(jnp.int32)
+        high = pos - jnp.arange(r_max, dtype=jnp.int32)[None, :]
+        nbr_ref[...] = jnp.left_shift(high, l) | low
+
+    return kernel, total
+
+
+@functools.partial(jax.jit, static_argnames=("r_max", "universe", "interpret"))
+def ef_decode_pallas(slots: jnp.ndarray, r_max: int, universe: int,
+                     interpret: bool = True):
+    b, total = slots.shape
+    kernel, total_expected = _make_kernel(r_max, universe)
+    assert total == total_expected, (total, total_expected)
+    pad = (-b) % BL
+    slots_p = jnp.pad(slots, ((0, pad), (0, 0)))
+    nbrs, cnts = pl.pallas_call(
+        kernel,
+        grid=((b + pad) // BL,),
+        in_specs=[pl.BlockSpec((BL, total), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BL, r_max), lambda i: (i, 0)),
+                   pl.BlockSpec((BL,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((b + pad, r_max), jnp.int32),
+                   jax.ShapeDtypeStruct((b + pad,), jnp.int32)],
+        interpret=interpret,
+    )(slots_p)
+    return nbrs[:b], cnts[:b]

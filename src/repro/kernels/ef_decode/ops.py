@@ -1,0 +1,15 @@
+"""Public EF slot-decode op."""
+import jax
+
+from .ef_decode import ef_decode_pallas
+from .ref import ef_decode_ref
+
+
+def ef_decode(slots, r_max: int, universe: int, *,
+              force_kernel: bool | None = None):
+    use_kernel = force_kernel if force_kernel is not None \
+        else jax.default_backend() == "tpu"
+    if use_kernel:
+        return ef_decode_pallas(slots, r_max, universe,
+                                interpret=jax.default_backend() != "tpu")
+    return ef_decode_ref(slots, r_max, universe)

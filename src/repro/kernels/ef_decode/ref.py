@@ -1,0 +1,17 @@
+"""Oracle for Elias-Fano fixed-slot decode (mirrors codec.elias_fano)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec.elias_fano import decode_slot_jnp
+
+
+def ef_decode_ref(slots: jnp.ndarray, r_max: int, universe: int):
+    """[B, W] uint32 slots -> (neighbors [B, r_max] int32, counts [B] int32).
+
+    Padding entries decode to ``universe - 1`` (callers mask with counts).
+    """
+    def one(slot):
+        vals, n = decode_slot_jnp(slot, r_max, universe)
+        return vals, n
+    vals, counts = jax.vmap(one)(slots)
+    return vals.astype(jnp.int32), counts.astype(jnp.int32)

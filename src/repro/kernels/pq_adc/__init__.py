@@ -1,0 +1,3 @@
+from .ops import pq_adc  # noqa: F401
+from .pq_adc import pq_adc_pallas  # noqa: F401
+from .ref import pq_adc_ref  # noqa: F401

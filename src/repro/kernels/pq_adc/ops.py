@@ -1,0 +1,16 @@
+"""Public ADC op: Pallas kernel on TPU, jnp oracle elsewhere."""
+import jax
+import jax.numpy as jnp
+
+from .pq_adc import pq_adc_pallas
+from .ref import pq_adc_ref
+
+
+def pq_adc(codes: jnp.ndarray, lut: jnp.ndarray, *,
+           force_kernel: bool | None = None) -> jnp.ndarray:
+    use_kernel = force_kernel if force_kernel is not None \
+        else jax.default_backend() == "tpu"
+    if use_kernel:
+        return pq_adc_pallas(codes, lut,
+                             interpret=jax.default_backend() != "tpu")
+    return pq_adc_ref(codes, lut)

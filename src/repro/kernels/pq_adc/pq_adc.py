@@ -1,0 +1,56 @@
+"""PQ ADC as a one-hot × LUT matmul — the TPU-native formulation.
+
+On CPU (the paper's target) ADC is a per-byte table gather; TPUs pay dearly
+for gathers but have a systolic MXU, so we re-express the lookup as
+``onehot(codes) @ lut.reshape(M*K)``: mathematically identical, MXU-shaped
+(DESIGN.md §2 hardware-adaptation note).
+
+Tiling: grid over row-blocks of BN codes. Per step the kernel holds in VMEM:
+  codes block [BN, M] int32          (BN*M*4 B)
+  lut         [M, K]  f32            (M*K*4 B; K=256, M<=64 -> <=64 KiB)
+  one-hot     [BN, M*K] f32          (BN=128, M=32 -> 4 MiB, the VMEM budget)
+  out block   [BN]    f32
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 128  # rows per grid step — sized so the one-hot tile fits VMEM
+
+
+def _kernel(codes_ref, lut_ref, out_ref):
+    codes = codes_ref[...].astype(jnp.int32)          # [BN, M]
+    lut = lut_ref[...]                                # [M, K]
+    m, k = lut.shape
+    # one-hot over the K axis, flattened to [BN, M*K] for one MXU matmul.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], m, k), 2)
+    onehot = (iota == codes[:, :, None]).astype(lut.dtype)
+    flat = onehot.reshape(codes.shape[0], m * k)
+    out_ref[...] = jax.lax.dot_general(
+        flat, lut.reshape(m * k),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pq_adc_pallas(codes: jnp.ndarray, lut: jnp.ndarray,
+                  interpret: bool = True) -> jnp.ndarray:
+    n, m = codes.shape
+    mk, k = lut.shape
+    assert mk == m
+    pad = (-n) % BN
+    codes_p = jnp.pad(codes.astype(jnp.int32), ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _kernel,
+        grid=((n + pad) // BN,),
+        in_specs=[
+            pl.BlockSpec((BN, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BN,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(((n + pad),), jnp.float32),
+        interpret=interpret,
+    )(codes_p, lut.astype(jnp.float32))
+    return out[:n]

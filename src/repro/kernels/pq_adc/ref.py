@@ -1,0 +1,11 @@
+"""Oracle for PQ asymmetric distance computation (ADC)."""
+import jax.numpy as jnp
+
+
+def pq_adc_ref(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """dist[i] = sum_m lut[m, codes[i, m]].
+
+    codes: [n, M] integer (uint8/int32), lut: [M, K] float32 -> [n] float32.
+    """
+    m = lut.shape[0]
+    return lut[jnp.arange(m)[None, :], codes.astype(jnp.int32)].sum(-1)

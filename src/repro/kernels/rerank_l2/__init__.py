@@ -1,0 +1,3 @@
+from .ops import rerank_l2  # noqa: F401
+from .ref import rerank_l2_ref  # noqa: F401
+from .rerank_l2 import rerank_l2_pallas  # noqa: F401

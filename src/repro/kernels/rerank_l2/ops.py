@@ -1,0 +1,14 @@
+"""Public exact-rerank op."""
+import jax
+
+from .ref import rerank_l2_ref
+from .rerank_l2 import rerank_l2_pallas
+
+
+def rerank_l2(queries, cands, *, force_kernel: bool | None = None):
+    use_kernel = force_kernel if force_kernel is not None \
+        else jax.default_backend() == "tpu"
+    if use_kernel:
+        return rerank_l2_pallas(queries, cands,
+                                interpret=jax.default_backend() != "tpu")
+    return rerank_l2_ref(queries, cands)

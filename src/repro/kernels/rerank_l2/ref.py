@@ -1,0 +1,9 @@
+"""Oracle for exact L2 re-ranking distances."""
+import jax.numpy as jnp
+
+
+def rerank_l2_ref(queries: jnp.ndarray, cands: jnp.ndarray) -> jnp.ndarray:
+    """queries [Q, D], cands [Q, C, D] -> squared L2 [Q, C] float32."""
+    q = queries.astype(jnp.float32)
+    x = cands.astype(jnp.float32)
+    return ((x - q[:, None, :]) ** 2).sum(-1)

@@ -1,0 +1,460 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below may import jax.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this produces, with NO device allocation (abstract inputs):
+
+  full program   — train_step (fwd+bwd+AdamW) / prefill / decode_step with
+                   production shardings; `.compile()` success proves the
+                   sharding config is coherent; `memory_analysis()` proves
+                   per-chip fit; HLO text gives the collective schedule.
+  cost programs  — stem + one program per distinct layer descriptor,
+                   built without inner loops (dense attention, assoc scans)
+                   so `cost_analysis()` FLOPs/bytes are exact, then scaled
+                   by layer counts/sequence multipliers (DESIGN.md §7).
+
+Results are written incrementally to JSON (one file per cell) so a long
+sweep can be resumed/killed safely.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-cost]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh, dp_size
+from repro.models import sharding
+from repro.models.api import Model
+from repro.optim.adamw import AdamWConfig, abstract_opt_state
+from repro.train.trainer import TrainConfig, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# Big-vocab models must never materialise [B, S, V] logits in training.
+LOSS_CHUNK = 256
+
+
+def _rules_for(cfg, shape, mesh):
+    """Long-context cells (batch < DP) shard sequence instead of batch;
+    archs whose kv-head count does not divide the TP axis replicate KV
+    projections (Megatron GQA practice) instead of splitting head_dim."""
+    long_ctx = shape.global_batch < dp_size(mesh)
+    rules = dict(sharding.LONG_CONTEXT_RULES) if long_ctx \
+        else dict(sharding.DEFAULT_RULES)
+    kv_div = cfg.n_kv_heads and cfg.n_kv_heads % mesh.shape["model"] == 0
+    if cfg.n_kv_heads and not kv_div:
+        rules["kv_heads"] = None
+        # (Perf iteration A2 tried head_dim-sharded decode caches here and
+        # was REFUTED: XLA re-gathered around softmax/rope, collective_s
+        # 0.65 -> 1.56. Seq-sharded cache stands — see EXPERIMENTS.md §Perf.)
+        rules["kv_seq"] = ("pod", "data", "model") if long_ctx else "model"
+    if shape.kind == "decode":
+        # Perf iteration A4 (serve path): dense weights fit when sharded
+        # over `model` only -> replicate over data (no per-token ZeRO
+        # all-gather); expert tensors keep the 2D (expert x data) sharding
+        # with A3's token-side resharding.
+        rules["embed"] = None
+    elif long_ctx:
+        rules["kv_seq"] = ("pod", "data")
+    return rules
+
+
+def _batch_shardings(model, specs):
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = sharding.sharding_for_shape(v.shape, "batch", "seq")
+        elif k in ("frames", "frontend"):
+            out[k] = sharding.sharding_for_shape(v.shape, "batch", "seq", None)
+        else:
+            out[k] = sharding.sharding_for_shape(v.shape,
+                                                 *([None] * len(v.shape)))
+    return out
+
+
+_CACHE_AXES = {
+    "k": (None, "batch", "kv_seq", "kv_heads", "kv_hd"),
+    "v": (None, "batch", "kv_seq", "kv_heads", "kv_hd"),
+    "xk": (None, "batch", "kv_seq", "kv_heads", "kv_hd"),
+    "xv": (None, "batch", "kv_seq", "kv_heads", "kv_hd"),
+    "conv": (None, "batch", None, "ffn"),
+    "h": (None, "batch", "ffn", None),
+    "x_prev": (None, "batch", None),
+    "x_prev_cm": (None, "batch", None),
+    "s": (None, "batch", "heads", None, None),
+}
+
+
+def _cache_shardings(cache):
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (sharding.sharding_for_shape(
+                        v.shape, *_CACHE_AXES[k][-len(v.shape):])
+                        if k in _CACHE_AXES else walk(v))
+                    for k, v in tree.items()}
+        return tree
+    return walk(cache)
+
+
+def _opt_shardings(p_sh):
+    rep = sharding.sharding_for()
+    return {"m": p_sh, "v": p_sh, "master": p_sh, "step": rep}
+
+
+# ------------------------------------------------------------- full programs
+def lower_full(model: Model, shape, mesh, rules):
+    cfg = model.cfg
+    with sharding.policy(mesh, rules):
+        p_sh = model.param_shardings()
+        specs = model.input_specs(shape)
+        b_sh = _batch_shardings(model, specs)
+        a_params = model.abstract_params()
+
+        if shape.kind == "train":
+            np_ = cfg.n_periods if not cfg.encoder_layers else 1
+            group = max((d for d in range(1, int(np_ ** 0.5) + 1)
+                         if np_ % d == 0), default=1)
+            # dense attention: scores are per-layer transients under full
+            # remat (heads TP-sharded), while flash-via-scan would store
+            # nested-scan residuals in backward. Prefill keeps flash.
+            # 8 microbatches (grad accumulation): 2 sequences per device per
+            # microbatch — every activation/residual tensor shrinks 8x.
+            mb = int(os.environ.get("REPRO_DRYRUN_MICROBATCHES", "0")) or \
+                (8 if shape.global_batch % (8 * dp_size(mesh)) == 0 else 1)
+            tcfg = TrainConfig(remat="full", attn_mode="dense",
+                               ssm_mode="chunk", loss_chunk=LOSS_CHUNK,
+                               remat_group=group, microbatches=mb)
+            step = make_train_step(model, AdamWConfig(), tcfg)
+            a_opt = abstract_opt_state(a_params)
+            o_sh = _opt_shardings(p_sh)
+            # donate params+opt: optimizer updates alias their inputs
+            # (no double-buffered master/m/v at the update step).
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            return jitted.lower(a_params, a_opt, specs)
+
+        if shape.kind == "prefill":
+            fn = lambda p, b: model.prefill(p, b, attn_mode="flash",
+                                            ssm_mode="chunk")
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                             out_shardings=None)
+            return jitted.lower(a_params, specs)
+
+        # decode: one new token against a seq_len cache
+        b = shape.global_batch
+        s_enc = 4096 if cfg.encoder_layers else 0
+        a_cache = model.abstract_cache(b, shape.seq_len, s_enc=s_enc)
+        c_sh = _cache_shardings(a_cache)
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+        t_sh = sharding.sharding_for_shape(tok.shape, "batch", None)
+        pos_sh = sharding.sharding_for_shape(pos.shape, "batch")
+        fn = lambda p, c, t, q: model.decode_step(p, c, t, q)
+        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh, pos_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(1,))
+        return jitted.lower(a_params, a_cache, tok, pos)
+
+
+# ------------------------------------------------------------- cost programs
+def _layer_cost_programs(model: Model, shape, mesh, rules):
+    """One exact-FLOP program per distinct layer descriptor + stem.
+
+    Returns list of (name, lowered, weight) with weight = occurrence count
+    (x sequence multiplier for linear-in-seq mixers lowered at shorter S).
+    """
+    from collections import Counter
+    from repro.models import schema as S, transformer as T
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.encoder_layers:
+        with sharding.policy(mesh, rules):
+            return _encdec_cost_programs(model, shape, mesh, rules)
+    counts = Counter(cfg.all_descs)
+    out = []
+    with sharding.policy(mesh, rules):
+        for di, (desc, count) in enumerate(sorted(
+                counts.items(), key=lambda kv: str(kv[0]))):
+            lsch = T._layer_schema(cfg, desc)
+            lp = S.abstract_params(lsch, jnp.dtype(cfg.dtype))
+            lp_sh = S.param_shardings(lsch)
+            # Linear-in-seq mixers may be lowered at a shorter sequence.
+            if shape.kind == "decode":
+                s_prog, mult = 1, 1.0
+            elif desc.mixer == "rwkv":
+                s_prog = min(s, 512)
+                mult = s / s_prog
+            else:
+                s_prog, mult = s, 1.0
+            x = jax.ShapeDtypeStruct((b, s_prog, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+            x_sh = sharding.sharding_for_shape(x.shape, "batch", "seq", None)
+            positions = jax.ShapeDtypeStruct((b, s_prog), jnp.int32)
+            pos_sh = sharding.sharding_for_shape(positions.shape,
+                                                 "batch", "seq")
+
+            if shape.kind == "decode":
+                # decode cost = one-token step against this layer's cache
+                # (attention over cached KV is THE serve-time cost).
+                a_cache = T.abstract_layer_cache(cfg, desc, b, s)
+                c_sh = _cache_shardings({"c": a_cache})["c"]
+                pos1 = jax.ShapeDtypeStruct((b,), jnp.int32)
+                pos1_sh = sharding.sharding_for_shape(pos1.shape, "batch")
+
+                def fn(p, xx, cj, pq, _d=desc):
+                    y, _, _ = T._apply_layer(_d, p, xx, cfg,
+                                             pq[:, None], "decode", cj,
+                                             "dense", "chunk")
+                    return y
+                jitted = jax.jit(fn, in_shardings=(lp_sh, x_sh, c_sh,
+                                                   pos1_sh))
+                low = jitted.lower(lp, x, a_cache, pos1)
+            else:
+                def layer_fwd(p, xx, pp, _desc=desc):
+                    y, aux, _ = T._apply_layer(
+                        _desc, p, xx, cfg, pp, "train", None,
+                        "dense", "assoc")
+                    return (y.astype(jnp.float32).mean() + aux
+                            ).astype(jnp.float32)
+
+                if shape.kind == "train":
+                    fn = jax.value_and_grad(layer_fwd, argnums=(0, 1))
+                else:
+                    def fn(p, xx, pp, _d=desc):
+                        y, _, _ = T._apply_layer(_d, p, xx, cfg, pp, "train",
+                                                 None, "dense", "assoc")
+                        return y
+                jitted = jax.jit(fn, in_shardings=(lp_sh, x_sh, pos_sh))
+                low = jitted.lower(lp, x, positions)
+            out.append((f"layer:{desc.mixer}/{desc.mlp}"
+                        f"{'/w' if desc.window else ''}", low, count * mult))
+        out.append(_stem_cost_program(model, shape, mesh))
+    return out
+
+
+def _stem_cost_program(model: Model, shape, mesh):
+    """Embed + final head/loss (+optimizer handled analytically)."""
+    from repro.models import transformer as T
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    s_prog = 1 if shape.kind == "decode" else min(s, 128)
+    mult = 1.0 if shape.kind == "decode" else s / s_prog
+    e_sh = sharding.sharding_for("vocab", "embed")
+    n_sh = sharding.sharding_for(None)
+    tok = jax.ShapeDtypeStruct((b, s_prog), jnp.int32)
+    tok_sh = sharding.sharding_for_shape(tok.shape, "batch", "seq")
+    embed = jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), jnp.dtype(cfg.dtype))
+    norm = jax.ShapeDtypeStruct((cfg.d_model,), jnp.dtype(cfg.dtype))
+
+    def stem(e, g, t):
+        x = e[t].astype(jnp.dtype(cfg.dtype))
+        x = T.rms_norm(x, g, cfg.norm_eps)
+        logits = (x @ e.T.astype(x.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        ll = jnp.take_along_axis(logits, t[..., None], -1)[..., 0]
+        return (lse - ll).mean()
+
+    fn = jax.value_and_grad(stem, argnums=(0,)) if shape.kind == "train" \
+        else stem
+    low = jax.jit(fn, in_shardings=(e_sh, n_sh, tok_sh)).lower(
+        embed, norm, tok)
+    return ("stem", low, mult)
+
+
+def _encdec_cost_programs(model, shape, mesh, rules):
+    """Seamless: encoder layer + decoder layer + stem, exact-FLOP variants."""
+    from repro.models import encdec as E, schema as S, transformer as T
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    st = min(s, 4096) if shape.kind == "train" else min(s, 1024)
+    if shape.kind == "decode":
+        s, st = 4096, 1   # decode: cross-attn over cached memory
+    out = []
+    enc_sch = {"mixer": T._attn_schema(cfg), "mlp": T._mlp_schema(cfg, "gelu")}
+    dec_sch = dict(enc_sch, cross=E._xattn_schema(cfg))
+    for name, sch, seqs in (("layer:enc", enc_sch, (b, s)),
+                            ("layer:dec", dec_sch, (b, st))):
+        lp = S.abstract_params(sch, jnp.dtype(cfg.dtype))
+        lp_sh = S.param_shardings(sch)
+        x = jax.ShapeDtypeStruct((seqs[0], seqs[1], cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+        mem = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        x_sh = sharding.sharding_for_shape(x.shape, "batch", "seq", None)
+
+        def enc_fwd(p, xx):
+            pos = jnp.broadcast_to(jnp.arange(xx.shape[1])[None],
+                                   xx.shape[:2])
+            y, _ = E._self_attn(p["mixer"], xx, cfg, pos, causal=False,
+                                attn_mode="dense")
+            y, _, _ = T._apply_mlp(p["mlp"], y, cfg, T.LayerDesc(mlp="gelu"),
+                                   "train", None)
+            return y.astype(jnp.float32).mean()
+
+        def dec_fwd(p, xx, mm):
+            pos = jnp.broadcast_to(jnp.arange(xx.shape[1])[None],
+                                   xx.shape[:2])
+            y, _ = E._self_attn(p["mixer"], xx, cfg, pos, causal=True,
+                                attn_mode="dense")
+            y = E._cross_attn(p["cross"], y, E._memory_kv(p, mm, cfg),
+                              cfg, "dense")
+            y, _, _ = T._apply_mlp(p["mlp"], y, cfg, T.LayerDesc(mlp="gelu"),
+                                   "train", None)
+            return y.astype(jnp.float32).mean()
+
+        count = cfg.encoder_layers if name == "layer:enc" else cfg.n_layers
+        if name == "layer:enc":
+            fn = jax.value_and_grad(enc_fwd, argnums=(0, 1)) \
+                if shape.kind == "train" else enc_fwd
+            low = jax.jit(fn, in_shardings=(lp_sh, x_sh)).lower(lp, x)
+        else:
+            fn = jax.value_and_grad(dec_fwd, argnums=(0, 1, 2)) \
+                if shape.kind == "train" else dec_fwd
+            low = jax.jit(fn, in_shardings=(lp_sh, x_sh, x_sh)).lower(
+                lp, x, mem)
+        out.append((name, low, float(count)))
+    out.append(_stem_cost_program(model, shape, mesh))
+    return out
+
+
+def optimizer_analytic_terms(n_params: int) -> roofline.RooflineTerms:
+    """AdamW update: ~15 flops/param; bytes = read g(4)+m(4)+v(4)+master(4)
+    + write m(4)+v(4)+master(4)+param(2) = 30 B/param (per device: /chips
+    handled by caller via sharded param count)."""
+    return roofline.RooflineTerms(flops=15.0 * n_params,
+                                  bytes_accessed=30.0 * n_params,
+                                  coll_bytes=0.0)
+
+
+# ------------------------------------------------------------------ driver
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             with_cost: bool = True, out_dir: Path = RESULTS_DIR,
+             rules_override=None, tag: str = "") -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "skipped": not ok, "why_skipped": why, "tag": tag}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fname = out_dir / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+    if not ok:
+        fname.write_text(json.dumps(cell, indent=1))
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_override if rules_override is not None \
+        else _rules_for(cfg, shape, mesh)
+    model = Model.from_config(cfg)
+
+    t0 = time.time()
+    lowered = lower_full(model, shape, mesh, rules)
+    cell["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    cell["compile_s"] = round(time.time() - t0, 1)
+    mem = compiled.memory_analysis()
+    cell["memory"] = {
+        "argument_gib": mem.argument_size_in_bytes / 2**30,
+        "output_gib": mem.output_size_in_bytes / 2**30,
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+        "peak_gib": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        / 2**30,
+    }
+    full_terms = roofline.analyze(compiled)
+    cell["full_program"] = full_terms.as_dict()
+
+    if with_cost and not multi_pod:
+        parts = []
+        t0 = time.time()
+        for name, low, weight in _layer_cost_programs(model, shape, mesh,
+                                                      rules):
+            comp = low.compile()
+            terms = roofline.analyze(comp)
+            parts.append((terms, weight))
+            cell.setdefault("cost_programs", {})[name] = {
+                "weight": weight, **terms.as_dict()}
+        total = roofline.combine(parts)
+        if shape.kind == "train":
+            n_dev = mesh.size
+            opt = optimizer_analytic_terms(model.n_params() / n_dev)
+            total = roofline.combine([(total, 1.0), (opt, 1.0)])
+            cell["optimizer_analytic"] = opt.as_dict()
+        total.peak_memory_bytes = full_terms.peak_memory_bytes
+        cell["cost_s"] = round(time.time() - t0, 1)
+        n_dev = mesh.size
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        mf = roofline.model_flops(roofline.active_params(model), tokens,
+                                  shape.kind)
+        cell["model_flops_per_device"] = mf / n_dev
+        cell["roofline"] = total.as_dict()
+        cell["roofline"]["model_flops_ratio"] = (
+            mf / n_dev / total.flops if total.flops else 0.0)
+        cell["roofline"]["roofline_fraction"] = total.roofline_fraction(
+            mf / n_dev)
+        cell["roofline"]["step_time_s"] = total.step_time_s
+    fname.write_text(json.dumps(cell, indent=1))
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in cells:
+        for mp in meshes:
+            key = f"{arch}/{shape}/{'multi' if mp else 'single'}"
+            fname = out_dir / (f"{arch}__{shape}__"
+                               f"{'pod2x16x16' if mp else 'pod16x16'}.json")
+            if fname.exists():
+                print(f"[skip-done] {key}", flush=True)
+                continue
+            try:
+                t0 = time.time()
+                cell = run_cell(arch, shape, multi_pod=mp,
+                                with_cost=not args.skip_cost,
+                                out_dir=out_dir)
+                status = "SKIP " + cell["why_skipped"] if cell["skipped"] \
+                    else f"ok compile={cell.get('compile_s')}s " \
+                         f"peak={cell.get('memory', {}).get('peak_gib', 0):.1f}GiB"
+                print(f"[{time.time()-t0:6.1f}s] {key}: {status}", flush=True)
+            except Exception as e:
+                print(f"[FAIL] {key}: {e}", flush=True)
+                traceback.print_exc()
+                (out_dir / "failures.log").open("a").write(
+                    f"{key}: {e}\n{traceback.format_exc()}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Inject generated dry-run/roofline tables into EXPERIMENTS.md."""
+from pathlib import Path
+
+from repro.launch.summarize import compile_table, roofline_table
+
+ROOT = Path(__file__).resolve().parents[3]
+
+
+def main():
+    p = ROOT / "EXPERIMENTS.md"
+    text = p.read_text()
+    dry = ("### Compile matrix (both meshes)\n\n" + compile_table())
+    roof = ("### Single-pod roofline terms (per chip)\n\n"
+            + roofline_table("pod16x16"))
+    for marker, content in (("<!--DRYRUN_TABLE-->", dry),
+                            ("<!--ROOFLINE_TABLE-->", roof)):
+        start = text.index(marker)
+        end = text.index("\n## ", start)
+        text = text[:start] + marker + "\n" + content + "\n" + text[end:]
+    p.write_text(text)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

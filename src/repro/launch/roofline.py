@@ -1,0 +1,193 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e target):
+    peak bf16 compute   197 TFLOP/s per chip
+    HBM bandwidth       819 GB/s per chip
+    ICI                 ~50 GB/s per link
+
+Terms (per device — the SPMD-partitioned HLO module IS the per-device
+program, so cost_analysis numbers are per-chip):
+    compute_s    = flops / 197e12
+    memory_s     = bytes_accessed / 819e9
+    collective_s = sum over collective ops of operand bytes / 50e9
+
+IMPORTANT scan caveat (measured, see DESIGN.md §7): XLA's cost_analysis
+counts a `lax.scan` body ONCE, not x trip-count. Dry-run cost programs are
+therefore built so inner loops are either absent (dense attention, assoc
+scans) or accounted with explicit multipliers; the full scanned program is
+used for memory_analysis (the fit proof) and compile validation only.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind operand bytes of every collective in the (per-device) HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                op = k
+                break
+        if op is None:
+            continue
+        if f"{op}-done(" in rhs:
+            continue  # paired with -start; avoid double counting
+        # Output shape(s) = bytes moved (for reduce-scatter use operand).
+        shapes = _SHAPE_RE.findall(rhs.split("(")[0])
+        if op == "reduce-scatter":
+            # operand bytes (inside parens) are what crosses the links
+            inner = rhs[rhs.index("("):]
+            shapes = _SHAPE_RE.findall(inner)
+        total = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        out[op] += total
+        counts[op] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: dict = field(default_factory=dict)
+    peak_memory_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time: terms overlap, bound = max."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self, model_flops_per_device: float) -> float:
+        """useful-FLOPs utilisation at the lower-bound step time (MFU-like)."""
+        if self.step_time_s == 0:
+            return 0.0
+        return model_flops_per_device / PEAK_FLOPS / self.step_time_s
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "peak_memory_gib": self.peak_memory_bytes / 2**30,
+            "coll_breakdown": {k: v for k, v in self.coll_breakdown.items()
+                               if k != "_counts" and v},
+        }
+
+
+def analyze(compiled, hlo_text: str | None = None) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    total_coll = sum(v for k, v in coll.items() if k != "_counts")
+    mem = compiled.memory_analysis()
+    peak = getattr(mem, "temp_size_in_bytes", 0) + \
+        getattr(mem, "argument_size_in_bytes", 0) + \
+        getattr(mem, "output_size_in_bytes", 0) - \
+        getattr(mem, "alias_size_in_bytes", 0)
+    return RooflineTerms(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=float(total_coll),
+        coll_breakdown=coll,
+        peak_memory_bytes=float(peak),
+    )
+
+
+def combine(parts: list[tuple["RooflineTerms", float]]) -> RooflineTerms:
+    """Weighted sum of per-program terms (e.g. stem + L x layer)."""
+    t = RooflineTerms(0.0, 0.0, 0.0, {}, 0.0)
+    for part, w in parts:
+        t.flops += part.flops * w
+        t.bytes_accessed += part.bytes_accessed * w
+        t.coll_bytes += part.coll_bytes * w
+        for k, v in part.coll_breakdown.items():
+            if k == "_counts":
+                continue
+            t.coll_breakdown[k] = t.coll_breakdown.get(k, 0) + v * w
+        t.peak_memory_bytes = max(t.peak_memory_bytes, part.peak_memory_bytes)
+    return t
+
+
+def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference forward)."""
+    per_tok = 6 if kind == "train" else 2
+    return per_tok * n_active_params * tokens
+
+
+def active_params(model) -> int:
+    """Active (per-token) parameter count: expert tensors scaled by
+    (top_k + shared)/E; embeddings excluded (6ND convention)."""
+    import numpy as np
+    from repro.models.schema import ParamSpec
+    import jax
+    cfg = model.cfg
+    total = 0
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+            model.schema, is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+        keys = [getattr(k, "key", str(k)) for k in path]
+        n = int(np.prod(spec.shape))
+        if "embed" in keys or "lm_head" in keys:
+            continue
+        if cfg.moe and any(k in ("router",) for k in keys):
+            pass
+        if cfg.moe and "expert" in spec.axes:
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total

@@ -1,0 +1,69 @@
+"""Serving launcher: mesh + batched prefill/decode engine (+ optional RAG).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
+        --requests 8 --max-new 16 [--rag]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.data.synthetic import make_token_batch
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import sharding
+from repro.models.api import Model
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--mesh", default="local",
+                    choices=["local", "pod", "multipod"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--rag", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.preset == "full" \
+        else reduce_config(get_config(args.arch))
+    mesh = make_local_mesh() if args.mesh == "local" else \
+        make_production_mesh(multi_pod=args.mesh == "multipod")
+    model = Model.from_config(cfg)
+    with sharding.policy(mesh, None):
+        params = model.init(jax.random.PRNGKey(0))
+        engine = ServeEngine(model, params)
+        prompts = make_token_batch(cfg.vocab, args.requests, args.prompt_len)
+        if cfg.encoder_layers:
+            frames = np.random.default_rng(0).normal(
+                size=(args.requests, args.prompt_len, cfg.frontend_dim)
+            ).astype(np.float32)
+            t0 = time.perf_counter()
+            out = engine.generate(prompts[:, :8], max_new=args.max_new,
+                                  frontend=frames)
+        elif args.rag:
+            from repro.serve.rag import RAGPipeline
+            docs = make_token_batch(cfg.vocab, 256, 12, seed=3)
+            rag = RAGPipeline(engine, doc_tokens=docs, k=2)
+            t0 = time.perf_counter()
+            out, stats = rag.answer(prompts, max_new=args.max_new)
+            print(f"retrieval: {stats['graph_ios']} graph + "
+                  f"{stats['vector_ios']} vector block reads")
+        else:
+            t0 = time.perf_counter()
+            out = engine.generate(prompts, max_new=args.max_new)
+        dt = time.perf_counter() - t0
+    tok = args.requests * args.max_new
+    print(f"{cfg.name}: {args.requests} requests x {args.max_new} new tokens "
+          f"in {dt:.2f}s ({tok/dt:.1f} tok/s incl. compile)")
+    print("sample:", np.asarray(out)[0][:10].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "pod16x16") -> list[dict]:
+    cells = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(mesh: str = "pod16x16") -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "peak GiB | 6ND/HLO | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in load_cells(mesh):
+        if c.get("skipped"):
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"SKIP: {c['why_skipped'][:40]} | — | — | — |")
+            continue
+        r = c.get("roofline") or c.get("full_program")
+        peak = c.get("memory", {}).get("peak_gib", 0)
+        mfr = r.get("model_flops_ratio")
+        rf = r.get("roofline_fraction")
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {peak:.1f} | "
+            f"{mfr:.2f} |" if mfr is not None else
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {peak:.1f} | — |")
+        if mfr is not None:
+            rows[-1] += f" {rf:.3f} |"
+        else:
+            rows[-1] += " — |"
+    return "\n".join(rows)
+
+
+def compile_table() -> str:
+    rows = ["| arch | shape | 16x16 compile | peak GiB | 2x16x16 compile | "
+            "peak GiB |", "|---|---|---|---|---|---|"]
+    single = {(c["arch"], c["shape"]): c for c in load_cells("pod16x16")}
+    multi = {(c["arch"], c["shape"]): c for c in load_cells("pod2x16x16")}
+    for key in sorted(single):
+        s, m = single[key], multi.get(key, {})
+        if s.get("skipped"):
+            rows.append(f"| {key[0]} | {key[1]} | SKIP | — | SKIP | — |")
+            continue
+        rows.append(
+            f"| {key[0]} | {key[1]} | {s.get('compile_s', '?')}s | "
+            f"{s.get('memory', {}).get('peak_gib', 0):.1f} | "
+            f"{m.get('compile_s', '?')}s | "
+            f"{m.get('memory', {}).get('peak_gib', 0):.1f} |")
+    return "\n".join(rows)
+
+
+def worst_cells(n=5):
+    """Cells ranked by roofline fraction (hillclimb candidates)."""
+    out = []
+    for c in load_cells("pod16x16"):
+        if c.get("skipped") or "roofline" not in c:
+            continue
+        out.append((c["roofline"].get("roofline_fraction", 0), c["arch"],
+                    c["shape"], c["roofline"]["dominant"]))
+    out.sort()
+    return out[:n], out[-n:]
+
+
+if __name__ == "__main__":
+    print("## Compile matrix\n")
+    print(compile_table())
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table())
+    lo, hi = worst_cells()
+    print("\nworst roofline fractions:", lo)
+    print("best:", hi)

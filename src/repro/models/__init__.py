@@ -1,0 +1,3 @@
+from . import api, encdec, layers, moe, schema, sharding, ssm, transformer  # noqa: F401
+from .api import Model  # noqa: F401
+from .transformer import LayerDesc, ModelConfig  # noqa: F401

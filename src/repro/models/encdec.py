@@ -1,0 +1,184 @@
+"""Encoder–decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a stub per the assignment: inputs are precomputed frame
+embeddings [B, S_enc, frontend_dim]. The backbone is fully implemented:
+bidirectional encoder, causal decoder with cross-attention, teacher-forced
+training, and a serve path (encode once -> cached cross-K/V -> decode steps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (attention, chunked_cross_entropy, cross_entropy_loss,
+                     rms_norm, rope)
+from .schema import ParamSpec
+from .sharding import shard
+from .transformer import (LayerDesc, ModelConfig, _attn_schema, _mlp_schema,
+                          _apply_mlp)
+
+
+def _xattn_schema(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    sx = tuple(None for _ in stack)
+    return {
+        "ln_x": ParamSpec(stack + (d,), sx + (None,), "zeros"),
+        "xwq": ParamSpec(stack + (d, h * hd), sx + ("embed", "heads")),
+        "xwk": ParamSpec(stack + (d, kvh * hd), sx + ("embed", "kv_heads")),
+        "xwv": ParamSpec(stack + (d, kvh * hd), sx + ("embed", "kv_heads")),
+        "xwo": ParamSpec(stack + (h * hd, d), sx + ("heads", "embed")),
+    }
+
+
+def build_encdec_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ne, nd = cfg.encoder_layers, cfg.n_layers
+    enc_block = {"mixer": _attn_schema(cfg, (ne,)),
+                 "mlp": _mlp_schema(cfg, "gelu", (ne,))}
+    dec_block = {"mixer": _attn_schema(cfg, (nd,)),
+                 "cross": _xattn_schema(cfg, (nd,)),
+                 "mlp": _mlp_schema(cfg, "gelu", (nd,))}
+    return {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), scale=1.0),
+        "frontend_proj": ParamSpec((cfg.frontend_dim, d), (None, "embed")),
+        "encoder": enc_block,
+        "decoder": dec_block,
+        "enc_norm": ParamSpec((d,), (None,), "zeros"),
+        "final_norm": ParamSpec((d,), (None,), "zeros"),
+    }
+
+
+def _self_attn(p, x, cfg, positions, causal, attn_mode, cache=None, pos=None):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hx = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = rope((hx @ p["wq"]).reshape(b, s, h, hd), positions)
+    k = rope((hx @ p["wk"]).reshape(b, s, kvh, hd), positions)
+    v = (hx @ p["wv"]).reshape(b, s, kvh, hd)
+    if cache is None:
+        o = attention(q, k, v, mode=attn_mode, causal=causal)
+        new_cache = None
+    else:
+        sc = cache["k"].shape[1]
+        slot = (pos % sc).astype(jnp.int32)
+        kc = jax.vmap(lambda c, kk, sl: jax.lax.dynamic_update_slice(
+            c, kk, (sl, 0, 0)))(cache["k"], k.astype(cache["k"].dtype), slot)
+        vc = jax.vmap(lambda c, vv, sl: jax.lax.dynamic_update_slice(
+            c, vv, (sl, 0, 0)))(cache["v"], v.astype(cache["v"].dtype), slot)
+        kv_mask = jnp.arange(sc)[None] < jnp.minimum(pos + 1, sc)[:, None]
+        o = attention(q, kc, vc, mode="dense", causal=False, kv_mask=kv_mask)
+        new_cache = {"k": kc, "v": vc}
+    return x + o.reshape(b, s, h * hd) @ p["wo"], new_cache
+
+
+def _cross_attn(p, x, memory_kv, cfg, attn_mode):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    q = (hx @ p["xwq"]).reshape(b, s, h, hd)
+    k, v = memory_kv
+    o = attention(q, k, v, mode=attn_mode, causal=False)
+    return x + o.reshape(b, s, h * hd) @ p["xwo"]
+
+
+def encode(params, cfg: ModelConfig, frames, attn_mode="flash", remat=None):
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt) @ params["frontend_proj"].astype(dt)
+    x = shard(x, "batch", "seq", None)
+    b, se, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
+
+    def body(xx, blk):
+        xx, _ = _self_attn(blk["mixer"], xx, cfg, positions, causal=False,
+                           attn_mode=attn_mode)
+        xx, _, _ = _apply_mlp(blk["mlp"], xx, cfg,
+                              LayerDesc(mlp="gelu"), "train", None)
+        return xx, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _memory_kv(blk, memory, cfg):
+    b, se, _ = memory.shape
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (memory @ blk["cross"]["xwk"]).reshape(b, se, kvh, hd)
+    v = (memory @ blk["cross"]["xwv"]).reshape(b, se, kvh, hd)
+    return k, v
+
+
+def decode_train(params, cfg: ModelConfig, memory, tokens, attn_mode="flash",
+                 remat=None, return_hidden=False):
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dt)
+    b, st = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(st)[None], (b, st))
+
+    def body(xx, blk):
+        xx, _ = _self_attn(blk["mixer"], xx, cfg, positions, causal=True,
+                           attn_mode=attn_mode)
+        xx = _cross_attn(blk["cross"], xx, _memory_kv(blk, memory, cfg),
+                         cfg, attn_mode)
+        xx, _, _ = _apply_mlp(blk["mlp"], xx, cfg,
+                              LayerDesc(mlp="gelu"), "train", None)
+        return xx, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    return x @ params["embed"].T.astype(x.dtype)
+
+
+def encdec_loss(params, cfg: ModelConfig, frames, tokens_in, labels,
+                attn_mode="flash", loss_chunk=None, remat=None):
+    memory = encode(params, cfg, frames, attn_mode, remat=remat)
+    if loss_chunk:
+        x = decode_train(params, cfg, memory, tokens_in, attn_mode,
+                         remat=remat, return_hidden=True)
+        return chunked_cross_entropy(x, params["embed"].T, labels,
+                                     chunk=loss_chunk)
+    logits = decode_train(params, cfg, memory, tokens_in, attn_mode,
+                          remat=remat)
+    return cross_entropy_loss(logits, labels)
+
+
+# ------------------------------------------------------------- serving
+def abstract_encdec_cache(cfg: ModelConfig, batch: int, s_cache: int,
+                          s_enc: int):
+    dt = jnp.dtype(cfg.dtype)
+    nd = cfg.n_layers
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    kv = lambda s: jax.ShapeDtypeStruct((nd, batch, s, kvh, hd), dt)
+    return {"k": kv(s_cache), "v": kv(s_cache),
+            "xk": kv(s_enc), "xv": kv(s_enc)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, attn_mode="dense"):
+    """One serve-time decoder step against self- and cross-K/V caches."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][token].astype(dt)       # [B, 1, D]
+    b = token.shape[0]
+    positions = pos[:, None]
+
+    def body(xx, blk_cache):
+        blk, kc, vc, xk, xv = blk_cache
+        xx, nc = _self_attn(blk["mixer"], xx, cfg, positions, causal=True,
+                            attn_mode="dense", cache={"k": kc, "v": vc},
+                            pos=pos)
+        xx = _cross_attn(blk["cross"], xx, (xk, xv), cfg, attn_mode)
+        xx, _, _ = _apply_mlp(blk["mlp"], xx, cfg,
+                              LayerDesc(mlp="gelu"), "decode", None)
+        return xx, (nc["k"], nc["v"])
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T.astype(x.dtype)
+    new_cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+    return logits, new_cache

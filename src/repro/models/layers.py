@@ -1,0 +1,232 @@
+"""Core transformer building blocks (pure functional JAX).
+
+Attention comes in two numerically-identical modes:
+
+- ``dense``  — materialised scores + mask. Used by smoke tests and by the
+  roofline *cost programs* (exact FLOP accounting in the HLO: XLA's
+  cost_analysis counts a scan body once, so cost programs avoid inner scans —
+  see DESIGN.md §7).
+- ``flash``  — lax.scan online-softmax over KV chunks (q chunked too). Used
+  by the deployable train/serve programs: peak memory stays at tile size for
+  32k prefill / 4k train on the big configs. Equivalence is tested.
+
+GQA (n_kv_heads < n_heads), RoPE, optional qk-norm (qwen3), optional sliding
+window (gemma3 local layers), and KV-cache decode (full cache or ring buffer
+for windowed layers) are all supported.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import shard
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt((x32 * x32).mean(-1, keepdims=True) + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta: float = 1e4):
+    """x [..., S, H, hd], positions [..., S] -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def _causal_window_mask(sq, skv, q_off, kv_off, window):
+    """[sq, skv] mask: kv position visible from q position (causal + window)."""
+    qpos = q_off + jnp.arange(sq)[:, None]
+    kpos = kv_off + jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def attention_dense(q, k, v, *, causal=True, window=None, q_off=0, kv_off=0,
+                    softcap=None, kv_mask=None, q_chunk: int | None = 1024):
+    """q [B,Sq,H,hd], k/v [B,Skv,KVH,hd] -> [B,Sq,H,hd]. Exact-FLOP mode.
+
+    Large Sq is processed in an UNROLLED python loop over q chunks (no scan,
+    so cost_analysis stays exact) to bound the fp32 score transients.
+
+    GQA is computed with GROUPED einsums (query heads folded onto their KV
+    head as a group axis) — the broadcast `repeat_kv` materialisation would
+    blow the KV cache up by H/KVH x at decode time (§Perf iteration A:
+    118 GB/token of ICI traffic on dbrx decode came from exactly this)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+
+    def block(qb, q_off_b):
+        sqb = qb.shape[1]
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                            k32) / math.sqrt(hd)
+        if softcap:
+            scores = jnp.tanh(scores / softcap) * softcap
+        if causal or window is not None:
+            m = _causal_window_mask(sqb, k.shape[1], q_off_b, kv_off,
+                                    window)[None, None, None]
+            scores = jnp.where(m, scores, NEG_INF)
+        if kv_mask is not None:  # [B, Skv] validity (decode ring buffers)
+            scores = jnp.where(kv_mask[:, None, None, None, :], scores,
+                               NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v32)
+        return out.reshape(b, sqb, h, hd).astype(q.dtype)
+
+    if q_chunk is None or sq <= q_chunk:
+        return block(qg, q_off)
+    outs = [block(qg[:, i:i + q_chunk], q_off + i)
+            for i in range(0, sq, q_chunk)]
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_flash(q, k, v, *, causal=True, window=None, q_off=0, kv_off=0,
+                    softcap=None, q_chunk=512, kv_chunk=512):
+    """Online-softmax tiled attention (lax.scan over q and kv chunks).
+
+    NOTE: this deployable-path variant still broadcasts KV to H heads per
+    tile (tile-sized, so the cost is bounded by the chunk, not the cache).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // kvh)
+    v = _repeat_kv(v, h // kvh)
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    qpad, kpad = (-sq) % qc, (-skv) % kc
+    qp = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // qc, kp.shape[1] // kc
+    qs = qp.reshape(b, nq, qc, h, hd).transpose(1, 0, 2, 3, 4)
+    ks = kp.reshape(b, nk, kc, h, hd).transpose(1, 0, 2, 3, 4)
+    vs = vp.reshape(b, nk, kc, h, hd).transpose(1, 0, 2, 3, 4)
+    kv_valid = (jnp.arange(nk * kc) < skv).reshape(nk, kc)
+
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        qblk32 = qblk.astype(jnp.float32) / math.sqrt(hd)
+
+        def kv_step(carry, kj_kv):
+            acc, m_run, l_run = carry
+            kj, kblk, vblk, valid = kj_kv
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk32,
+                           kblk.astype(jnp.float32))
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            mask = _causal_window_mask(qc, kc, q_off + qi * qc,
+                                       kv_off + kj * kc, window) \
+                if (causal or window is not None) else jnp.ones((qc, kc), bool)
+            mask = mask & valid[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m_run - m_new)
+            l_new = l_run * scale + p.sum(-1)
+            acc = acc * scale[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, qc, hd), jnp.float32)
+        m0 = jnp.full((b, h, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        (acc, m_f, l_f), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nk), ks, vs, kv_valid))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)  # [b,qc,h,hd]
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * qc, h, hd)
+    return out[:, :sq]
+
+
+def attention(q, k, v, *, mode="dense", **kw):
+    fn = attention_dense if mode == "dense" else attention_flash
+    return fn(q, k, v, **kw)
+
+
+# --------------------------------------------------------------------- MLPs
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ w_down
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = jax.nn.gelu((x @ w_up) + b_up)
+    h = shard(h, "batch", "seq", "ffn")
+    return (h @ w_down) + b_down
+
+
+# ----------------------------------------------------------------- softmax x-ent
+def cross_entropy_loss(logits, labels, z_loss: float = 1e-4):
+    """Mean token cross entropy (+ z-loss for stability at big vocab)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * (lse ** 2).mean()
+    return loss
+
+
+def chunked_cross_entropy(x, head, labels, *, chunk: int = 256,
+                          softcap=None, z_loss: float = 1e-4):
+    """Loss without materialising [B, S, V] logits: scan over sequence
+    chunks, computing (and discarding) one logits chunk at a time, with the
+    chunk rematerialised in backward. Essential at 256k-vocab × 4k-seq scale
+    (full logits would be TBs)."""
+    b, s, d = x.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    n = x.shape[1] // c
+    xs = x.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, c).transpose(1, 0, 2)
+    valid = (jnp.arange(n * c) < s).reshape(n, c)
+
+    @jax.checkpoint
+    def chunk_loss(xc, lc, vc):
+        logits = (xc @ head.astype(xc.dtype)).astype(jnp.float32)
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        per_tok = (lse - ll) + z_loss * lse ** 2
+        return (per_tok * vc[None, :]).sum()
+
+    def body(acc, inp):
+        xc, lc, vc = inp
+        return acc + chunk_loss(xc, lc, vc), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0), (xs, ls, valid))
+    return total / (b * s)

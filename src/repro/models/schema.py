@@ -1,0 +1,74 @@
+"""Declarative parameter schemas: one source of truth per architecture for
+shapes, logical sharding axes and init scales.
+
+From a schema we derive (a) random init, (b) abstract params
+(ShapeDtypeStruct — what the multi-pod dry-run lowers against, no
+allocation), and (c) NamedShardings under the active sharding policy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sharding
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                 # logical axes, len == len(shape)
+    init: str = "normal"        # normal | zeros | ones
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_params(schema, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        elif spec.init == "a_log":   # S4/Mamba A init: log(1..d_state)
+            row = jnp.log(jnp.arange(1, spec.shape[-1] + 1, dtype=jnp.float32))
+            out.append(jnp.broadcast_to(row, spec.shape).astype(dtype))
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = spec.scale if spec.scale is not None else fan_in ** -0.5
+            out.append(jax.random.normal(k, spec.shape, dtype) * scale)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(schema, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), schema,
+        is_leaf=_is_spec)
+
+
+def param_shardings(schema):
+    """Pytree of NamedShardings (or None when no policy is active)."""
+    return jax.tree_util.tree_map(
+        lambda s: sharding.sharding_for_shape(s.shape, *s.axes), schema,
+        is_leaf=_is_spec)
+
+
+def param_specs(schema):
+    """Pytree of PartitionSpecs under the active policy."""
+    return jax.tree_util.tree_map(
+        lambda s: sharding.spec(*s.axes), schema, is_leaf=_is_spec)
+
+
+def count_params(schema) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree_util.tree_leaves(schema, is_leaf=_is_spec))

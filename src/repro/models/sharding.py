@@ -1,0 +1,122 @@
+"""Logical-axis sharding policy.
+
+Model code annotates tensors with *logical* axes ("batch", "seq", "heads",
+"embed", "ffn", "vocab", "expert", ...). A policy maps logical axes to mesh
+axes; when no policy is active (CPU smoke tests) every annotation is a no-op,
+so the same model code runs everywhere.
+
+Default production rules (DESIGN.md §5):
+  batch  -> ("pod", "data")      # DP over pods × data axis
+  heads/ffn/vocab/expert -> "model"   # TP / EP
+  embed  -> "data"               # FSDP/ZeRO weight dimension
+  seq    -> None (or "data" for batch<dp long-context cells)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",
+    "expert_embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "expert": "model",
+    "kv_seq": None,
+    "kv_hd": None,
+    "layers": None,
+    "head_dim": None,
+    "state": None,
+    "conv": None,
+    "unsharded": None,
+}
+
+LONG_CONTEXT_RULES = dict(DEFAULT_RULES, seq=("pod", "data"), batch=None,
+                          kv_seq=("pod", "data"))
+
+
+def set_policy(mesh: Mesh | None, rules: dict | None = None) -> None:
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {})) if mesh else None
+
+
+def get_policy():
+    return getattr(_state, "mesh", None), getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def policy(mesh: Mesh | None, rules: dict | None = None):
+    old = get_policy()
+    set_policy(mesh, rules)
+    try:
+        yield
+    finally:
+        set_policy(*old)
+
+
+def _resolve(rules: dict, mesh: Mesh, logical_axes, shape=None) -> P:
+    parts = []
+    used = set()
+    for i, ax in enumerate(logical_axes):
+        m = rules.get(ax, None) if ax is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        ms = tuple(a for a in ((m,) if isinstance(m, str) else m)
+                   if a in mesh.axis_names and a not in used)
+        if shape is not None and ms:
+            # Drop the mapping if the dimension is not divisible by the
+            # mesh extent (jit in_shardings requires divisibility).
+            ext = 1
+            for a in ms:
+                ext *= mesh.shape[a]
+            if shape[i] % ext != 0:
+                ms = ()
+        used.update(ms)
+        parts.append(ms if len(ms) > 1 else (ms[0] if ms else None))
+    return P(*parts)
+
+
+def spec(*logical_axes) -> P:
+    """PartitionSpec for the active policy (P() of Nones when inactive)."""
+    mesh, rules = get_policy()
+    if mesh is None:
+        return P(*[None] * len(logical_axes))
+    return _resolve(rules, mesh, logical_axes)
+
+
+def shard(x, *logical_axes):
+    """Annotate an intermediate with its logical sharding (no-op w/o policy)."""
+    mesh, rules = get_policy()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _resolve(rules, mesh, logical_axes,
+                                        shape=x.shape)))
+
+
+def sharding_for(*logical_axes):
+    """NamedSharding for in_shardings/out_shardings (None w/o policy)."""
+    mesh, rules = get_policy()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, _resolve(rules, mesh, logical_axes))
+
+
+def sharding_for_shape(shape, *logical_axes):
+    """Like sharding_for, but drops axes that don't divide the dim."""
+    mesh, rules = get_policy()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, _resolve(rules, mesh, logical_axes,
+                                        shape=shape))

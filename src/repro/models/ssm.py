@@ -1,0 +1,260 @@
+"""State-space / linear-recurrence mixers: Mamba (Jamba) and RWKV-6 (Finch).
+
+Both are attention-free token mixers with data-dependent gating of a
+recurrent state; both support three execution paths:
+
+- ``assoc``  — `lax.associative_scan` over the full sequence (log-depth,
+  no while loop: exact HLO FLOP accounting for cost programs).
+- ``chunk``  — `lax.scan` over sequence chunks with parallel math inside a
+  chunk (the deployable training path: O(chunk) memory).
+- ``step``   — single-token recurrence for serve-time decode.
+
+Numerical notes: decays live in log space (log w <= 0), and the RWKV-6
+intra-chunk pairwise term materialises exp(Lc_{t-1} - Lc_s) only for s <= t-1
+where the exponent is <= 0 — no overflow for any decay strength.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0       # 0 -> ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64
+
+
+# =========================================================== diagonal scan
+def _assoc_combine(a, b):
+    (aa, au), (ba, bu) = a, b
+    return aa * ba, au * ba + bu
+
+
+def diag_ssm_scan(alpha, u, h0, mode: str = "chunk", chunk: int = 128):
+    """h_t = alpha_t * h_{t-1} + u_t over axis 1 of [B, S, ...] tensors.
+
+    Returns (h_all [B, S, ...], h_last [B, ...]).
+    """
+    if mode == "assoc":
+        a = jnp.concatenate([jnp.ones_like(alpha[:, :1]), alpha], 1)
+        x = jnp.concatenate([h0[:, None], u], 1)
+        aa, hh = jax.lax.associative_scan(_assoc_combine, (a, x), axis=1)
+        return hh[:, 1:], hh[:, -1]
+    if mode == "step":
+        h = alpha[:, 0] * h0 + u[:, 0]
+        return h[:, None], h
+    # chunked: scan over chunks, associative scan inside
+    b, s = alpha.shape[:2]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    n = s // c
+    al = alpha.reshape((b, n, c) + alpha.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, alpha.ndim + 1)))
+    uu = u.reshape((b, n, c) + u.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, u.ndim + 1)))
+
+    @jax.checkpoint
+    def step(h, inp):
+        # checkpointed: backward recomputes the chunk instead of storing
+        # per-iteration associative-scan residuals (nested-scan blowup).
+        a_c, u_c = inp
+        a1 = jnp.concatenate([jnp.ones_like(a_c[:, :1]), a_c], 1)
+        x1 = jnp.concatenate([h[:, None], u_c], 1)
+        _, hh = jax.lax.associative_scan(_assoc_combine, (a1, x1), axis=1)
+        return hh[:, -1], hh[:, 1:]
+
+    h_last, hs = jax.lax.scan(step, h0, (al, uu))
+    h_all = hs.transpose((1, 0, 2) + tuple(range(3, u.ndim + 1))).reshape(u.shape)
+    return h_all, h_last
+
+
+# ================================================================== Mamba
+def mamba_forward(x, p, mcfg: MambaConfig, state=None, mode: str = "chunk"):
+    """x [B, S, D] -> (y [B, S, D], new_state).
+
+    state = (conv_tail [B, d_conv-1, d_inner], h [B, d_inner, d_state]).
+    """
+    b, s, d = x.shape
+    d_inner = p["in_proj"].shape[1] // 2
+    dt_rank = p["dt_proj"].shape[0]
+    d_state = p["A_log"].shape[1]
+    dc = mcfg.d_conv
+
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                  # [B, S, d_inner]
+
+    conv_tail = state[0] if state is not None else \
+        jnp.zeros((b, dc - 1, d_inner), x.dtype)
+    xin_ext = jnp.concatenate([conv_tail, x_in], 1)      # [B, S+dc-1, di]
+    # causal depthwise conv: windowed dot with kernel [dc, di]
+    xc = sum(xin_ext[:, i:i + s] * p["conv_w"][i][None, None]
+             for i in range(dc)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    new_conv_tail = xin_ext[:, s:]                       # last dc-1 inputs
+
+    xdb = xc @ p["x_proj"]
+    dt_raw = xdb[..., :dt_rank]
+    b_ssm = xdb[..., dt_rank:dt_rank + d_state]
+    c_ssm = xdb[..., dt_rank + d_state:]
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])   # [B,S,di]
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [di, ds]
+    h0 = state[1].astype(jnp.float32) if state is not None else \
+        jnp.zeros((b, d_inner, d_state), jnp.float32)
+
+    if mode == "chunk" and s > 1:
+        # Chunk-local alpha/u: the [B, S, d_inner, d_state] tensors only
+        # ever exist at chunk granularity inside the checkpointed step.
+        c = min(128, s)
+        assert s % c == 0, (s, c)
+        n = s // c
+
+        def split(t):
+            return t.reshape((b, n, c) + t.shape[2:]).transpose(
+                (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+        @jax.checkpoint
+        def step(h, inp):
+            xc_c, dt_c, b_c, c_c = inp
+            alpha_c = jnp.exp(dt_c.astype(jnp.float32)[..., None] *
+                              a[None, None])
+            u_c = (dt_c * xc_c).astype(jnp.float32)[..., None] * \
+                b_c.astype(jnp.float32)[:, :, None, :]
+            a1 = jnp.concatenate([jnp.ones_like(alpha_c[:, :1]), alpha_c], 1)
+            x1 = jnp.concatenate([h[:, None], u_c], 1)
+            _, hh = jax.lax.associative_scan(_assoc_combine, (a1, x1), axis=1)
+            y_c = (hh[:, 1:] * c_c.astype(jnp.float32)[:, :, None, :]).sum(-1)
+            return hh[:, -1], y_c.astype(x.dtype)
+
+        h_last, ys = jax.lax.scan(
+            step, h0, (split(xc), split(dt), split(b_ssm), split(c_ssm)))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, d_inner).astype(jnp.float32)
+    else:
+        alpha = jnp.exp(dt.astype(jnp.float32)[..., None] * a[None, None])
+        u = (dt * xc).astype(jnp.float32)[..., None] * \
+            b_ssm.astype(jnp.float32)[:, :, None, :]             # [B,S,di,ds]
+        h_all, h_last = diag_ssm_scan(alpha, u, h0, mode=mode)
+        y = (h_all * c_ssm.astype(jnp.float32)[:, :, None, :]).sum(-1)
+    y = y + p["D"].astype(jnp.float32)[None, None] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y, (new_conv_tail, h_last.astype(jnp.float32))
+
+
+# ================================================================== RWKV-6
+def _rwkv_mix(x, x_prev, mu):
+    """Token shift interpolation; x_prev is x_{t-1} (state for decode)."""
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], 1)
+    return x + (xs - x) * mu[None, None]
+
+
+def rwkv_time_mix(x, p, rcfg: RWKVConfig, state=None, mode: str = "chunk",
+                  chunk: int = 32):
+    """RWKV-6 time mixing. x [B, S, D] -> (y, new_state).
+
+    state = (x_prev [B, D], s [B, H, dk, dv] recurrent matrix state).
+    Recurrence (per head):  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+                            S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    with data-dependent decay w_t = exp(-exp(w0 + tanh(x_w W1) W2)).
+    """
+    b, s, d = x.shape
+    dk = rcfg.head_dim
+    h = p["w_r"].shape[1] // dk
+    x_prev = state[0] if state is not None else jnp.zeros((b, d), x.dtype)
+    s0 = state[1].astype(jnp.float32) if state is not None else \
+        jnp.zeros((b, h, dk, dk), jnp.float32)
+
+    xr = _rwkv_mix(x, x_prev, p["mu_r"])
+    xk = _rwkv_mix(x, x_prev, p["mu_k"])
+    xv = _rwkv_mix(x, x_prev, p["mu_v"])
+    xw = _rwkv_mix(x, x_prev, p["mu_w"])
+    xg = _rwkv_mix(x, x_prev, p["mu_g"])
+    r = (xr @ p["w_r"]).reshape(b, s, h, dk).astype(jnp.float32)
+    k = (xk @ p["w_k"]).reshape(b, s, h, dk).astype(jnp.float32)
+    v = (xv @ p["w_v"]).reshape(b, s, h, dk).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+    logw = -jnp.exp(p["w0"].reshape(h, dk)[None, None] +
+                    (jnp.tanh(xw @ p["w1"]) @ p["w2"]).reshape(b, s, h, dk)
+                    .astype(jnp.float32))                       # <= 0
+    u = p["u"].astype(jnp.float32)                              # [H, dk]
+
+    def chunk_step(s_in, inp):
+        rc, kc, vc, lwc = inp                    # [B, Tc, H, dk]
+        tc = rc.shape[1]
+        lc = jnp.cumsum(lwc, axis=1)             # [B, Tc, H, dk]
+        lprev = jnp.concatenate([jnp.zeros_like(lc[:, :1]), lc[:, :-1]], 1)
+        # inter-chunk: r_t decayed against entering state
+        y_inter = jnp.einsum("bthd,bhde->bthe", rc * jnp.exp(lprev), s_in)
+        # intra-chunk pairwise (s < t), exponent lprev_t - lc_s <= 0
+        pair = lprev[:, :, None] - lc[:, None]   # [B, T, S, H, dk]
+        tidx = jnp.arange(tc)
+        mask = (tidx[:, None] > tidx[None, :])[None, :, :, None, None]
+        e = jnp.where(mask, jnp.exp(jnp.minimum(pair, 0.0)), 0.0)
+        att = jnp.einsum("bthd,bshd,btshd->bhts", rc, kc, e)
+        y_intra = jnp.einsum("bhts,bshe->bthe", att, vc)
+        # current-token bonus
+        y_bonus = jnp.einsum("bthd,bthd,bthe->bthe",
+                             rc, u[None, None] * kc, vc)
+        # state update to end of chunk
+        decay_out = jnp.exp(lc[:, -1])                          # [B, H, dk]
+        kdec = kc * jnp.exp(lc[:, -1][:, None] - lc)
+        s_out = decay_out[..., None] * s_in + \
+            jnp.einsum("bshd,bshe->bhde", kdec, vc)
+        return s_out, y_inter + y_intra + y_bonus
+
+    if mode == "step":
+        rc, kc, vc = r[:, 0], k[:, 0], v[:, 0]
+        y = jnp.einsum("bhd,bhde->bhe", rc, s0) + \
+            jnp.einsum("bhd,bhd,bhe->bhe", rc, u[None] * kc, vc)
+        s_new = jnp.exp(logw[:, 0])[..., None] * s0 + \
+            jnp.einsum("bhd,bhe->bhde", kc, vc)
+        y = y[:, None]                                          # [B,1,H,dv]
+    else:
+        tc = min(chunk, s)
+        assert s % tc == 0, (s, tc)
+        n = s // tc
+        def split(t):
+            return t.reshape(b, n, tc, h, dk).transpose(1, 0, 2, 3, 4)
+        xs_in = (split(r), split(k), split(v), split(logw))
+        if mode == "assoc" or n == 1:
+            # single-chunk (cost programs use s == chunk)
+            ys = []
+            s_run = s0
+            for i in range(n):
+                s_run, y_i = chunk_step(s_run, tuple(t[i] for t in xs_in))
+                ys.append(y_i)
+            y, s_new = jnp.concatenate(ys, 1), s_run
+        else:
+            s_new, ys = jax.lax.scan(jax.checkpoint(chunk_step), s0, xs_in)
+            y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dk)
+
+    # per-head group norm, gate, output
+    y32 = y.reshape(b, -1, h, dk)
+    mean = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    y32 = (y32 - mean) * jax.lax.rsqrt(var + 1e-5)
+    y_out = (y32.reshape(b, -1, h * dk).astype(x.dtype) *
+             p["ln_x"][None, None]) * g
+    out = y_out @ p["w_o"]
+    return out, (x[:, -1], s_new)
+
+
+def rwkv_channel_mix(x, p, state=None):
+    """RWKV FFN with token shift. state = x_prev [B, D]."""
+    b, s, d = x.shape
+    x_prev = state if state is not None else jnp.zeros((b, d), x.dtype)
+    xk = _rwkv_mix(x, x_prev, p["mu_kc"])
+    xr = _rwkv_mix(x, x_prev, p["mu_rc"])
+    rr = jax.nn.sigmoid(xr @ p["w_rc"])
+    kk = jnp.square(jax.nn.relu(xk @ p["w_kc"]))
+    return rr * (kk @ p["w_vc"]), x[:, -1]

@@ -1,0 +1,3 @@
+from . import adamw, grad_compress, schedule  # noqa: F401
+from .adamw import (AdamWConfig, abstract_opt_state, adamw_update,  # noqa: F401
+                    init_opt_state)

@@ -1,0 +1,14 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int = 100, total: int = 10_000,
+                  floor: float = 0.1):
+    """Multiplier in [floor, 1]: linear warmup then cosine decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(1, warmup), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(1, total - warmup), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return warm * cos

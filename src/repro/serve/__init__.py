@@ -1,0 +1,3 @@
+from . import engine, rag  # noqa: F401
+from .engine import ServeEngine  # noqa: F401
+from .rag import RAGPipeline  # noqa: F401

@@ -1,0 +1,56 @@
+"""Batched serving engine: prefill + decode loop over the Model API.
+
+Single-program batching (all requests padded to a common prefill length,
+aligned decode steps) — the serving shape the decode_* dry-run cells lower.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+
+
+@dataclass
+class ServeEngine:
+    model: Model
+    params: dict
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, attn_mode="dense"))
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(self, tokens: np.ndarray, max_new: int = 16,
+                 frontend=None) -> np.ndarray:
+        """tokens [B, S] -> generated [B, max_new]."""
+        b, s = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens)}
+        if frontend is not None:
+            batch["frontend"] = jnp.asarray(frontend)
+        if self.model.cfg.encoder_layers:
+            batch = {"frames": jnp.asarray(frontend),
+                     "tokens": jnp.asarray(tokens)}
+        logits, cache = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(self.seed)
+        out = []
+        tok = self._sample(logits[:, -1], key)
+        pos = jnp.full((b,), s, jnp.int32)
+        for i in range(max_new):
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, cache, tok[:, None], pos)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1], sub)
+            pos = pos + 1
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature, -1).astype(jnp.int32)

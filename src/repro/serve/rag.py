@@ -1,0 +1,75 @@
+"""Retrieval-augmented serving: the paper's ANNS layer feeding an LM.
+
+This is where DecoupleVS meets the assigned LM architectures (DESIGN.md §4):
+documents are embedded (mean-pooled embedding-table rows — a stand-in for a
+production encoder), indexed by a DecoupleVS decoupled compressed store, and
+retrieved at serve time to prepend context before generation. The retrieval
+tier's I/O accounting (block reads, cache hits) is surfaced per request so
+the serving dashboard sees the paper's metrics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.graph.pq import encode_pq, train_pq
+from repro.core.graph.vamana import build_vamana
+from repro.core.search.engine import EngineConfig, search_decoupled
+from repro.core.storage.index_store import CompressedIndexStore
+from repro.core.storage.vector_store import DecoupledVectorStore, StoreConfig
+from repro.serve.engine import ServeEngine
+
+
+def embed_tokens(params, tokens: np.ndarray) -> np.ndarray:
+    """Mean-pooled embedding rows -> [B, d_model] float32 (L2-normalised)."""
+    emb = np.asarray(params["embed"], np.float32)
+    v = emb[np.asarray(tokens, np.int64)].mean(axis=-2)
+    return v / (np.linalg.norm(v, axis=-1, keepdims=True) + 1e-9)
+
+
+@dataclass
+class RAGPipeline:
+    engine: ServeEngine
+    doc_tokens: np.ndarray = None        # [n_docs, doc_len]
+    k: int = 2
+    cache_bytes: int = 1 << 16
+
+    def __post_init__(self):
+        params = self.engine.params
+        docs = self.doc_tokens
+        vecs = embed_tokens(params, docs)
+        graph = build_vamana(vecs, r=16, l_build=32, seed=0)
+        self.cb = train_pq(vecs, m=8, seed=0)
+        self.codes = encode_pq(vecs, self.cb)
+        self.index_store = CompressedIndexStore.from_graph(
+            graph.adjacency, graph.medoid, 16, cache_bytes=self.cache_bytes)
+        self.vector_store = DecoupledVectorStore(StoreConfig(
+            dim=vecs.shape[1], dtype=np.float32, segment_capacity=4096))
+        self.vector_store.append(np.arange(len(vecs)), vecs)
+        self.vector_store.seal_active()
+        self.cfg = EngineConfig(l_size=32, k=self.k, latency_aware=True,
+                                compressed=True)
+
+    def retrieve(self, query_tokens: np.ndarray):
+        """-> (doc ids [B, k], per-query stats)."""
+        q = embed_tokens(self.engine.params, query_tokens)
+        ids, stats = [], []
+        for row in q:
+            i, s = search_decoupled(self.index_store, self.vector_store,
+                                    self.codes, self.cb, row, self.cfg)
+            ids.append(np.pad(i[:self.k], (0, max(0, self.k - len(i))),
+                              constant_values=0))
+            stats.append(s)
+        return np.stack(ids), stats
+
+    def answer(self, query_tokens: np.ndarray, max_new: int = 8):
+        """Retrieve-then-generate. -> (generated tokens, retrieval stats)."""
+        doc_ids, stats = self.retrieve(query_tokens)
+        ctx = self.doc_tokens[doc_ids].reshape(len(query_tokens), -1)
+        prompt = np.concatenate([ctx, query_tokens], axis=1)
+        gen = self.engine.generate(prompt, max_new=max_new)
+        return gen, {"retrieved": doc_ids,
+                     "graph_ios": sum(s.graph_ios for s in stats),
+                     "vector_ios": sum(s.vector_ios for s in stats),
+                     "cache_hits": sum(s.cache_hits for s in stats)}

@@ -1,0 +1,2 @@
+from . import trainer  # noqa: F401
+from .trainer import TrainConfig, TrainLoop, make_train_step  # noqa: F401

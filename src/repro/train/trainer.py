@@ -1,0 +1,109 @@
+"""Training loop substrate: microbatched gradient accumulation, remat
+policies, AdamW, LR schedule, checkpoint/restart hooks, straggler/heartbeat
+integration. `make_train_step` builds the jit-able step the multi-pod
+dry-run lowers (forward + backward + optimizer update, one program).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.schedule import warmup_cosine
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1           # grad-accumulation steps per train step
+    remat: str | None = "dots"      # None | "dots" | "full"
+    attn_mode: str = "flash"
+    ssm_mode: str = "chunk"
+    loss_chunk: int | None = None   # chunked x-ent (big-vocab configs)
+    remat_group: int = 1            # nested-scan activation checkpoint group
+    warmup: int = 100
+    total_steps: int = 10_000
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, tcfg: TrainConfig):
+    """-> train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With microbatches > 1, the batch's leading axis is split and gradients
+    are accumulated with a lax.scan (memory = one microbatch of activations).
+    """
+    def loss_fn(p, b):
+        return model.loss(p, b, attn_mode=tcfg.attn_mode,
+                          ssm_mode=tcfg.ssm_mode, remat=tcfg.remat,
+                          loss_chunk=tcfg.loss_chunk,
+                          remat_group=tcfg.remat_group)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = tcfg.microbatches
+                return x.reshape((mb, b // mb) + x.shape[1:])
+            mbatch = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), grad_acc, g)
+                return (loss_acc + l, grad_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.float32(0), zeros),
+                                            mbatch)
+            loss = loss / tcfg.microbatches
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tcfg.microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        lr_scale = warmup_cosine(opt_state["step"], warmup=tcfg.warmup,
+                                 total=tcfg.total_steps)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, opt_cfg, lr_scale=lr_scale,
+            model_dtype=jnp.dtype(model.cfg.dtype))
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclass
+class TrainLoop:
+    """Host-side loop: data pipeline, checkpointing, fault tolerance hooks."""
+    model: Model
+    opt_cfg: AdamWConfig = field(default_factory=AdamWConfig)
+    tcfg: TrainConfig = field(default_factory=TrainConfig)
+    checkpoint_every: int = 0
+    checkpoint_dir: str | None = None
+
+    def run(self, params, batches, *, opt_state=None, hooks=(),
+            start_step: int = 0):
+        """batches: iterable of batch pytrees. Returns (params, opt, history)."""
+        step_fn = jax.jit(make_train_step(self.model, self.opt_cfg, self.tcfg))
+        opt_state = opt_state or init_opt_state(params)
+        history = []
+        for i, batch in enumerate(batches):
+            step = start_step + i
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            history.append({"step": step, "loss": loss,
+                            "grad_norm": float(metrics["grad_norm"]),
+                            "sec": time.perf_counter() - t0})
+            for h in hooks:
+                h(step, params, opt_state, history[-1])
+            if self.checkpoint_every and self.checkpoint_dir and \
+                    (step + 1) % self.checkpoint_every == 0:
+                from repro.ft.checkpoint import save_checkpoint
+                save_checkpoint(self.checkpoint_dir, step + 1, params,
+                                opt_state)
+        return params, opt_state, history

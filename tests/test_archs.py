@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+train-grad step + prefill/decode on CPU, asserting shapes and finiteness."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, reduce_config
+from repro.models.api import Model
+from repro.data.synthetic import make_token_batch
+
+B, S = 2, 32
+
+
+def _batch(model, rng_seed=0):
+    cfg = model.cfg
+    rng = np.random.default_rng(rng_seed)
+    if cfg.encoder_layers:
+        return {
+            "frames": jnp.asarray(rng.normal(size=(B, S, cfg.frontend_dim))
+                                  .astype(np.float32)),
+            "tokens": jnp.asarray(make_token_batch(cfg.vocab, B, 16)),
+            "labels": jnp.asarray(make_token_batch(cfg.vocab, B, 16, seed=1)),
+        }
+    text = S - (cfg.frontend_len if cfg.frontend else 0)
+    b = {"tokens": jnp.asarray(make_token_batch(cfg.vocab, B, text)),
+         "labels": jnp.asarray(make_token_batch(cfg.vocab, B, text, seed=1))}
+    if cfg.frontend:
+        b["frontend"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.frontend_dim))
+            .astype(np.float32))
+    return b
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_train_step(arch):
+    cfg = reduce_config(get_config(arch))
+    model = Model.from_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(model)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: model.loss(p, batch)))(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    gnorm = jax.tree_util.tree_reduce(
+        lambda a, g: a + float(jnp.sum(jnp.abs(g))), grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_prefill_decode(arch):
+    cfg = reduce_config(get_config(arch))
+    model = Model.from_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(model)
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert logits.shape[-1] == cfg.vocab
+    ntok = batch["tokens"].shape[1]
+    pos = jnp.full((B,), ntok, jnp.int32)
+    tok = batch["tokens"][:, -1:]
+    logits2, cache2 = jax.jit(model.decode_step)(params, cache, tok, pos)
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+def test_full_configs_match_assignment():
+    """The full (non-reduced) configs carry the assigned hyperparameters."""
+    c = get_config("gemma3-27b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (62, 5376, 32, 16, 21504, 262144)
+    assert len(c.all_descs) == 62
+    assert sum(d.window is None for d in c.all_descs) == 10  # 5:1 local:global
+    c = get_config("qwen3-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (64, 5120, 64, 8, 25600, 151936) and c.qk_norm
+    c = get_config("starcoder2-15b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (40, 6144, 48, 4, 24576, 49152)
+    c = get_config("internlm2-1.8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (24, 2048, 16, 8, 8192, 92544)
+    c = get_config("seamless-m4t-medium")
+    assert (c.n_layers, c.encoder_layers, c.d_model, c.vocab) == \
+        (12, 12, 1024, 256256)  # vocab padded from 256206 (TP divisibility)
+    c = get_config("pixtral-12b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (40, 5120, 14336, 131072)
+    c = get_config("jamba-v0.1-52b")
+    assert (c.n_layers, c.d_model, c.moe.n_experts, c.moe.top_k) == \
+        (32, 4096, 16, 2)
+    descs = c.all_descs
+    assert sum(d.mixer == "attn" for d in descs) == 4          # 1:7 ratio
+    assert sum(d.mlp == "moe" for d in descs) == 16            # every 2nd
+    c = get_config("dbrx-132b")
+    assert (c.n_layers, c.d_model, c.moe.n_experts, c.moe.top_k, c.vocab) == \
+        (40, 6144, 16, 4, 100352)
+    c = get_config("deepseek-moe-16b")
+    assert (c.n_layers, c.moe.n_experts, c.moe.top_k, c.moe.n_shared) == \
+        (28, 64, 6, 2)
+    c = get_config("rwkv6-1.6b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (24, 2048, 7168, 65536)
+    assert all(d.mixer == "rwkv" for d in c.all_descs)
+
+
+def test_param_counts_plausible():
+    """Full configs land near the named parameter counts (sanity on schemas)."""
+    expected = {
+        "gemma3-27b": (20e9, 32e9),
+        "qwen3-32b": (28e9, 36e9),
+        "starcoder2-15b": (13e9, 18e9),
+        "internlm2-1.8b": (1.5e9, 2.3e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "dbrx-132b": (115e9, 145e9),
+        "deepseek-moe-16b": (14e9, 20e9),
+        "rwkv6-1.6b": (1.3e9, 2.2e9),
+        "pixtral-12b": (10e9, 14e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = Model.from_config(get_config(arch)).n_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of [{lo/1e9}, {hi/1e9}]"

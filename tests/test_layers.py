@@ -1,0 +1,121 @@
+"""Equivalence of execution modes: the roofline cost programs (dense attn,
+assoc scans) must compute the same function as the deployable programs
+(flash attn, chunked scans) and the serve-time step recurrences."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention_dense, attention_flash
+from repro.models.ssm import (MambaConfig, RWKVConfig, diag_ssm_scan,
+                              mamba_forward, rwkv_time_mix)
+
+
+@pytest.mark.parametrize("sq,skv,h,kvh,window", [
+    (16, 16, 4, 2, None), (32, 32, 4, 4, 8), (64, 64, 8, 2, None),
+    (1, 40, 4, 2, None),
+])
+def test_flash_equals_dense(sq, skv, h, kvh, window):
+    rng = np.random.default_rng(0)
+    b, hd = 2, 16
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, skv, kvh, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, skv, kvh, hd)).astype(np.float32))
+    causal = sq == skv
+    d = attention_dense(q, k, v, causal=causal, window=window)
+    f = attention_flash(q, k, v, causal=causal, window=window,
+                        q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(f), rtol=2e-4,
+                               atol=2e-4)
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (128, 128), (96, 32)])
+def test_diag_ssm_modes_agree(s, chunk):
+    rng = np.random.default_rng(1)
+    b, di, ds = 2, 8, 4
+    alpha = jnp.asarray(np.exp(-rng.uniform(0.01, 2.0, size=(b, s, di, ds)))
+                        .astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(b, s, di, ds)).astype(np.float32))
+    h0 = jnp.asarray(rng.normal(size=(b, di, ds)).astype(np.float32))
+    ha, la = diag_ssm_scan(alpha, u, h0, mode="assoc")
+    hc, lc = diag_ssm_scan(alpha, u, h0, mode="chunk", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(ha), np.asarray(hc), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lc), rtol=1e-4,
+                               atol=1e-5)
+    # sequential truth
+    h = np.asarray(h0)
+    for t in range(s):
+        h = np.asarray(alpha[:, t]) * h + np.asarray(u[:, t])
+    np.testing.assert_allclose(h, np.asarray(la), rtol=1e-3, atol=1e-4)
+
+
+def _mamba_params(key, d, mcfg):
+    di = mcfg.expand * d
+    dtr = -(-d // 16)
+    ks = jax.random.split(key, 8)
+    n = lambda k, s: jax.random.normal(k, s, jnp.float32) * 0.3
+    return {
+        "in_proj": n(ks[0], (d, 2 * di)),
+        "conv_w": n(ks[1], (mcfg.d_conv, di)),
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": n(ks[2], (di, dtr + 2 * mcfg.d_state)),
+        "dt_proj": n(ks[3], (dtr, di)),
+        "dt_bias": jnp.zeros((di,)),
+        "A_log": jnp.log(jnp.arange(1, mcfg.d_state + 1, dtype=jnp.float32))
+                 * jnp.ones((di, mcfg.d_state)),
+        "D": jnp.ones((di,)),
+        "out_proj": n(ks[4], (di, d)),
+    }
+
+
+def test_mamba_prefill_then_step_equals_full():
+    """decode recurrence continues exactly where prefill's state left off."""
+    mcfg = MambaConfig(d_state=4, d_conv=4, expand=2)
+    d, s = 16, 24
+    p = _mamba_params(jax.random.PRNGKey(0), d, mcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, d)) * 0.5
+    y_full, _ = mamba_forward(x, p, mcfg, mode="chunk")
+    y_pre, st = mamba_forward(x[:, :s - 1], p, mcfg, mode="chunk")
+    y_step, _ = mamba_forward(x[:, s - 1:], p, mcfg, state=st, mode="step")
+    np.testing.assert_allclose(np.asarray(y_full[:, :s - 1]),
+                               np.asarray(y_pre), rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y_full[:, -1]),
+                               np.asarray(y_step[:, 0]), rtol=2e-3, atol=2e-4)
+
+
+def _rwkv_params(key, d, rcfg):
+    dk = rcfg.head_dim
+    h = d // dk
+    ks = jax.random.split(key, 10)
+    n = lambda k, s: jax.random.normal(k, s, jnp.float32) * 0.3
+    z = lambda s: jnp.zeros(s, jnp.float32)
+    return {
+        "mu_r": z((d,)), "mu_k": z((d,)), "mu_v": z((d,)),
+        "mu_w": z((d,)), "mu_g": z((d,)),
+        "w_r": n(ks[0], (d, h * dk)), "w_k": n(ks[1], (d, h * dk)),
+        "w_v": n(ks[2], (d, h * dk)), "w_g": n(ks[3], (d, h * dk)),
+        "w_o": n(ks[4], (h * dk, d)),
+        "w0": z((h * dk,)) - 0.5, "w1": n(ks[5], (d, 8)),
+        "w2": n(ks[6], (8, h * dk)) * 0.1,
+        "u": n(ks[7], (h, dk)), "ln_x": jnp.ones((h * dk,)),
+    }
+
+
+def test_rwkv_chunked_equals_stepwise():
+    rcfg = RWKVConfig(head_dim=8, decay_lora=8)
+    d, s = 16, 64
+    p = _rwkv_params(jax.random.PRNGKey(0), d, rcfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, d)) * 0.5
+    y_chunk, (xp, sstate) = rwkv_time_mix(x, p, rcfg, mode="chunk", chunk=16)
+    # stepwise truth
+    st = None
+    ys = []
+    for t in range(s):
+        y_t, st = rwkv_time_mix(x[:, t:t + 1], p, rcfg, state=st, mode="step")
+        ys.append(np.asarray(y_t[:, 0]))
+    y_steps = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_steps, rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sstate), np.asarray(st[1]),
+                               rtol=1e-3, atol=1e-3)

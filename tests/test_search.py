@@ -1,0 +1,84 @@
+"""Graph build + device beam search behaviour (recall, losslessness of the
+compressed index, latency-aware search mechanics)."""
+import numpy as np
+import pytest
+
+from repro.core.index import build_device_index, recall_at_k
+from repro.core.search.beam import SearchParams, search
+from repro.data.synthetic import ground_truth, make_queries, make_vector_dataset
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    vecs = make_vector_dataset("prop-like", n=1200, dim=32, seed=0).astype(np.float32)
+    index, graph, cb = build_device_index(vecs, r=24, l_build=48, pq_m=8, seed=0)
+    queries = make_queries("prop-like", 32, 32).astype(np.float32)
+    gt = ground_truth(vecs, queries, k=10)
+    return vecs, index, graph, queries, gt
+
+
+def _params(index, **kw):
+    defaults = dict(l_size=48, beam_width=4, k=10, rerank_batch=10,
+                    r_max=24, universe=index.pq_codes.shape[0], max_iters=128)
+    defaults.update(kw)
+    return SearchParams(**defaults)
+
+
+def test_recall_above_09(small_index):
+    vecs, index, graph, queries, gt = small_index
+    p = _params(index, use_ef=True)
+    ids, dists, stats = search(index, queries, p)
+    rec = recall_at_k(np.asarray(ids), gt, 10)
+    assert rec >= 0.9, f"recall@10 = {rec}"
+
+
+def test_compressed_index_is_lossless(small_index):
+    """EF-compressed traversal must return EXACTLY what raw traversal returns
+    (lossless compression — the paper's core fidelity requirement, Q1)."""
+    vecs, index, graph, queries, gt = small_index
+    ids_ef, d_ef, _ = search(index, queries, _params(index, use_ef=True))
+    ids_raw, d_raw, _ = search(index, queries, _params(index, use_ef=False))
+    np.testing.assert_array_equal(np.asarray(ids_ef), np.asarray(ids_raw))
+    np.testing.assert_allclose(np.asarray(d_ef), np.asarray(d_raw), rtol=1e-6)
+
+
+def test_exact_distances_returned(small_index):
+    """Re-ranked results carry full-precision (not PQ) distances."""
+    vecs, index, graph, queries, gt = small_index
+    ids, dists, _ = search(index, queries, _params(index))
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    for qi in range(4):
+        true = ((vecs[ids[qi]] - queries[qi][None]) ** 2).sum(-1)
+        np.testing.assert_allclose(dists[qi], true, rtol=1e-4)
+
+
+def test_latency_aware_stats(small_index):
+    vecs, index, graph, queries, gt = small_index
+    ids, dists, stats = search(index, queries, _params(index))
+    iters = np.asarray(stats.iters)
+    fetched = np.asarray(stats.lists_fetched)
+    batches = np.asarray(stats.rerank_batches)
+    exact = np.asarray(stats.exact_dists)
+    assert np.all(iters > 0) and np.all(iters <= 128)
+    assert np.all(fetched <= iters * 4)  # at most W lists per round
+    assert np.all(exact == 10 + batches * 10)  # K + batches*B
+    # Early termination must bite for at least some queries.
+    assert np.any(batches < 16)
+
+
+def test_larger_l_does_not_reduce_recall(small_index):
+    vecs, index, graph, queries, gt = small_index
+    r_small = recall_at_k(np.asarray(search(index, queries, _params(index, l_size=16))[0]), gt, 10)
+    r_big = recall_at_k(np.asarray(search(index, queries, _params(index, l_size=96))[0]), gt, 10)
+    assert r_big >= r_small - 0.02
+
+
+def test_vamana_graph_properties(small_index):
+    vecs, index, graph, queries, gt = small_index
+    mean_deg, max_deg = graph.degree_stats()
+    assert max_deg <= 24
+    assert mean_deg > 4
+    # Graph must be searchable from the medoid: every search above found
+    # something real; also adjacency ids are in range.
+    for adj in graph.adjacency[:100]:
+        assert np.all((adj >= 0) & (adj < graph.n))

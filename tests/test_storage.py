@@ -1,0 +1,179 @@
+"""Hierarchical layouts, compression stores, and the paper's §3.3 arithmetic."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.storage import BLOCK_SIZE, DecoupledVectorStore, StoreConfig
+from repro.core.storage.colocated import ColocatedStore
+from repro.core.storage.index_store import CompressedIndexStore, LRUCache, RawIndexStore
+from repro.core.storage.layout import (beta_for_chunk, chunk_metadata_bytes,
+                                       chunk_size_for_beta, locate_block,
+                                       pack_blocks)
+from repro.data.synthetic import make_vector_dataset
+
+
+# ----------------------------------------------------------------- layout
+@given(st.floats(0.002, 0.2), st.integers(32, 2048))
+@settings(max_examples=50, deadline=None)
+def test_beta_chunk_inverse(beta, v_bytes):
+    c = chunk_size_for_beta(beta, v_bytes, alpha=1.0)
+    assert abs(beta_for_chunk(c, v_bytes, alpha=1.0) - beta) < 0.05 * beta + 1e-5
+
+
+def test_paper_beta_example():
+    # C=4 MiB keeps beta within 0.1% for all evaluated datasets (§4.5).
+    for v in (512, 128, 100):  # fp32x128, uint8x128, int8x100
+        assert beta_for_chunk(4 << 20, v, alpha=1.0) < 0.0012
+
+
+def test_chunk_metadata_formula():
+    # per-chunk metadata = 4*(alpha*C/4096 + 3) + V
+    assert chunk_metadata_bytes(4 << 20, 512, 1.0) == 4 * (1024 + 3) + 512
+
+
+@given(st.integers(1, 400), st.integers(4, 900), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_pack_blocks_roundtrip(m, max_len, seed):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(1, max_len, size=m)
+    recs = [rng.integers(0, 256, size=l, dtype=np.uint8) for l in lens]
+    ids = np.sort(rng.choice(10**6, size=m, replace=False))
+    pk = pack_blocks(ids, recs)
+    assert pk.physical_bytes % BLOCK_SIZE == 0
+    for i in range(m):
+        np.testing.assert_array_equal(pk.record_bytes(i), recs[i])
+        b = locate_block(pk.block_first_id, int(ids[i]))
+        assert b == pk.rec_block[i]
+
+
+# ----------------------------------------------------------- vector store
+@pytest.fixture(scope="module")
+def vec_data():
+    return make_vector_dataset("sift-like", n=3000, dim=32, seed=0)
+
+
+def _store(data, compress=True, seg_cap=1000, chunk_bytes=8192):
+    cfg = StoreConfig(dim=data.shape[1], dtype=data.dtype,
+                      segment_capacity=seg_cap, chunk_bytes=chunk_bytes,
+                      compress=compress)
+    s = DecoupledVectorStore(cfg)
+    s.append(np.arange(len(data)), data)
+    s.seal_active()
+    return s
+
+
+def test_vector_store_roundtrip(vec_data):
+    s = _store(vec_data)
+    ids = np.array([0, 5, 999, 1000, 2500, 2999])
+    np.testing.assert_array_equal(s.get(ids), vec_data[ids])
+
+
+def test_vector_store_compresses(vec_data):
+    s = _store(vec_data, compress=True)
+    raw = _store(vec_data, compress=False)
+    assert s.physical_bytes < raw.physical_bytes
+    assert s.physical_bytes < vec_data.nbytes * 1.1
+
+
+def test_vector_store_io_accounting(vec_data):
+    s = _store(vec_data)
+    r0 = s.io.reads
+    s.get(np.array([42]))
+    assert s.io.reads == r0 + 1          # exactly one block for one vector
+
+
+def test_vector_store_beta_bound(vec_data):
+    s = _store(vec_data, chunk_bytes=64 << 10)
+    v = s.cfg.v_bytes
+    beta_budget = beta_for_chunk(64 << 10, v, alpha=1.0)
+    assert s.beta_actual() <= beta_budget * 1.5 + 0.01
+
+
+def test_gc_reclaims_space(vec_data):
+    s = _store(vec_data, seg_cap=1000)
+    before = s.physical_bytes
+    dead = np.arange(0, 900)             # 90% of segment 0 stale
+    s.mark_stale(dead)
+    reclaimed = s.gc(threshold=0.3)
+    assert reclaimed >= 1
+    assert s.physical_bytes < before
+    live = np.array([950, 1500, 2999])
+    np.testing.assert_array_equal(s.get(live), vec_data[live])
+    for d in (0, 5, 899):
+        with pytest.raises(KeyError):
+            s.get(np.array([d]))
+
+
+def test_mutable_segment_reads(vec_data):
+    cfg = StoreConfig(dim=32, dtype=vec_data.dtype, segment_capacity=10**6)
+    s = DecoupledVectorStore(cfg)
+    s.append(np.arange(100), vec_data[:100])
+    np.testing.assert_array_equal(s.get(np.array([7, 42])), vec_data[[7, 42]])
+
+
+# ------------------------------------------------------------ index store
+def _ring_graph(n, r):
+    return [np.sort((i + 1 + np.arange(r)) % n).astype(np.int64) for i in range(n)]
+
+
+def test_index_store_roundtrip():
+    adj = _ring_graph(500, 16)
+    s = CompressedIndexStore.from_graph(adj, medoid=0, r=16)
+    for vid in (0, 1, 250, 499):
+        np.testing.assert_array_equal(np.sort(s.get_neighbors(vid)),
+                                      np.sort(adj[vid]))
+
+
+def test_index_store_smaller_than_raw():
+    adj = _ring_graph(2000, 32)
+    comp = CompressedIndexStore.from_graph(adj, medoid=0, r=32)
+    raw = RawIndexStore.from_graph(adj, medoid=0, r=32)
+    assert comp.physical_bytes < raw.physical_bytes
+
+
+def test_sparse_index_bound():
+    # The paper bound counts EF payload bits only; our physical layout adds
+    # ~4 B/record of block/record headers, hence the 1.35x allowance. The
+    # exact paper example (24.6 MiB @ R=96, N=1e8) is checked in test_codecs.
+    adj = _ring_graph(2000, 32)   # full-degree lists = worst case
+    comp = CompressedIndexStore.from_graph(adj, medoid=0, r=32)
+    assert comp.sparse_index_bytes <= 1.35 * \
+        CompressedIndexStore.sparse_index_worst_case_bytes(2000, 32)
+
+
+def test_lru_cache_fixed_entries():
+    c = LRUCache(capacity=2, entry_bytes=100)
+    c.put(1, "a"); c.put(2, "b"); c.put(3, "c")
+    assert c.get(1) is None and c.get(3) == "c"
+    assert c.memory_bytes == 200
+    assert c.hits == 1 and c.misses == 1
+
+
+def test_cache_reduces_io():
+    adj = _ring_graph(300, 8)
+    s = CompressedIndexStore.from_graph(adj, medoid=0, r=8, cache_bytes=50_000)
+    for _ in range(3):
+        for vid in range(40):
+            s.get_neighbors(vid)
+    assert s.cache.hits == 80
+    assert s.io.reads == 40
+
+
+# -------------------------------------------------------------- colocated
+def test_colocated_fragmentation(vec_data):
+    adj = _ring_graph(len(vec_data), 16)
+    s = ColocatedStore.build(vec_data, adj, medoid=0, r=16)
+    # fp-like record: 32B vec + 68B list = 100B -> 40/block, 96B wasted/block
+    per_block = s.records_per_block
+    expected = -(-len(vec_data) // per_block) * BLOCK_SIZE
+    assert s.physical_bytes == expected
+    assert s.physical_bytes > len(vec_data) * s.record_bytes  # fragmentation
+
+
+def test_decoupled_beats_colocated_storage(vec_data):
+    """Exp#2 direction: decoupled+compressed < colocated page-aligned."""
+    adj = _ring_graph(len(vec_data), 16)
+    colo = ColocatedStore.build(vec_data, adj, medoid=0, r=16)
+    vs = _store(vec_data, compress=True)
+    ix = CompressedIndexStore.from_graph(adj, medoid=0, r=16)
+    assert vs.physical_bytes + ix.physical_bytes < colo.physical_bytes
