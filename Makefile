@@ -1,0 +1,18 @@
+# One-liners for the repo's tier-1 verification and benchmarks (README.md).
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+export JAX_PLATFORMS ?= cpu
+
+.PHONY: test bench-smoke bench quickstart
+
+test:            ## tier-1: full test suite, stop at first failure (~2.5 min)
+	$(PY) -m pytest -x -q
+
+bench-smoke:     ## ~30 s serving-path benchmark (QPS vs batch x shards)
+	$(PY) -m benchmarks.bench_serve_ann --smoke
+
+bench:           ## full benchmark harness (one row per paper table/figure)
+	$(PY) -m benchmarks.run
+
+quickstart:      ## build an index, measure storage savings, search
+	$(PY) examples/quickstart.py

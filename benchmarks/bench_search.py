@@ -3,18 +3,27 @@
 Sweeps the candidate list size L for DiskANN, PipeANN and DecoupleVS and
 reports (recall@10, modeled QPS, modeled mean latency) per point — the
 paper's accuracy/throughput frontier, in I/O-model units.
+
+The ``--batch`` axis (also swept by ``main``) pushes the same query set
+through the batched device serving path (`repro.serve.ann.BatchedSearcher`)
+and reports measured QPS per bucket size — wall-clock units, not I/O-model
+units, so it complements rather than replaces the frontier above.
 """
+import argparse
 import time
 
 import numpy as np
 
-from repro.core.index import recall_at_k
+from repro.core.index import device_index_from_artifacts, recall_at_k
+from repro.core.search.beam import SearchParams
 from repro.core.search.engine import (EngineConfig, search_colocated,
                                       search_decoupled)
+from repro.serve.ann import BatchedSearcher, ServeConfig
 
 from .common import csv, reset_io, world
 
 L_SWEEP = (24, 48, 96, 160)
+BATCH_SWEEP = (1, 8, 32)
 
 
 def _frontier(w, system: str):
@@ -43,7 +52,32 @@ def _frontier(w, system: str):
     return pts
 
 
-def main(quiet=False):
+def _batched_serving(w, batches):
+    """Measured QPS of the batched device path per bucket size (exp#3's
+    serving companion: same corpus/queries, wall-clock units)."""
+    vecs = w["vecs"].astype(np.float32)
+    index = device_index_from_artifacts(vecs, w["graph"], w["cb"], w["codes"])
+    p = SearchParams(l_size=48, beam_width=4, k=10, rerank_batch=10,
+                     r_max=w["graph"].r, universe=len(vecs), max_iters=128)
+    queries = np.asarray(w["queries"], np.float32)
+    for b in batches:
+        searcher = BatchedSearcher(index, p,
+                                   ServeConfig(buckets=(b,),
+                                               account_io=False))
+        searcher.search(queries[:b])             # warm the jit cache
+        t0 = time.perf_counter()
+        ids, _, _ = searcher.search(queries)
+        us = (time.perf_counter() - t0) * 1e6 / len(queries)
+        rec = recall_at_k(ids, w["gt"], 10)
+        acct = BatchedSearcher(index, p, ServeConfig(buckets=(b,)))
+        _, _, rep = acct.search(queries)         # cold-cache I/O columns
+        csv(f"exp3/serve_b{b}", us,
+            f"qps={1e6/us:.0f};recall={rec:.3f};"
+            f"cold_graph_ios={rep.graph_ios};"
+            f"cold_cache_hits={rep.cache_hits}")
+
+
+def main(quiet=False, batches=BATCH_SWEEP):
     w = world("sift-like")
     out = {}
     for system in ("diskann", "pipeann", "decouplevs"):
@@ -70,8 +104,13 @@ def main(quiet=False):
         f"dvs_vs_diskann_qps_gain="
         f"{best_dvs['qps']/match_dk['qps']:.2f}x_at_recall~"
         f"{best_dvs['recall']:.3f}")
+    _batched_serving(w, batches)
     return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", default="1,8,32",
+                    help="comma-separated serving bucket sizes to sweep")
+    args = ap.parse_args()
+    main(batches=tuple(int(x) for x in args.batch.split(",")))

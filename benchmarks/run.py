@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
   bench_components   Exp#1 (Fig 5)  bench_compression  Exp#8 (Fig 11)
   bench_breakdown    Exp#6 (Tab 3)  bench_roofline     §Roofline (dry-run)
   bench_kernels      Pallas kernel oracles
+  bench_serve_ann    Serving path: QPS vs batch size vs shard count
 """
 import sys
 import time
@@ -15,12 +16,12 @@ import traceback
 def main() -> None:
     from . import (bench_breakdown, bench_components, bench_compression,
                    bench_entropy, bench_kernels, bench_roofline,
-                   bench_search, bench_storage, bench_update)
+                   bench_search, bench_serve_ann, bench_storage, bench_update)
     print("name,us_per_call,derived")
     t00 = time.time()
     for mod in (bench_entropy, bench_storage, bench_components, bench_search,
                 bench_breakdown, bench_update, bench_compression,
-                bench_kernels, bench_roofline):
+                bench_kernels, bench_roofline, bench_serve_ann):
         t0 = time.time()
         try:
             mod.main(quiet=True)

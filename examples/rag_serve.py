@@ -1,6 +1,13 @@
 """Serve a small LM with batched requests + DecoupleVS retrieval (RAG).
 
     PYTHONPATH=src python examples/rag_serve.py --requests 4
+    PYTHONPATH=src python examples/rag_serve.py --requests 16 --batch 8
+
+``--batch 0`` (default) retrieves through the host I/O-model engine, one
+query at a time. ``--batch N`` serves retrieval through the batched device
+path (`repro.serve.ann.BatchedSearcher`, max bucket N): the whole request
+batch goes through the hand-batched beam search and the printed I/O metrics
+come from replaying the device fetch traces through the §3.4 LRU model.
 """
 import argparse
 
@@ -21,6 +28,8 @@ def main():
     ap.add_argument("--doc-len", type=int, default=12)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="retrieval batch bucket size (0 = host per-query path)")
     args = ap.parse_args()
 
     cfg = reduce_config(get_config(args.arch), d_model=128)
@@ -30,10 +39,12 @@ def main():
     print(f"serving {cfg.name}: {model.n_params()/1e6:.2f}M params")
 
     docs = make_token_batch(cfg.vocab, args.docs, args.doc_len, seed=3)
-    rag = RAGPipeline(engine, doc_tokens=docs, k=2)
+    rag = RAGPipeline(engine, doc_tokens=docs, k=2, batch=args.batch)
     print(f"indexed {args.docs} docs "
           f"(compressed index {rag.index_store.physical_bytes/2**10:.0f} KiB, "
-          f"vector store {rag.vector_store.physical_bytes/2**10:.0f} KiB)")
+          f"vector store {rag.vector_store.physical_bytes/2**10:.0f} KiB, "
+          f"retrieval path: "
+          f"{'device batched' if args.batch else 'host per-query'})")
 
     queries = make_token_batch(cfg.vocab, args.requests, 8, seed=9)
     gen, stats = rag.answer(queries, max_new=args.max_new)
@@ -43,6 +54,10 @@ def main():
     print(f"retrieval I/O: {stats['graph_ios']} graph + "
           f"{stats['vector_ios']} vector block reads, "
           f"{stats['cache_hits']} cache hits across the batch")
+    if args.batch:
+        print(f"retrieval QPS {stats['qps']:.1f} (incl. compile), buckets "
+              f"{stats['buckets']}, modeled latency "
+              f"{stats['modeled_latency_us']:.0f} us/query")
 
 
 if __name__ == "__main__":

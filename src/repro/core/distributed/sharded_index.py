@@ -2,8 +2,9 @@
 
 The dataset is partitioned into contiguous id ranges, one Vamana sub-graph +
 PQ codes + compressed stores per shard, sharded over the ``data`` (x ``pod``)
-mesh axes. A query batch is replicated; `shard_map` runs the device beam
-search per shard and a global top-K merge runs on the gathered candidates
+mesh axes. A query batch is replicated; `shard_map` runs the hand-batched
+device beam search (`search_batched`, one while_loop for the whole batch)
+per shard and a global top-K merge runs on the gathered candidates
 (K x n_shards rows — trivial ICI traffic vs. the paper's observation that
 graph traversal I/O dominates).
 
@@ -23,7 +24,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..index import build_device_index
-from ..search.beam import DeviceIndex, SearchParams, search_one
+from ..search.beam import DeviceIndex, SearchParams, search_batched
 
 
 class ShardedIndex(NamedTuple):
@@ -66,7 +67,7 @@ def _sharded_fn(mesh, p: SearchParams, axis, shard_size):
             neighbors=nbrs[0], counts=cnts[0], ef_slots=slots[0],
             pq_codes=codes[0], pq_centroids=cents[0], vectors=vecs[0],
             medoid=medoid[0])
-        ids, dists, _ = jax.vmap(lambda q: search_one(local, q, p))(queries)
+        ids, dists, _ = search_batched(local, queries, p)
         ax_idx = jax.lax.axis_index(axis) if isinstance(axis, str) else \
             sum(jax.lax.axis_index(a) * int(np.prod(
                 [mesh.shape[b] for b in axis[i + 1:]]))

@@ -31,26 +31,33 @@ def ef_slots_from_graph(graph: VamanaGraph, universe: int | None = None
     return slots
 
 
-def build_device_index(vectors: np.ndarray, r: int = 32, l_build: int = 64,
-                       alpha: float = 1.2, pq_m: int = 8, seed: int = 0
-                       ) -> tuple[DeviceIndex, VamanaGraph, PQCodebook]:
-    vectors = np.asarray(vectors, dtype=np.float32)
-    n = len(vectors)
-    graph = build_vamana(vectors, r=r, l_build=l_build, alpha=alpha, seed=seed)
-    cb = train_pq(vectors, m=pq_m, seed=seed)
-    codes = encode_pq(vectors, cb)
+def device_index_from_artifacts(vectors: np.ndarray, graph: VamanaGraph,
+                                cb: PQCodebook, codes: np.ndarray
+                                ) -> DeviceIndex:
+    """Assemble the HBM-resident search state from pre-built offline
+    artifacts (graph + PQ) — the cheap DecoupleVS transform, reusable when a
+    graph already exists (benchmark worlds, serving warm-starts)."""
     nbrs, counts = graph.to_padded()
     slots = ef_slots_from_graph(graph)
-    index = DeviceIndex(
+    return DeviceIndex(
         neighbors=jnp.asarray(nbrs),
         counts=jnp.asarray(counts),
         ef_slots=jnp.asarray(slots),
         pq_codes=jnp.asarray(codes),
         pq_centroids=jnp.asarray(cb.centroids),
-        vectors=jnp.asarray(vectors),
+        vectors=jnp.asarray(vectors, dtype=jnp.float32),
         medoid=jnp.int32(graph.medoid),
     )
-    return index, graph, cb
+
+
+def build_device_index(vectors: np.ndarray, r: int = 32, l_build: int = 64,
+                       alpha: float = 1.2, pq_m: int = 8, seed: int = 0
+                       ) -> tuple[DeviceIndex, VamanaGraph, PQCodebook]:
+    vectors = np.asarray(vectors, dtype=np.float32)
+    graph = build_vamana(vectors, r=r, l_build=l_build, alpha=alpha, seed=seed)
+    cb = train_pq(vectors, m=pq_m, seed=seed)
+    codes = encode_pq(vectors, cb)
+    return device_index_from_artifacts(vectors, graph, cb, codes), graph, cb
 
 
 def recall_at_k(pred_ids: np.ndarray, gt_ids: np.ndarray, k: int) -> float:

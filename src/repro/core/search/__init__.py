@@ -1,2 +1,3 @@
 from . import beam  # noqa: F401
-from .beam import DeviceIndex, SearchParams, search  # noqa: F401
+from .beam import (DeviceIndex, SearchParams, search,  # noqa: F401
+                   search_batched, search_one, search_vmapped)

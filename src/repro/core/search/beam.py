@@ -1,5 +1,5 @@
 """Device-side graph beam search (`jax.lax.while_loop`) + latency-aware
-re-ranking (paper §3.4), batched over queries with `vmap`.
+re-ranking (paper §3.4), batch-first over queries.
 
 Faithful mapping of the paper's search path:
 
@@ -14,6 +14,16 @@ Faithful mapping of the paper's search path:
 - Phase 2 re-rank: batches of B exact distances, early-terminated when the
   *benefit ratio* (fraction of a batch entering the top-K) drops below the
   threshold (default 0.01).
+
+Batch-first: every public entry point takes queries of shape [nq, d] and the
+whole batch advances through ONE `while_loop` whose carries carry a leading
+query axis; finished rows are frozen by masking their updates. Single-query
+search is the nq=1 case (`search_one`). This is deliberately NOT
+`vmap(single_query_search)`: vmap of a `while_loop` re-selects every carry
+each round, which costs O(nq * n) on the dense visited arrays alone, while
+the hand-batched loop only touches what each round writes. The old vmapped
+formulation is kept as `search_vmapped` — it is the measured baseline that
+`benchmarks/bench_serve_ann.py` compares against.
 
 The uncompressed-adjacency variant exists for the paper's ablation (Exp#1
 "Decouple" / "DecoupleSearch" arms). PQ ADC and EF decode have Pallas TPU
@@ -56,19 +66,31 @@ class SearchParams(NamedTuple):
     universe: int = 0           # vector-id universe for EF slots (0 -> n)
     visited_hash_bits: int = 0  # >0: open-addressing visited set of 2^bits
                                 # slots instead of [n]-bool arrays (§Perf B)
+    trace_fetches: bool = False  # record the per-round adjacency-fetch ids so
+                                 # the serving tier can replay them through
+                                 # the §3.4 LRU / I/O model (serve/ann.py)
 
 
 class SearchStats(NamedTuple):
-    iters: jnp.ndarray             # traversal rounds (graph I/O batches)
-    lists_fetched: jnp.ndarray     # adjacency lists read from the index tier
-    prefetch_iter: jnp.ndarray     # iteration at which prefetch triggered (-1: never)
-    rerank_batches: jnp.ndarray    # re-rank batches actually executed
-    exact_dists: jnp.ndarray       # full-precision distance computations
+    iters: jnp.ndarray             # [nq] traversal rounds (graph I/O batches)
+    lists_fetched: jnp.ndarray     # [nq] adjacency lists read from the index tier
+    prefetch_iter: jnp.ndarray     # [nq] iteration prefetch triggered (-1: never)
+    rerank_batches: jnp.ndarray    # [nq] re-rank batches actually executed
+    exact_dists: jnp.ndarray       # [nq] full-precision distance computations
+    pq_dists: jnp.ndarray          # [nq] PQ (ADC) distance computations
+    fetch_trace: jnp.ndarray       # [nq, max_iters, W] fetched vertex ids
+                                   # (-1 = none; empty unless trace_fetches)
+
+
+def _hash_slots(ids, bits: int):
+    h = (ids.astype(jnp.uint32) * jnp.uint32(2654435761))
+    return (h >> jnp.uint32(32 - bits)).astype(jnp.int32)
 
 
 def _gather_neighbors(index: DeviceIndex, sel_ids: jnp.ndarray,
                       p: SearchParams, n: int) -> jnp.ndarray:
-    """[W] vertex ids -> [W, r_max] neighbor ids (-1 = invalid)."""
+    """[nq, W] vertex ids -> [nq, W * r_max] neighbor ids (-1 = invalid)."""
+    nq = sel_ids.shape[0]
     valid_sel = sel_ids >= 0
     safe = jnp.clip(sel_ids, 0, n - 1)
     if p.use_ef:
@@ -77,171 +99,251 @@ def _gather_neighbors(index: DeviceIndex, sel_ids: jnp.ndarray,
             vals, cnt = decode_slot_jnp(slot, p.r_max, universe)
             j = jnp.arange(p.r_max, dtype=jnp.int32)
             return jnp.where(j < cnt, vals, -1)
-        nbrs = jax.vmap(dec)(index.ef_slots[safe])
+        nbrs = jax.vmap(dec)(index.ef_slots[safe.reshape(-1)])
+        nbrs = nbrs.reshape(safe.shape + (p.r_max,))
     else:
         nbrs = index.neighbors[safe]
-    return jnp.where(valid_sel[:, None], nbrs, -1)
+    nbrs = jnp.where(valid_sel[..., None], nbrs, -1)
+    return nbrs.reshape(nq, -1)
 
 
-def _hash_slots(ids, bits: int):
-    h = (ids.astype(jnp.uint32) * jnp.uint32(2654435761))
-    return (h >> jnp.uint32(32 - bits)).astype(jnp.int32)
+def _adc_batch(codes: jnp.ndarray, luts: jnp.ndarray) -> jnp.ndarray:
+    """[nq, m, M] codes x [nq, M, K] per-query LUTs -> [nq, m] distances."""
+    return jax.vmap(adc_lookup_jnp)(codes, luts)
 
 
-def traverse(index: DeviceIndex, lut: jnp.ndarray, p: SearchParams):
-    """Beam traversal for one query LUT -> (cand_ids[L], cand_d[L], stats).
+def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
+    """Batched beam traversal: per-query LUTs [nq, M, K] ->
+    (cand_ids [nq, L], cand_d [nq, L], (iters, fetched, pf_iter, pq, trace)).
+
+    One while_loop advances the whole batch; a row with no unexpanded
+    frontier (or out of iterations) is *frozen*: its frontier distances are
+    masked to +inf so it selects nothing, fetches nothing, and its candidate
+    list / counters pass through unchanged. Each row's trajectory is
+    therefore identical to what a solo (nq=1) run produces — the equality
+    `tests/test_serve_ann.py` asserts.
 
     Two visited-set representations (§Perf iteration B):
-    - dense [n]-bool arrays (exact; O(n) HBM per query), or
+    - dense [nq, n]-bool arrays (exact; O(n) HBM per query), or
     - a 2^visited_hash_bits open-addressing fingerprint table plus
       per-list-slot expansion flags (O(2^bits); a hash eviction can only
       cause a re-visit — extra work, never a wrong result).
     """
     n = index.pq_codes.shape[0]
+    nq = luts.shape[0]
     L, W = p.l_size, p.beam_width
     KB = min(p.k + p.rerank_batch, L)
     use_hash = p.visited_hash_bits > 0
+    rows = jnp.arange(nq, dtype=jnp.int32)
+    trace_len = p.max_iters if p.trace_fetches else 0
 
-    entry = index.medoid.astype(jnp.int32)
-    e_d = adc_lookup_jnp(index.pq_codes[entry][None, :], lut)[0]
-    cand_ids = jnp.full((L,), -1, jnp.int32).at[0].set(entry)
-    cand_d = jnp.full((L,), jnp.inf, jnp.float32).at[0].set(e_d)
+    entry = jnp.broadcast_to(index.medoid.astype(jnp.int32), (nq,))
+    e_d = _adc_batch(index.pq_codes[entry][:, None, :], luts)[:, 0]
+    cand_ids = jnp.full((nq, L), -1, jnp.int32).at[:, 0].set(entry)
+    cand_d = jnp.full((nq, L), jnp.inf, jnp.float32).at[:, 0].set(e_d)
     if use_hash:
-        visited = jnp.full((1 << p.visited_hash_bits,), -1, jnp.int32
-                           ).at[_hash_slots(entry, p.visited_hash_bits)].set(entry)
-        expanded = jnp.zeros((L,), jnp.bool_)       # per candidate slot
+        H = 1 << p.visited_hash_bits
+        visited = jnp.full((nq, H), -1, jnp.int32
+                           ).at[rows, _hash_slots(entry, p.visited_hash_bits)
+                                ].set(entry)
+        expanded = jnp.zeros((nq, L), jnp.bool_)    # per candidate slot
     else:
-        visited = jnp.zeros((n,), jnp.bool_).at[entry].set(True)
-        expanded = jnp.zeros((n,), jnp.bool_)
-    prev_top = jnp.full((KB,), -1, jnp.int32)
+        visited = jnp.zeros((nq, n), jnp.bool_).at[rows, entry].set(True)
+        expanded = jnp.zeros((nq, n), jnp.bool_)
     state = (cand_ids, cand_d, visited, expanded,
-             jnp.int32(0),            # iters
-             jnp.int32(0),            # lists fetched
-             jnp.int32(0),            # stability counter
-             jnp.int32(-1),           # prefetch iteration
-             prev_top)
+             jnp.zeros((nq,), jnp.int32),           # iters
+             jnp.zeros((nq,), jnp.int32),           # lists fetched
+             jnp.zeros((nq,), jnp.int32),           # pq distances (+ entry)
+             jnp.zeros((nq,), jnp.int32),           # stability counter
+             jnp.full((nq,), -1, jnp.int32),        # prefetch iteration
+             jnp.full((nq, KB), -1, jnp.int32),     # prev top-(K+B)
+             jnp.full((nq, trace_len, W), -1, jnp.int32))  # fetch trace
 
     def _unexpanded(cand_ids, expanded):
         valid = cand_ids >= 0
         if use_hash:
             return valid & ~expanded
-        return valid & ~expanded[jnp.clip(cand_ids, 0, n - 1)]
+        return valid & ~jnp.take_along_axis(
+            expanded, jnp.clip(cand_ids, 0, n - 1), 1)
+
+    def _active(cand_ids, expanded, iters):
+        return (jnp.any(_unexpanded(cand_ids, expanded), 1)
+                & (iters < p.max_iters))
 
     def has_frontier(st):
-        cand_ids, cand_d, _, expanded, iters, *_ = st
-        return jnp.any(_unexpanded(cand_ids, expanded)) & (iters < p.max_iters)
+        cand_ids, _, _, expanded, iters, *_ = st
+        return jnp.any(_active(cand_ids, expanded, iters))
 
     def step(st):
-        cand_ids, cand_d, visited, expanded, iters, fetched, stab, pf_iter, prev_top = st
+        (cand_ids, cand_d, visited, expanded, iters, fetched, pq_ct,
+         stab, pf_iter, prev_top, trace) = st
+        active = _active(cand_ids, expanded, iters)
         unexp = _unexpanded(cand_ids, expanded)
-        frontier_d = jnp.where(unexp, cand_d, jnp.inf)
-        _, sel_slot = jax.lax.top_k(-frontier_d, W)
-        sel_ids = jnp.where(jnp.isfinite(frontier_d[sel_slot]),
-                            cand_ids[sel_slot], -1)
+        frontier_d = jnp.where(unexp & active[:, None], cand_d, jnp.inf)
+        neg_d, sel_slot = jax.lax.top_k(-frontier_d, W)       # [nq, W]
+        sel_ids = jnp.where(jnp.isfinite(neg_d),
+                            jnp.take_along_axis(cand_ids, sel_slot, 1), -1)
         if use_hash:
-            expanded = expanded.at[sel_slot].set(
-                expanded[sel_slot] | (sel_ids >= 0))
+            expanded = expanded.at[rows[:, None], sel_slot].set(
+                jnp.take_along_axis(expanded, sel_slot, 1) | (sel_ids >= 0))
         else:
-            expanded = expanded.at[jnp.where(sel_ids >= 0, sel_ids, n)].set(
+            expanded = expanded.at[
+                rows[:, None], jnp.where(sel_ids >= 0, sel_ids, n)].set(
                 True, mode="drop")
-        fetched = fetched + jnp.sum(sel_ids >= 0).astype(jnp.int32)
+        fetched = fetched + jnp.sum(sel_ids >= 0, 1).astype(jnp.int32)
+        if p.trace_fetches:
+            trace = trace.at[rows, iters].set(sel_ids, mode="drop")
 
-        nbrs = _gather_neighbors(index, sel_ids, p, n).reshape(-1)   # [W*R]
-        # Dedupe within the batch (sort + first-occurrence flag).
-        order = jnp.argsort(nbrs)
-        sorted_n = nbrs[order]
-        first = jnp.concatenate([jnp.array([True]),
-                                 sorted_n[1:] != sorted_n[:-1]])
+        nbrs = _gather_neighbors(index, sel_ids, p, n)        # [nq, W*R]
+        # Dedupe within the round: single-key sort (fast path on XLA CPU —
+        # argsort-with-payload is a scalar loop there) + first-occurrence.
+        sorted_n = jnp.sort(nbrs, axis=1)
+        first = jnp.concatenate(
+            [jnp.ones((nq, 1), jnp.bool_),
+             sorted_n[:, 1:] != sorted_n[:, :-1]], 1)
         uniq = jnp.where(first, sorted_n, -1)
         if use_hash:
+            H = 1 << p.visited_hash_bits
             slots = _hash_slots(jnp.maximum(uniq, 0), p.visited_hash_bits)
-            seen = visited[slots] == uniq
+            seen = jnp.take_along_axis(visited, slots, 1) == uniq
             ok = (uniq >= 0) & ~seen
-            visited = visited.at[jnp.where(ok, slots, 0)].set(
-                jnp.where(ok, uniq, visited[jnp.where(ok, slots, 0)]))
+            visited = visited.at[rows[:, None], jnp.where(ok, slots, H)].set(
+                jnp.where(ok, uniq, -1), mode="drop")
         else:
-            ok = (uniq >= 0) & ~visited[jnp.clip(uniq, 0, n - 1)]
-            visited = visited.at[jnp.where(ok, uniq, n)].set(True, mode="drop")
+            seen = jnp.take_along_axis(visited, jnp.clip(uniq, 0, n - 1), 1)
+            ok = (uniq >= 0) & ~seen
+            visited = visited.at[rows[:, None], jnp.where(ok, uniq, n)].set(
+                True, mode="drop")
         new_ids = jnp.where(ok, uniq, -1)
         codes = index.pq_codes[jnp.clip(new_ids, 0, n - 1)]
-        new_d = jnp.where(ok, adc_lookup_jnp(codes, lut), jnp.inf)
+        new_d = jnp.where(ok, _adc_batch(codes, luts), jnp.inf)
+        pq_ct = pq_ct + jnp.sum(ok, 1).astype(jnp.int32)
 
-        merged_ids = jnp.concatenate([cand_ids, new_ids])
-        merged_d = jnp.concatenate([cand_d, new_d])
+        merged_ids = jnp.concatenate([cand_ids, new_ids], 1)
+        merged_d = jnp.concatenate([cand_d, new_d], 1)
         top_d, top_i = jax.lax.top_k(-merged_d, L)
-        cand_ids, cand_d = merged_ids[top_i], -top_d
+        cand_ids = jnp.take_along_axis(merged_ids, top_i, 1)
+        cand_d = -top_d
         if use_hash:
             merged_exp = jnp.concatenate(
-                [expanded, jnp.zeros((new_ids.shape[0],), jnp.bool_)])
-            expanded = merged_exp[top_i]
+                [expanded, jnp.zeros_like(new_ids, jnp.bool_)], 1)
+            expanded = jnp.take_along_axis(merged_exp, top_i, 1)
 
         # §3.4 stability: top-(K+B) id set unchanged across expansions.
-        top_now = jnp.sort(cand_ids[:KB])
-        same = jnp.all(top_now == prev_top)
-        stab = jnp.where(same, stab + W, 0)
-        trigger = (stab >= p.rerank_batch) & (pf_iter < 0)
+        top_now = jnp.sort(cand_ids[:, :KB], 1)
+        same = jnp.all(top_now == prev_top, 1)
+        stab = jnp.where(active, jnp.where(same, stab + W, 0), stab)
+        trigger = active & (stab >= p.rerank_batch) & (pf_iter < 0)
         pf_iter = jnp.where(trigger, iters + 1, pf_iter)
-        return (cand_ids, cand_d, visited, expanded, iters + 1, fetched,
-                stab, pf_iter, top_now)
+        iters = iters + active.astype(jnp.int32)
+        prev_top = jnp.where(active[:, None], top_now, prev_top)
+        return (cand_ids, cand_d, visited, expanded, iters, fetched, pq_ct,
+                stab, pf_iter, prev_top, trace)
 
     st = jax.lax.while_loop(has_frontier, step, state)
-    cand_ids, cand_d, _, _, iters, fetched, _, pf_iter, _ = st
-    return cand_ids, cand_d, (iters, fetched, pf_iter)
+    cand_ids, cand_d = st[0], st[1]
+    iters, fetched, pq_ct, _, pf_iter, _, trace = st[4:]
+    return cand_ids, cand_d, (iters, fetched, pf_iter, pq_ct + 1, trace)
 
 
-def rerank(index: DeviceIndex, query: jnp.ndarray, cand_ids: jnp.ndarray,
+def rerank(index: DeviceIndex, queries: jnp.ndarray, cand_ids: jnp.ndarray,
            p: SearchParams):
-    """Phase-2 adaptive re-ranking (§3.4) -> (ids[K], dists[K], stats)."""
+    """Batched phase-2 adaptive re-ranking (§3.4) ->
+    (ids [nq, K], dists [nq, K], (batches [nq], exact_ct [nq])).
+
+    All rows consume candidate batch b in lockstep; a row whose benefit
+    ratio fired (plus the one-batch lookahead) drops out by masking, so its
+    executed-batch count matches a solo run exactly.
+    """
     n, K, B = index.vectors.shape[0], p.k, p.rerank_batch
+    nq = queries.shape[0]
     # Candidates beyond L don't exist; bound the batch loop statically.
     max_batches = min(p.max_rerank_batches, max(0, (p.l_size - K) // B))
 
     def exact(ids):
         v = index.vectors[jnp.clip(ids, 0, n - 1)].astype(jnp.float32)
-        d = ((v - query[None, :].astype(jnp.float32)) ** 2).sum(-1)
+        q = queries[:, None, :].astype(jnp.float32)
+        d = ((v - q) ** 2).sum(-1)
         return jnp.where(ids >= 0, d, jnp.inf)
 
     # Batch 0: the prefetched top-K (always re-ranked).
-    heap_ids = cand_ids[:K]
+    heap_ids = cand_ids[:, :K]
     heap_d = exact(heap_ids)
 
     def cond(st):
-        _, _, b, go, _ = st
-        return go & (b < max_batches)
+        _, _, b, go, _, _ = st
+        return jnp.any(go) & (b < max_batches)
 
     def body(st):
-        heap_ids, heap_d, b, go, pending_stop = st
-        start = K + b * B
-        ids = jax.lax.dynamic_slice(cand_ids, (start,), (B,))
-        d = exact(ids)
-        m_ids = jnp.concatenate([heap_ids, ids])
-        m_d = jnp.concatenate([heap_d, d])
+        heap_ids, heap_d, b, go, pending_stop, batches = st
+        ids = jax.lax.dynamic_slice_in_dim(cand_ids, K + b * B, B, axis=1)
+        d = jnp.where(go[:, None], exact(ids), jnp.inf)
+        m_ids = jnp.concatenate([heap_ids, ids], 1)
+        m_d = jnp.concatenate([heap_d, d], 1)
         top_d, top_i = jax.lax.top_k(-m_d, K)
-        new_ids, new_d = m_ids[top_i], -top_d
-        displaced = jnp.sum(top_i >= K).astype(jnp.float32)
+        new_ids = jnp.take_along_axis(m_ids, top_i, 1)
+        new_d = -top_d
+        displaced = jnp.sum(top_i >= K, 1).astype(jnp.float32)
         below = displaced / B < p.benefit_threshold
+        heap_ids = jnp.where(go[:, None], new_ids, heap_ids)
+        heap_d = jnp.where(go[:, None], new_d, heap_d)
+        batches = batches + go.astype(jnp.int32)
         # one-batch lookahead (§3.4): the next batch is already in flight
         # when the benefit test fires, so termination lags one batch.
-        go_next = ~pending_stop | ~below
-        return (new_ids, new_d, b + 1, go_next, below)
+        go_next = go & (~pending_stop | ~below)
+        pending_stop = jnp.where(go, below, pending_stop)
+        return (heap_ids, heap_d, b + 1, go_next, pending_stop, batches)
 
-    heap_ids, heap_d, batches, _, _ = jax.lax.while_loop(
-        cond, body, (heap_ids, heap_d, jnp.int32(0), jnp.bool_(True),
-                     jnp.bool_(False)))
-    order = jnp.argsort(heap_d)
+    heap_ids, heap_d, _, _, _, batches = jax.lax.while_loop(
+        cond, body, (heap_ids, heap_d, jnp.int32(0),
+                     jnp.ones((nq,), jnp.bool_), jnp.zeros((nq,), jnp.bool_),
+                     jnp.zeros((nq,), jnp.int32)))
+    order = jnp.argsort(heap_d, axis=1)
+    ids = jnp.take_along_axis(heap_ids, order, 1)
+    dists = jnp.take_along_axis(heap_d, order, 1)
     exact_ct = (K + batches * B).astype(jnp.int32)
-    return heap_ids[order], heap_d[order], (batches, exact_ct)
+    return ids, dists, (batches, exact_ct)
 
 
-def search_one(index: DeviceIndex, query: jnp.ndarray, p: SearchParams):
-    lut = build_lut_jnp(query.astype(jnp.float32), index.pq_centroids)
-    cand_ids, cand_d, (iters, fetched, pf_iter) = traverse(index, lut, p)
-    ids, dists, (batches, exact_ct) = rerank(index, query, cand_ids, p)
-    stats = SearchStats(iters, fetched, pf_iter, batches, exact_ct)
+def search_batched(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
+    """Batch-first search core (unjitted — compose inside jit/shard_map).
+
+    queries [nq, d] -> (ids [nq, K], dists [nq, K], SearchStats of [nq]).
+    """
+    luts = jax.vmap(
+        lambda q: build_lut_jnp(q.astype(jnp.float32), index.pq_centroids)
+    )(queries)
+    cand_ids, cand_d, (iters, fetched, pf_iter, pq_ct, trace) = \
+        traverse(index, luts, p)
+    ids, dists, (batches, exact_ct) = rerank(index, queries, cand_ids, p)
+    stats = SearchStats(iters, fetched, pf_iter, batches, exact_ct,
+                        pq_ct, trace)
     return ids, dists, stats
 
 
 @functools.partial(jax.jit, static_argnames=("p",))
 def search(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
     """Batched search -> (ids [nq, K], dists [nq, K], stats of [nq] each)."""
-    return jax.vmap(lambda q: search_one(index, q, p))(queries)
+    return search_batched(index, queries, p)
+
+
+def search_one(index: DeviceIndex, query: jnp.ndarray, p: SearchParams):
+    """Single-query search: the nq=1 case of the batch-first path."""
+    ids, dists, stats = search(index, query[None], p)
+    return ids[0], dists[0], jax.tree_util.tree_map(lambda x: x[0], stats)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def search_vmapped(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
+    """Legacy per-query vmap formulation (the pre-batching baseline).
+
+    vmap of a while_loop selects EVERY carry each round for every lane, so
+    this pays O(nq * n) visited/select traffic per round; kept for the
+    batched-vs-vmapped comparison in bench_serve_ann (~3x on XLA CPU,
+    growing with n).
+    """
+    def solo(q):
+        ids, dists, stats = search_batched(index, q[None], p)
+        return (ids[0], dists[0],
+                jax.tree_util.tree_map(lambda x: x[0], stats))
+    return jax.vmap(solo)(queries)

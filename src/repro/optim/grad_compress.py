@@ -33,7 +33,7 @@ def compressed_psum_tree(grads, residual, axis_names):
     """
     n_dev = 1
     for a in axis_names:
-        n_dev = n_dev * jax.lax.axis_size(a)
+        n_dev = n_dev * jax.lax.psum(1, a)
 
     def one(g, r):
         g = g.astype(jnp.float32) + r

@@ -1,3 +1,4 @@
-from . import engine, rag  # noqa: F401
+from . import ann, engine, rag  # noqa: F401
+from .ann import BatchedSearcher, BatchReport, ServeConfig  # noqa: F401
 from .engine import ServeEngine  # noqa: F401
 from .rag import RAGPipeline  # noqa: F401

@@ -1,0 +1,221 @@
+"""Batched, shard-parallel ANN serving engine — the single entry point from
+a query batch to global top-K ids+scores (ROADMAP north-star: serve heavy
+traffic through the decoupled stack).
+
+Three layers (docs/SERVING.md):
+
+1. **Pad-and-bucket batching.** Queries are admitted in fixed bucket sizes
+   (ascending, e.g. ``(1, 8, 32)``) so XLA compiles one program per bucket;
+   a ragged tail is padded up to the smallest covering bucket by repeating
+   the last query and the pad rows are sliced off. The device program is the
+   hand-batched beam search of ``core/search/beam.py`` (one while_loop for
+   the whole bucket, compare/reduce `top_k` selection — not scatter/sort,
+   which is a scalar loop on XLA CPU).
+2. **Shard fan-out + global top-K merge.** A ``ShardedIndex``
+   (``core/distributed/sharded_index.py``) is searched shard-by-shard with
+   the same bucketed program (on a multi-device mesh the same merge runs
+   inside ``shard_map`` via ``make_sharded_search``); local ids are
+   translated by the shard's id-range offset and a global ``top_k`` over the
+   S*K gathered candidates yields the final K.
+3. **Admission/stats.** Every served batch reports the paper's metrics
+   (graph I/Os, vector I/Os, cache hits, modeled latency) by replaying the
+   device fetch trace through the fixed-entry LRU of §3.4
+   (``core/storage/index_store.LRUCache``) and pricing the counters with the
+   I/O model constants of ``core/search/engine.py`` (T_IO/T_PQ/T_EX/T_DEC).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.codec import elias_fano as ef
+from repro.core.distributed.sharded_index import ShardedIndex
+from repro.core.search.beam import DeviceIndex, SearchParams, search
+from repro.core.search.engine import T_DEC, T_EX, T_IO, T_PQ
+from repro.core.storage.index_store import LRUCache
+
+
+@dataclass
+class ServeConfig:
+    buckets: tuple = (1, 8, 32)     # ascending pad-and-bucket sizes
+    cache_bytes: int = 1 << 20      # modeled §3.4 fixed-entry LRU, per shard
+    account_io: bool = True         # replay fetch traces through the I/O model
+
+
+@dataclass
+class BatchReport:
+    """Per served batch: admission + the paper's I/O-model metrics."""
+    n_queries: int = 0
+    n_padded: int = 0               # total padded rows across buckets
+    buckets: list = field(default_factory=list)   # bucket size per chunk
+    n_shards: int = 1
+    wall_s: float = 0.0
+    qps: float = 0.0
+    # I/O model (summed over queries and shards; engine.QueryStats semantics)
+    graph_ios: int = 0              # uncached adjacency-list block reads
+    vector_ios: int = 0             # full-precision vector block reads
+    cache_hits: int = 0             # §3.4 fixed-entry LRU hits
+    pq_ops: int = 0
+    exact_ops: int = 0
+    decompressions: int = 0
+    io_rounds: int = 0              # traversal rounds with >=1 uncached read
+    rerank_batches: int = 0
+    modeled_latency_us: float = 0.0   # mean per-query modeled latency
+    modeled_p99_us: float = 0.0
+
+
+def plan_buckets(nq: int, buckets: tuple) -> list:
+    """-> [(start, count, bucket)]: full largest buckets, then the ragged
+    tail. The tail is padded to its smallest covering bucket — unless that
+    wastes more rows than the tail itself (covering > 2*tail), in which
+    case the largest fitting bucket is peeled off first (fewer dispatches
+    beats zero padding for small tails; a 9-query tail with buckets
+    (1, 8, 32) runs as 8+1, not padded to 32)."""
+    buckets = sorted(buckets)
+    if not buckets or buckets[0] <= 0:
+        raise ValueError(f"bucket sizes must be positive, got {buckets}")
+    out, start = [], 0
+    remaining = nq
+    while remaining > 0:
+        cover = next((b for b in buckets if b >= remaining), None)
+        fit = next((b for b in reversed(buckets) if b <= remaining), None)
+        if cover is not None and (fit is None or cover <= 2 * remaining):
+            out.append((start, remaining, cover))
+            break
+        out.append((start, fit, fit))
+        start += fit
+        remaining -= fit
+    return out
+
+
+def merge_topk(ids, dists, k: int):
+    """[S, nq, K] per-shard globally-translated ids + dists -> global top-K
+    (the same gather + top_k merge that runs inside shard_map on a mesh)."""
+    s, nq, kk = ids.shape
+    flat_i = ids.transpose(1, 0, 2).reshape(nq, s * kk)
+    flat_d = dists.transpose(1, 0, 2).reshape(nq, s * kk)
+    order = np.argsort(flat_d, axis=1, kind="stable")[:, :k]
+    return (np.take_along_axis(flat_i, order, 1),
+            np.take_along_axis(flat_d, order, 1))
+
+
+class BatchedSearcher:
+    """Serve query batches against a DeviceIndex (1 shard) or ShardedIndex.
+
+    >>> searcher = BatchedSearcher(index, SearchParams(...))
+    >>> ids, dists, report = searcher.search(queries)   # [nq, d] float32
+    """
+
+    def __init__(self, index, p: SearchParams, cfg: ServeConfig = None,
+                 shard_size: int = 0):
+        cfg = cfg or ServeConfig()
+        if cfg.account_io:
+            p = p._replace(trace_fetches=True)
+        self.p = p
+        self.cfg = cfg
+        if isinstance(index, ShardedIndex):
+            s = index.pq_codes.shape[0]
+            self._shards = [
+                DeviceIndex(*(jnp.asarray(f[i]) for f in index))
+                for i in range(s)]
+            self.shard_size = shard_size or int(index.pq_codes.shape[1])
+        else:
+            self._shards = [index]
+            self.shard_size = int(index.pq_codes.shape[0])
+        # One §3.4 fixed-entry LRU per shard: entries are sized to the EF
+        # worst case so capacity is a hard bound (index_store semantics).
+        universe = p.universe or self.shard_size
+        entry_bytes = (ef.worst_case_bits(p.r_max, universe) + 7) // 8
+        self._caches = [
+            LRUCache(cfg.cache_bytes // max(1, entry_bytes), entry_bytes)
+            for _ in self._shards]
+
+    # ------------------------------------------------------------- serving
+    def search(self, queries: np.ndarray):
+        """queries [nq, d] -> (ids [nq, K], dists [nq, K], BatchReport).
+
+        ids are global (shard offset applied); rows are sorted by exact
+        re-ranked distance, -1 = no result.
+        """
+        queries = np.asarray(queries, np.float32)
+        nq = len(queries)
+        report = BatchReport(n_queries=nq, n_shards=len(self._shards))
+        t0 = time.perf_counter()
+        chunks = plan_buckets(nq, self.cfg.buckets)
+        out_ids = np.full((len(self._shards), nq, self.p.k), -1, np.int64)
+        out_d = np.full((len(self._shards), nq, self.p.k), np.inf, np.float32)
+        lat = np.zeros((len(self._shards), nq), np.float64)
+        for start, count, bucket in chunks:
+            report.buckets.append(bucket)
+            report.n_padded += bucket - count
+            q = queries[start:start + count]
+            if bucket > count:      # pad by repeating the last query
+                q = np.concatenate([q, np.repeat(q[-1:], bucket - count, 0)])
+            qj = jnp.asarray(q)
+            for si, shard in enumerate(self._shards):
+                ids, dists, stats = search(shard, qj, self.p)
+                ids = np.asarray(ids)[:count]
+                gids = np.where(ids >= 0,
+                                ids.astype(np.int64) + si * self.shard_size,
+                                -1)
+                out_ids[si, start:start + count] = gids
+                out_d[si, start:start + count] = np.asarray(dists)[:count]
+                if self.cfg.account_io:
+                    lat[si, start:start + count] = self._account(
+                        report, stats, count, self._caches[si])
+        ids, dists = merge_topk(out_ids, out_d, self.p.k)
+        report.wall_s = time.perf_counter() - t0
+        report.qps = nq / max(report.wall_s, 1e-9)
+        if self.cfg.account_io:
+            per_q = lat.max(axis=0)     # shards fan out in parallel
+            report.modeled_latency_us = float(per_q.mean())
+            report.modeled_p99_us = float(np.percentile(per_q, 99))
+        return ids, dists, report
+
+    # ------------------------------------------------------ I/O accounting
+    def _account(self, report: BatchReport, stats, count: int,
+                 cache: LRUCache) -> np.ndarray:
+        """Replay one bucket's fetch traces (arrival order) through the
+        fixed-entry LRU; price counters with the engine.py latency model
+        (latency_aware arm: vector reads off the traversal critical path).
+        Returns per-query modeled latency [count] in µs."""
+        trace = np.asarray(stats.fetch_trace)[:count]       # [c, iters, W]
+        pq_ops = np.asarray(stats.pq_dists)[:count]
+        exact = np.asarray(stats.exact_dists)[:count]
+        batches = np.asarray(stats.rerank_batches)[:count]
+        lat = np.zeros(count)
+        for qi in range(count):
+            misses = hits = io_rounds = 0
+            for round_ids in trace[qi]:
+                round_miss = 0
+                for vid in round_ids:
+                    if vid < 0:
+                        continue
+                    if cache.get(int(vid)) is not None:
+                        hits += 1
+                    else:
+                        cache.put(int(vid), True)
+                        misses += 1
+                        round_miss += 1
+                if round_miss:
+                    io_rounds += 1
+            # decompressions: EF list decode per fetched list (graph tier)
+            # + per-record decompress on the vector tier (§3.3 layout).
+            dec = (misses + hits if self.p.use_ef else 0) + int(exact[qi])
+            report.graph_ios += misses
+            report.cache_hits += hits
+            report.vector_ios += int(exact[qi])
+            report.pq_ops += int(pq_ops[qi])
+            report.exact_ops += int(exact[qi])
+            report.decompressions += dec
+            report.io_rounds += io_rounds
+            report.rerank_batches += int(batches[qi])
+            io = io_rounds * T_IO
+            cpu = (int(pq_ops[qi]) * T_PQ + int(exact[qi]) * T_EX
+                   + dec * T_DEC)
+            tail = max(0, int(batches[qi]) - 1) * T_IO * 0.5
+            lat[qi] = max(io, cpu) + min(io, cpu) * 0.1 + tail
+        return lat

@@ -6,6 +6,16 @@ production encoder), indexed by a DecoupleVS decoupled compressed store, and
 retrieved at serve time to prepend context before generation. The retrieval
 tier's I/O accounting (block reads, cache hits) is surfaced per request so
 the serving dashboard sees the paper's metrics.
+
+Two retrieval paths share the same decoupled artifacts:
+
+- ``batch=0`` (default): the host I/O-model engine
+  (``core/search/engine.search_decoupled``), one query at a time — exact
+  block-level accounting against the physical stores.
+- ``batch>0``: the batched device path (``serve/ann.BatchedSearcher``) —
+  pad-and-bucket batches through the hand-batched beam search, with the
+  same metrics reproduced by replaying device fetch traces through the
+  §3.4 LRU model.
 """
 from __future__ import annotations
 
@@ -15,9 +25,12 @@ import numpy as np
 
 from repro.core.graph.pq import encode_pq, train_pq
 from repro.core.graph.vamana import build_vamana
+from repro.core.index import device_index_from_artifacts
+from repro.core.search.beam import SearchParams
 from repro.core.search.engine import EngineConfig, search_decoupled
 from repro.core.storage.index_store import CompressedIndexStore
 from repro.core.storage.vector_store import DecoupledVectorStore, StoreConfig
+from repro.serve.ann import BatchedSearcher, ServeConfig
 from repro.serve.engine import ServeEngine
 
 
@@ -34,6 +47,8 @@ class RAGPipeline:
     doc_tokens: np.ndarray = None        # [n_docs, doc_len]
     k: int = 2
     cache_bytes: int = 1 << 16
+    batch: int = 0    # >0: serve retrieval through the batched device path
+                      # (max bucket size = batch)
 
     def __post_init__(self):
         params = self.engine.params
@@ -50,10 +65,29 @@ class RAGPipeline:
         self.vector_store.seal_active()
         self.cfg = EngineConfig(l_size=32, k=self.k, latency_aware=True,
                                 compressed=True)
+        self.searcher = None
+        if self.batch:
+            index = device_index_from_artifacts(vecs, graph, self.cb,
+                                                self.codes)
+            p = SearchParams(l_size=32, beam_width=4, k=self.k,
+                             rerank_batch=5, r_max=16, universe=len(vecs),
+                             max_iters=64)
+            buckets = tuple(sorted({1, min(8, self.batch), self.batch}))
+            self.searcher = BatchedSearcher(
+                index, p, ServeConfig(buckets=buckets,
+                                      cache_bytes=self.cache_bytes))
 
     def retrieve(self, query_tokens: np.ndarray):
-        """-> (doc ids [B, k], per-query stats)."""
+        """-> (doc ids [B, k], stats dict with the paper's I/O metrics)."""
         q = embed_tokens(self.engine.params, query_tokens)
+        if self.searcher is not None:
+            ids, _, rep = self.searcher.search(q)
+            ids = np.where(ids >= 0, ids, 0)
+            return ids[:, :self.k], {
+                "graph_ios": rep.graph_ios, "vector_ios": rep.vector_ios,
+                "cache_hits": rep.cache_hits, "qps": rep.qps,
+                "modeled_latency_us": rep.modeled_latency_us,
+                "buckets": rep.buckets}
         ids, stats = [], []
         for row in q:
             i, s = search_decoupled(self.index_store, self.vector_store,
@@ -61,7 +95,10 @@ class RAGPipeline:
             ids.append(np.pad(i[:self.k], (0, max(0, self.k - len(i))),
                               constant_values=0))
             stats.append(s)
-        return np.stack(ids), stats
+        return np.stack(ids), {
+            "graph_ios": sum(s.graph_ios for s in stats),
+            "vector_ios": sum(s.vector_ios for s in stats),
+            "cache_hits": sum(s.cache_hits for s in stats)}
 
     def answer(self, query_tokens: np.ndarray, max_new: int = 8):
         """Retrieve-then-generate. -> (generated tokens, retrieval stats)."""
@@ -69,7 +106,5 @@ class RAGPipeline:
         ctx = self.doc_tokens[doc_ids].reshape(len(query_tokens), -1)
         prompt = np.concatenate([ctx, query_tokens], axis=1)
         gen = self.engine.generate(prompt, max_new=max_new)
-        return gen, {"retrieved": doc_ids,
-                     "graph_ios": sum(s.graph_ios for s in stats),
-                     "vector_ios": sum(s.vector_ios for s in stats),
-                     "cache_hits": sum(s.cache_hits for s in stats)}
+        stats = dict(stats, retrieved=doc_ids)
+        return gen, stats

@@ -1,6 +1,7 @@
 """Codec correctness: roundtrips, paper bounds, entropy orderings."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in the container; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.codec import bitpack, elias_fano as ef, huffman, xor_delta, entropy

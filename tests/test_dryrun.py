@@ -21,7 +21,8 @@ def _run(body: str, devices: int = 8) -> dict:
     proc = subprocess.run([sys.executable, "-c", script],
                           capture_output=True, text=True, timeout=500,
                           env={"PYTHONPATH": str(REPO / "src"),
-                               "PATH": "/usr/bin:/bin"}, cwd=str(REPO))
+                               "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"}, cwd=str(REPO))
     assert proc.returncode == 0, proc.stderr[-3000:]
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT::")]
     assert line, proc.stdout[-2000:]

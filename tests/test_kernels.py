@@ -3,6 +3,7 @@ shape/dtype sweeps + hypothesis property tests."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # not in the container; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.codec.elias_fano import encode_slot, slot_layout

@@ -10,7 +10,8 @@ def _run(args, timeout=400):
     proc = subprocess.run(
         [sys.executable] + args, capture_output=True, text=True,
         timeout=timeout, cwd=str(REPO),
-        env={"PYTHONPATH": f"{REPO}/src:{REPO}", "PATH": "/usr/bin:/bin"})
+        env={"PYTHONPATH": f"{REPO}/src:{REPO}", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
     assert proc.returncode == 0, proc.stderr[-2500:]
     return proc.stdout
 

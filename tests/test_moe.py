@@ -3,6 +3,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # not in the container; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.models.moe import (MoEConfig, _combine_one_group,

@@ -1,0 +1,149 @@
+"""Batched multi-tenant serving path (`repro.serve.ann`).
+
+The two contracts the serving tier must keep (ISSUE 2 acceptance):
+(a) batching is invisible — a bucketed/padded batch returns exactly what
+    per-query (nq=1) search returns, including ragged final buckets;
+(b) shard fan-out + global top-K merge returns exactly the unsharded top-K
+    when every path is run exhaustively (L >= n per shard, benefit test
+    disabled), so the merge itself is lossless.
+"""
+import numpy as np
+import pytest
+
+from repro.core.distributed.sharded_index import build_sharded_index
+from repro.core.index import build_device_index
+from repro.core.search.beam import SearchParams, search, search_vmapped
+from repro.data.synthetic import ground_truth, make_queries, make_vector_dataset
+from repro.serve.ann import BatchedSearcher, ServeConfig, plan_buckets
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    vecs = make_vector_dataset("prop-like", n=700, dim=16,
+                               seed=0).astype(np.float32)
+    index, graph, cb = build_device_index(vecs, r=16, l_build=32, pq_m=4,
+                                          seed=0)
+    queries = make_queries("prop-like", 32, 16).astype(np.float32)
+    return vecs, index, queries
+
+
+def _params(n, **kw):
+    d = dict(l_size=32, beam_width=4, k=5, rerank_batch=5, r_max=16,
+             universe=n, max_iters=64)
+    d.update(kw)
+    return SearchParams(**d)
+
+
+def test_plan_buckets():
+    assert plan_buckets(7, (1, 8, 32)) == [(0, 7, 8)]
+    assert plan_buckets(32, (1, 8, 32)) == [(0, 32, 32)]
+    assert plan_buckets(71, (1, 8, 32)) == [(0, 32, 32), (32, 32, 32),
+                                            (64, 7, 8)]
+    assert plan_buckets(1, (1, 8, 32)) == [(0, 1, 1)]
+    # A tail whose covering bucket wastes more rows than the tail itself is
+    # decomposed into smaller full buckets instead of padded (9 -> 8 + 1).
+    assert plan_buckets(9, (1, 8, 32)) == [(0, 8, 8), (8, 1, 1)]
+    assert plan_buckets(3, (8, 32)) == [(0, 3, 8)]   # nothing fits: pad
+    with pytest.raises(ValueError):
+        plan_buckets(4, (0,))
+
+
+@pytest.mark.parametrize("nq", [1, 7, 32])
+def test_batched_equals_per_query(small_world, nq):
+    """(a): B in {1, 7, 32} through pad-and-bucket serving == nq=1 search.
+    nq=7 exercises the ragged final bucket (padded up to 8)."""
+    vecs, index, queries = small_world
+    p = _params(len(vecs))
+    searcher = BatchedSearcher(index, p, ServeConfig(buckets=(1, 8, 32)))
+    ids, dists, report = searcher.search(queries[:nq])
+    assert ids.shape == (nq, p.k)
+    for qi in range(nq):
+        i1, d1, _ = search(index, queries[qi][None], searcher.p)
+        np.testing.assert_array_equal(ids[qi], np.asarray(i1)[0])
+        np.testing.assert_array_equal(dists[qi], np.asarray(d1)[0])
+
+
+def test_direct_batch_equals_per_query(small_world):
+    """The device batch program itself (no serving layer) is row-exact."""
+    vecs, index, queries = small_world
+    p = _params(len(vecs))
+    ids, dists, stats = search(index, queries, p)
+    for qi in [0, 13, 31]:
+        i1, d1, s1 = search(index, queries[qi][None], p)
+        np.testing.assert_array_equal(np.asarray(ids)[qi], np.asarray(i1)[0])
+        np.testing.assert_array_equal(np.asarray(dists)[qi],
+                                      np.asarray(d1)[0])
+        assert int(np.asarray(stats.iters)[qi]) == int(s1.iters[0])
+        assert int(np.asarray(stats.exact_dists)[qi]) == int(s1.exact_dists[0])
+
+
+def test_vmapped_matches_batched(small_world):
+    """The legacy vmap formulation and the hand-batched loop agree."""
+    vecs, index, queries = small_world
+    p = _params(len(vecs))
+    ids_b, d_b, _ = search(index, queries[:8], p)
+    ids_v, d_v, _ = search_vmapped(index, queries[:8], p)
+    np.testing.assert_array_equal(np.asarray(ids_b), np.asarray(ids_v))
+    np.testing.assert_allclose(np.asarray(d_b), np.asarray(d_v))
+
+
+def test_sharded_merge_equals_unsharded(small_world):
+    """(b): with exhaustive search (L >= shard n, benefit test off), the
+    2-shard fan-out + global top-K merge == unsharded top-K == brute force,
+    ids and distances."""
+    vecs, _, _ = small_world
+    sub = vecs[:240]                       # 2 shards x 120, no padding
+    queries = make_queries("prop-like", 16, 16).astype(np.float32)
+    gt = ground_truth(sub, queries, k=5)
+
+    # Exhaustive settings: the candidate list can hold every vertex and
+    # re-ranking covers it fully, so graph search degenerates to exact.
+    exh = dict(l_size=256, beam_width=4, k=5, rerank_batch=16,
+               benefit_threshold=0.0, max_rerank_batches=32, r_max=24,
+               max_iters=256)
+
+    un_index, _, _ = build_device_index(sub, r=24, l_build=48, pq_m=4, seed=0)
+    p_un = SearchParams(universe=len(sub), **exh)
+    un = BatchedSearcher(un_index, p_un, ServeConfig(buckets=(16,)))
+    ids_un, d_un, _ = un.search(queries)
+
+    sh_index, per = build_sharded_index(sub, 2, r=24, l_build=48, pq_m=4)
+    p_sh = SearchParams(universe=per, **exh)
+    sh = BatchedSearcher(sh_index, p_sh, ServeConfig(buckets=(16,)),
+                         shard_size=per)
+    ids_sh, d_sh, rep = sh.search(queries)
+
+    assert rep.n_shards == 2
+    np.testing.assert_array_equal(ids_un, gt)      # both paths are exact
+    np.testing.assert_array_equal(ids_sh, gt)
+    np.testing.assert_allclose(d_sh, d_un, rtol=1e-6)
+    assert ids_sh.max() >= per                     # ids from shard 1 present
+
+
+def test_io_accounting(small_world):
+    """The admission layer replays fetch traces through the §3.4 LRU: a
+    repeated identical batch must be (mostly) cache hits, and the counters
+    must be internally consistent."""
+    vecs, index, queries = small_world
+    p = _params(len(vecs))
+    searcher = BatchedSearcher(index, p, ServeConfig(buckets=(8,),
+                                                     cache_bytes=1 << 20))
+    _, _, r1 = searcher.search(queries[:8])
+    assert r1.graph_ios > 0
+    assert r1.vector_ios == r1.exact_ops > 0
+    assert r1.io_rounds > 0 and r1.modeled_latency_us > 0
+    _, _, r2 = searcher.search(queries[:8])
+    assert r2.graph_ios == 0                       # cache is warm now
+    assert r2.cache_hits >= r1.graph_ios
+
+
+def test_stats_disabled_path(small_world):
+    """account_io=False serves without tracing (empty trace, no replay)."""
+    vecs, index, queries = small_world
+    p = _params(len(vecs))
+    searcher = BatchedSearcher(index, p,
+                               ServeConfig(buckets=(8,), account_io=False))
+    ids, dists, rep = searcher.search(queries[:8])
+    assert rep.graph_ios == 0 and rep.modeled_latency_us == 0
+    ids_ref, _, _ = search(index, queries[:8], p)
+    np.testing.assert_array_equal(ids, np.asarray(ids_ref))

@@ -1,6 +1,7 @@
 """Hierarchical layouts, compression stores, and the paper's §3.3 arithmetic."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in the container; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.storage import BLOCK_SIZE, DecoupledVectorStore, StoreConfig
