@@ -3,10 +3,19 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke bench quickstart
+.PHONY: test test-fast test-kernels bench-smoke bench bench-kernels quickstart
 
 test:            ## tier-1: full test suite, stop at first failure (~2.5 min)
 	$(PY) -m pytest -x -q
+
+test-fast:       ## tier-1 minus the slow interpret-mode sweeps
+	$(PY) -m pytest -x -q -m "not slow"
+
+test-kernels:    ## kernel conformance + backend-equivalence tier
+	$(PY) -m pytest -x -q tests/test_kernel_conformance.py tests/test_kernels.py tests/test_search.py
+
+bench-kernels:   ## ref-vs-pallas per op + e2e -> BENCH_kernels.json
+	$(PY) -m benchmarks.bench_kernels
 
 bench-smoke:     ## ~30 s serving-path benchmark (QPS vs batch x shards)
 	$(PY) -m benchmarks.bench_serve_ann --smoke

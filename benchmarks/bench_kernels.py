@@ -1,21 +1,35 @@
-"""Kernel micro-benchmarks: Pallas (interpret mode — CPU container; on a
-real TPU the same call dispatches the compiled kernel) vs jnp oracle.
-Reported timings on CPU measure the ORACLE (the deployable CPU path);
-interpret-mode timings are correctness-only and not indicative.
+"""Kernel tier benchmark: ref vs pallas per op × size, plus the end-to-end
+batched search under each backend — written to ``BENCH_kernels.json``.
+
+Backends go through the dispatch layer exactly as the hot path does: the
+``pallas`` request resolves at config time (compiled Mosaic kernel on TPU;
+the interpreter on this CPU container). Interpret-mode timings are
+CORRECTNESS-mode numbers — they validate that the kernel programs run and
+agree, they do not measure kernel performance; on CPU the deployable path
+is ``ref`` (the jnp oracle XLA compiles). The JSON records which mode the
+pallas column ran in so downstream comparisons stay honest.
+
+Env: REPRO_BENCH_KERNELS_N rescales the e2e corpus (default 768);
+REPRO_BENCH_OUT overrides the JSON path (default ./BENCH_kernels.json).
 """
+import json
+import os
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.byteplane import byteplane_decode_ref
-from repro.kernels.ef_decode import ef_decode_ref
-from repro.kernels.pq_adc import pq_adc_ref
-from repro.kernels.rerank_l2 import rerank_l2_ref
 from repro.core.codec.elias_fano import encode_slot
+from repro.core.index import build_device_index, recall_at_k
+from repro.core.search.beam import SearchParams, search
+from repro.data.synthetic import ground_truth, make_queries, make_vector_dataset
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelConfig
 
 from .common import csv
+
+REF = KernelConfig("ref", "ref", "ref", "ref")
 
 
 def _bench(fn, *args, iters=20):
@@ -28,29 +42,93 @@ def _bench(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(quiet=False):
+def _op_rows(pallas_cfg):
     rng = np.random.default_rng(0)
-    codes = jnp.asarray(rng.integers(0, 256, (4096, 8), dtype=np.uint8))
-    lut = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))
-    us = _bench(jax.jit(pq_adc_ref), codes, lut)
-    csv("kernel/pq_adc_ref", us, "n=4096;m=8;oracle=jnp")
+    rows = []
+
+    def add(op, size, call, iters=20):
+        for name, cfg in (("ref", REF), ("pallas", pallas_cfg)):
+            us = _bench(lambda: call(cfg), iters=iters)
+            rows.append(dict(op=op, backend=name, size=size, us=round(us, 2)))
+            csv(f"kernel/{op}/{name}", us, size)
+
+    for n in (1024, 4096):
+        codes = jnp.asarray(rng.integers(0, 256, (n, 8), dtype=np.uint8))
+        lut = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))
+        add("pq_adc", f"n={n};m=8;k=256",
+            lambda cfg, c=codes, l=lut: dispatch.pq_adc(c, l, cfg))
+
+    codes_b = jnp.asarray(rng.integers(0, 256, (32, 128, 8), dtype=np.uint8))
+    luts_b = jnp.asarray(rng.normal(size=(32, 8, 256)).astype(np.float32))
+    add("pq_adc_batched", "nq=32;n=128;m=8",
+        lambda cfg: dispatch.pq_adc_batched(codes_b, luts_b, cfg))
 
     slots = jnp.asarray(np.stack([
         encode_slot(np.sort(rng.choice(10**6, 24, replace=False)
                             .astype(np.uint64)), 32, 10**6)
         for _ in range(256)]))
-    us = _bench(jax.jit(lambda s: ef_decode_ref(s, 32, 10**6)), slots)
-    csv("kernel/ef_decode_ref", us, "lists=256;r=32;oracle=jnp")
+    add("ef_decode", "lists=256;r=32;u=1e6",
+        lambda cfg: dispatch.ef_decode(slots, 32, 10**6, cfg), iters=5)
 
-    q = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
-    c = jnp.asarray(rng.normal(size=(8, 128, 128)).astype(np.float32))
-    us = _bench(jax.jit(rerank_l2_ref), q, c)
-    csv("kernel/rerank_l2_ref", us, "q=8;c=128;d=128;oracle=jnp")
+    for q, c, d in ((8, 128, 128), (32, 130, 64)):
+        qs = jnp.asarray(rng.normal(size=(q, d)).astype(np.float32))
+        cs = jnp.asarray(rng.normal(size=(q, c, d)).astype(np.float32))
+        add("rerank_l2", f"q={q};c={c};d={d}",
+            lambda cfg, a=qs, b=cs: dispatch.rerank_l2(a, b, cfg))
 
     packed = jnp.asarray(rng.integers(0, 256, (4096, 128), dtype=np.uint8))
     base = jnp.asarray(rng.integers(0, 256, 128, dtype=np.uint8))
-    us = _bench(jax.jit(byteplane_decode_ref), packed, base)
-    csv("kernel/byteplane_ref", us, "n=4096;v=128;oracle=jnp")
+    add("byteplane", "n=4096;v=128",
+        lambda cfg: dispatch.byteplane_decode(packed, base, cfg))
+    return rows
+
+
+def _e2e_rows(pallas_cfg, n, nq=32, reps=3):
+    dim, r, pq_m = 32, 16, 4
+    vecs = make_vector_dataset("sift-like", n, dim, seed=0).astype(np.float32)
+    queries = make_queries("sift-like", nq, dim).astype(np.float32)
+    gt = ground_truth(vecs, queries, k=10)
+    index, _, _ = build_device_index(vecs, r=r, l_build=32, pq_m=pq_m, seed=0)
+    base = SearchParams(l_size=48, beam_width=4, k=10, rerank_batch=10,
+                        r_max=r, universe=n, max_iters=128)
+    rows = []
+    for name, cfg in (("ref", REF), ("pallas", pallas_cfg)):
+        p = base._replace(kernels=cfg)
+        qj = jnp.asarray(queries)
+        ids, _, _ = search(index, qj, p)              # compile + warm
+        jax.block_until_ready(ids)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ids, dists, _ = search(index, qj, p)
+        jax.block_until_ready(ids)
+        us_q = (time.perf_counter() - t0) * 1e6 / (reps * nq)
+        rec = recall_at_k(np.asarray(ids), gt, 10)
+        rows.append(dict(op="search_batched", backend=name,
+                         size=f"n={n};nq={nq};dim={dim}",
+                         us_per_query=round(us_q, 2),
+                         qps=round(1e6 / us_q), recall_at_10=round(rec, 4)))
+        csv(f"kernel/search_batched/{name}", us_q,
+            f"n={n};nq={nq};qps={1e6/us_q:.0f};recall={rec:.3f}")
+    return rows
+
+
+def main(quiet=False):
+    pallas_cfg = KernelConfig("pallas", "pallas", "pallas",
+                              "pallas").resolve()
+    n = int(os.environ.get("REPRO_BENCH_KERNELS_N", 768))
+    ops = _op_rows(pallas_cfg)
+    e2e = _e2e_rows(pallas_cfg, n)
+    doc = dict(
+        platform=jax.default_backend(),
+        pallas_resolved_as=pallas_cfg.pq_adc,
+        note=("pallas timings are interpreter (correctness) mode off-TPU — "
+              "compare ref vs pallas only where pallas_resolved_as=='pallas'"),
+        ops=ops, e2e=e2e)
+    out = os.environ.get("REPRO_BENCH_OUT", "BENCH_kernels.json")
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2)
+    if not quiet:
+        print(f"# wrote {out} ({len(ops)} op rows, {len(e2e)} e2e rows)")
 
 
 if __name__ == "__main__":

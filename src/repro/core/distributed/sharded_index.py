@@ -24,7 +24,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..index import build_device_index
-from ..search.beam import DeviceIndex, SearchParams, search_batched
+from ..search.beam import (DeviceIndex, SearchParams, resolve_kernels,
+                           search_batched)
 
 
 class ShardedIndex(NamedTuple):
@@ -62,6 +63,12 @@ def build_sharded_index(vectors: np.ndarray, n_shards: int, r: int = 32,
 
 
 def _sharded_fn(mesh, p: SearchParams, axis, shard_size):
+    # Config time: kernel backends are pinned BEFORE shard_map builds the
+    # program, so per-shard traces never consult the platform (the dispatch
+    # layer's contract on mixed-backend meshes) — resolved against the
+    # MESH's platform, not the driving process's default backend.
+    p = resolve_kernels(p, platform=mesh.devices.flat[0].platform)
+
     def local_search(nbrs, cnts, slots, codes, cents, vecs, medoid, queries):
         local = DeviceIndex(
             neighbors=nbrs[0], counts=cnts[0], ef_slots=slots[0],

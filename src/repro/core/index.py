@@ -60,6 +60,32 @@ def build_device_index(vectors: np.ndarray, r: int = 32, l_build: int = 64,
     return device_index_from_artifacts(vectors, graph, cb, codes), graph, cb
 
 
+def verify_index_slots(index: DeviceIndex, r_max: int,
+                       universe: int | None = None, kernels=None) -> bool:
+    """Decode every EF slot through the kernel dispatch layer and check it
+    reproduces the raw adjacency exactly (the compressed index tier is
+    lossless — the paper's Q1 fidelity requirement, checked with whatever
+    backend ``kernels`` names: jnp oracle or the Pallas decode kernel).
+
+    Slots store adjacency sorted ascending (order-independent search,
+    §3.2), so the raw lists are compared as sorted sets.
+    """
+    from repro.kernels import dispatch
+    n, r = index.neighbors.shape
+    universe = universe or n
+    vals, cnts = dispatch.ef_decode(index.ef_slots, r_max, universe, kernels)
+    if not bool(jnp.all(cnts == index.counts)):
+        return False
+    j = jnp.arange(max(r, r_max), dtype=jnp.int32)
+    dec = jnp.where(j[None, :r_max] < cnts[:, None], vals, universe)
+    raw = jnp.where(j[None, :r] < index.counts[:, None],
+                    index.neighbors, universe)
+    width = max(r, r_max)
+    pad = lambda a: jnp.pad(a, ((0, 0), (0, width - a.shape[1])),
+                            constant_values=universe)
+    return bool(jnp.all(jnp.sort(pad(dec), 1) == jnp.sort(pad(raw), 1)))
+
+
 def recall_at_k(pred_ids: np.ndarray, gt_ids: np.ndarray, k: int) -> float:
     """Fraction of true top-k found (paper's recall@10 metric, §4.1)."""
     hits = 0

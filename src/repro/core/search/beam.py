@@ -26,9 +26,13 @@ formulation is kept as `search_vmapped` — it is the measured baseline that
 `benchmarks/bench_serve_ann.py` compares against.
 
 The uncompressed-adjacency variant exists for the paper's ablation (Exp#1
-"Decouple" / "DecoupleSearch" arms). PQ ADC and EF decode have Pallas TPU
-kernels (`repro.kernels`); here we call their jnp oracles so the same program
-runs on CPU tests and TPU (kernel dispatch switched in `ops.py`).
+"Decouple" / "DecoupleSearch" arms). The compute stages — batched PQ ADC,
+EF slot decode, exact re-rank — go through the kernel dispatch layer
+(`repro.kernels.dispatch`, docs/KERNELS.md): `SearchParams.kernels` names a
+backend per op (`ref` jnp oracle / `pallas` TPU kernel /
+`pallas-interpret`), resolved once at config time (`resolve_kernels`), so
+the same program runs on CPU tests and TPU with zero trace-time platform
+checks.
 """
 from __future__ import annotations
 
@@ -38,8 +42,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from ..codec.elias_fano import decode_slot_jnp, slot_layout
-from ..graph.pq import adc_lookup_jnp, build_lut_jnp
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelConfig
+
+from ..graph.pq import build_lut_jnp
 
 
 class DeviceIndex(NamedTuple):
@@ -69,6 +75,9 @@ class SearchParams(NamedTuple):
     trace_fetches: bool = False  # record the per-round adjacency-fetch ids so
                                  # the serving tier can replay them through
                                  # the §3.4 LRU / I/O model (serve/ann.py)
+    kernels: KernelConfig | None = None  # per-op compute backend (dispatch
+                                 # layer); None -> REPRO_KERNELS env default.
+                                 # Resolve at config time (resolve_kernels).
 
 
 class SearchStats(NamedTuple):
@@ -80,6 +89,25 @@ class SearchStats(NamedTuple):
     pq_dists: jnp.ndarray          # [nq] PQ (ADC) distance computations
     fetch_trace: jnp.ndarray       # [nq, max_iters, W] fetched vertex ids
                                    # (-1 = none; empty unless trace_fetches)
+
+
+def resolve_kernels(p: SearchParams,
+                    platform: str | None = None) -> SearchParams:
+    """Fill ``p.kernels`` with a concrete per-op backend config.
+
+    This is the single config-time resolution point: ``None`` takes the
+    ``REPRO_KERNELS`` env default, ``auto`` entries resolve for
+    ``platform`` (default: the process backend), and a raw ``pallas``
+    request degrades to the interpreter off-TPU. Public entry points call
+    it before jit, so no backend checks survive into (or run during)
+    tracing; a caller composing ``search_batched`` inside its own
+    jit/shard_map (e.g. ``make_sharded_search``) should call it when the
+    program is built, passing the mesh's platform.
+    """
+    k = p.kernels
+    k = (dispatch.from_env(platform=platform) if k is None
+         else k.resolve(platform))
+    return p if k == p.kernels else p._replace(kernels=k)
 
 
 def _hash_slots(ids, bits: int):
@@ -95,11 +123,10 @@ def _gather_neighbors(index: DeviceIndex, sel_ids: jnp.ndarray,
     safe = jnp.clip(sel_ids, 0, n - 1)
     if p.use_ef:
         universe = p.universe or n
-        def dec(slot):
-            vals, cnt = decode_slot_jnp(slot, p.r_max, universe)
-            j = jnp.arange(p.r_max, dtype=jnp.int32)
-            return jnp.where(j < cnt, vals, -1)
-        nbrs = jax.vmap(dec)(index.ef_slots[safe.reshape(-1)])
+        vals, cnts = dispatch.ef_decode(index.ef_slots[safe.reshape(-1)],
+                                        p.r_max, universe, p.kernels)
+        j = jnp.arange(p.r_max, dtype=jnp.int32)
+        nbrs = jnp.where(j[None, :] < cnts[:, None], vals, -1)
         nbrs = nbrs.reshape(safe.shape + (p.r_max,))
     else:
         nbrs = index.neighbors[safe]
@@ -107,9 +134,11 @@ def _gather_neighbors(index: DeviceIndex, sel_ids: jnp.ndarray,
     return nbrs.reshape(nq, -1)
 
 
-def _adc_batch(codes: jnp.ndarray, luts: jnp.ndarray) -> jnp.ndarray:
-    """[nq, m, M] codes x [nq, M, K] per-query LUTs -> [nq, m] distances."""
-    return jax.vmap(adc_lookup_jnp)(codes, luts)
+def _adc_batch(codes: jnp.ndarray, luts: jnp.ndarray,
+               kernels: KernelConfig | None) -> jnp.ndarray:
+    """[nq, m, M] codes x [nq, M, K] per-query LUTs -> [nq, m] distances
+    (the batched pq_adc op: jnp gather-sum or one-hot × LUT MXU matmul)."""
+    return dispatch.pq_adc_batched(codes, luts, kernels)
 
 
 def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
@@ -138,7 +167,7 @@ def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
     trace_len = p.max_iters if p.trace_fetches else 0
 
     entry = jnp.broadcast_to(index.medoid.astype(jnp.int32), (nq,))
-    e_d = _adc_batch(index.pq_codes[entry][:, None, :], luts)[:, 0]
+    e_d = _adc_batch(index.pq_codes[entry][:, None, :], luts, p.kernels)[:, 0]
     cand_ids = jnp.full((nq, L), -1, jnp.int32).at[:, 0].set(entry)
     cand_d = jnp.full((nq, L), jnp.inf, jnp.float32).at[:, 0].set(e_d)
     if use_hash:
@@ -216,7 +245,7 @@ def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
                 True, mode="drop")
         new_ids = jnp.where(ok, uniq, -1)
         codes = index.pq_codes[jnp.clip(new_ids, 0, n - 1)]
-        new_d = jnp.where(ok, _adc_batch(codes, luts), jnp.inf)
+        new_d = jnp.where(ok, _adc_batch(codes, luts, p.kernels), jnp.inf)
         pq_ct = pq_ct + jnp.sum(ok, 1).astype(jnp.int32)
 
         merged_ids = jnp.concatenate([cand_ids, new_ids], 1)
@@ -261,9 +290,8 @@ def rerank(index: DeviceIndex, queries: jnp.ndarray, cand_ids: jnp.ndarray,
     max_batches = min(p.max_rerank_batches, max(0, (p.l_size - K) // B))
 
     def exact(ids):
-        v = index.vectors[jnp.clip(ids, 0, n - 1)].astype(jnp.float32)
-        q = queries[:, None, :].astype(jnp.float32)
-        d = ((v - q) ** 2).sum(-1)
+        v = index.vectors[jnp.clip(ids, 0, n - 1)]
+        d = dispatch.rerank_l2(queries, v, p.kernels)
         return jnp.where(ids >= 0, d, jnp.inf)
 
     # Batch 0: the prefetched top-K (always re-ranked).
@@ -309,7 +337,17 @@ def search_batched(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
     """Batch-first search core (unjitted — compose inside jit/shard_map).
 
     queries [nq, d] -> (ids [nq, K], dists [nq, K], SearchStats of [nq]).
+
+    ``p.kernels`` should already be resolved (``resolve_kernels``) by the
+    caller that builds the program; the fallback here only fires for ad-hoc
+    direct calls with a None/auto config. A concrete config passes through
+    UNTOUCHED — re-resolving here would re-query the platform inside the
+    caller's trace and silently rewrite a deliberately pinned ``pallas``
+    config when the driving process's default backend differs from the
+    target mesh.
     """
+    if p.kernels is None or not p.kernels.is_resolved:
+        p = resolve_kernels(p)
     luts = jax.vmap(
         lambda q: build_lut_jnp(q.astype(jnp.float32), index.pq_centroids)
     )(queries)
@@ -322,9 +360,17 @@ def search_batched(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
 
 
 @functools.partial(jax.jit, static_argnames=("p",))
-def search(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
-    """Batched search -> (ids [nq, K], dists [nq, K], stats of [nq] each)."""
+def _search_jit(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
     return search_batched(index, queries, p)
+
+
+def search(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
+    """Batched search -> (ids [nq, K], dists [nq, K], stats of [nq] each).
+
+    Resolves ``p.kernels`` before entering jit (config time), so each
+    backend choice is a distinct static compilation, never a traced check.
+    """
+    return _search_jit(index, queries, resolve_kernels(p))
 
 
 def search_one(index: DeviceIndex, query: jnp.ndarray, p: SearchParams):
@@ -334,6 +380,15 @@ def search_one(index: DeviceIndex, query: jnp.ndarray, p: SearchParams):
 
 
 @functools.partial(jax.jit, static_argnames=("p",))
+def _search_vmapped_jit(index: DeviceIndex, queries: jnp.ndarray,
+                        p: SearchParams):
+    def solo(q):
+        ids, dists, stats = search_batched(index, q[None], p)
+        return (ids[0], dists[0],
+                jax.tree_util.tree_map(lambda x: x[0], stats))
+    return jax.vmap(solo)(queries)
+
+
 def search_vmapped(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
     """Legacy per-query vmap formulation (the pre-batching baseline).
 
@@ -342,8 +397,4 @@ def search_vmapped(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
     batched-vs-vmapped comparison in bench_serve_ann (~3x on XLA CPU,
     growing with n).
     """
-    def solo(q):
-        ids, dists, stats = search_batched(index, q[None], p)
-        return (ids[0], dists[0],
-                jax.tree_util.tree_map(lambda x: x[0], stats))
-    return jax.vmap(solo)(queries)
+    return _search_vmapped_jit(index, queries, resolve_kernels(p))

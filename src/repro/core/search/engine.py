@@ -32,9 +32,42 @@ import numpy as np
 from ..graph.pq import PQCodebook, adc_lookup_np, build_lut
 
 T_IO = 80.0
-T_PQ = 0.05
-T_EX = 0.10
-T_DEC = 0.20
+
+# Per-backend compute costs (µs/op) for the latency model. "ref" prices the
+# paper's CPU implementation (the constants documented above); "pallas"
+# prices the TPU kernels (roofline estimate: ADC becomes a one-hot × LUT
+# matmul on the MXU, exact distances become MXU tiles, EF decode is VPU bit
+# ops — an order of magnitude under the scalar-CPU figures).
+# "pallas-interpret" is a *correctness* mode (the kernel run by the Pallas
+# interpreter on CPU) and is priced as ref so validation runs stay honest.
+KERNEL_COST_US = {
+    "ref":              {"pq": 0.05, "ex": 0.10, "dec": 0.20},
+    "pallas":           {"pq": 0.005, "ex": 0.01, "dec": 0.02},
+    "pallas-interpret": {"pq": 0.05, "ex": 0.10, "dec": 0.20},
+}
+
+T_PQ = KERNEL_COST_US["ref"]["pq"]
+T_EX = KERNEL_COST_US["ref"]["ex"]
+T_DEC = KERNEL_COST_US["ref"]["dec"]
+
+
+def compute_costs(pq_backend: str = "ref", ex_backend: str | None = None,
+                  dec_backend: str | None = None) -> tuple[float, float, float]:
+    """(t_pq, t_ex, t_dec) in µs for the given per-op backends.
+
+    Ops default to the pq backend. Unknown backend names raise — silently
+    pricing a typo as ref would make the latency model lie, and this is
+    config-time validation (EngineConfig / a resolved KernelConfig), not a
+    serving hot path.
+    """
+    def cost(backend, kind):
+        if backend not in KERNEL_COST_US:
+            raise ValueError(f"unknown kernel backend {backend!r} in the "
+                             f"cost model; expected {tuple(KERNEL_COST_US)}")
+        return KERNEL_COST_US[backend][kind]
+    return (cost(pq_backend, "pq"),
+            cost(ex_backend or pq_backend, "ex"),
+            cost(dec_backend or pq_backend, "dec"))
 
 
 @dataclass
@@ -61,6 +94,7 @@ class EngineConfig:
     pipelined: bool = False
     latency_aware: bool = False     # §3.4 differentiated I/O + prefetch
     compressed: bool = False        # index/vector decompression accounting
+    kernel_backend: str = "ref"     # prices T_PQ/T_EX/T_DEC (KERNEL_COST_US)
 
 
 class _CandidateList:
@@ -230,21 +264,23 @@ def search_colocated(store, pq_codes: np.ndarray, cb: PQCodebook,
     return np.asarray([vid for _, vid in heap], np.int64), st
 
 
-def _cpu_us(st: QueryStats) -> float:
-    return st.pq_ops * T_PQ + st.exact_ops * T_EX + st.decompressions * T_DEC
+def _cpu_us(st: QueryStats, cfg: EngineConfig | None = None) -> float:
+    t_pq, t_ex, t_dec = compute_costs(cfg.kernel_backend if cfg else "ref")
+    return (st.pq_ops * t_pq + st.exact_ops * t_ex
+            + st.decompressions * t_dec)
 
 
 def _latency_colocated(st: QueryStats, cfg: EngineConfig) -> float:
     # W reads per round are issued in parallel; rounds fully served by the
     # LRU cache do not stall (cache-hit fast path).
     io = st.io_rounds * T_IO
-    cpu = _cpu_us(st)
+    cpu = _cpu_us(st, cfg)
     return max(io, cpu) + min(io, cpu) * 0.1 if cfg.pipelined else io + cpu
 
 
 def _latency_decoupled(st: QueryStats, cfg: EngineConfig) -> float:
     io = st.io_rounds * T_IO
-    cpu = _cpu_us(st)
+    cpu = _cpu_us(st, cfg)
     if cfg.latency_aware:
         # Vector I/O off the critical path (§3.4): only the final rerank
         # batches that outlast traversal add latency.

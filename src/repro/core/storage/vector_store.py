@@ -98,8 +98,14 @@ class SealedSegment:
             raise KeyError(f"ids not in segment: {np.asarray(ids)[~ok][:5]}")
         return rows
 
-    def decode_rows(self, rows: np.ndarray, io: IOStats | None = None) -> np.ndarray:
-        """Fetch + decompress records -> [k, dim] original dtype."""
+    def decode_rows(self, rows: np.ndarray, io: IOStats | None = None,
+                    kernels=None) -> np.ndarray:
+        """Fetch + decompress records -> [k, dim] original dtype.
+
+        ``kernels`` (a resolved ``repro.kernels.KernelConfig``) routes the
+        XOR-delta inverse through the byteplane kernel dispatch — the device
+        tier's load path; None/ref stays pure host numpy.
+        """
         rows = np.asarray(rows, dtype=np.int64)
         if io is not None:
             nblk = len(np.unique(self.packed.rec_block[rows]))
@@ -118,12 +124,28 @@ class SealedSegment:
             lo, hi = ci * rows_per_chunk, (ci + 1) * rows_per_chunk
             m = (rows >= lo) & (rows < hi)
             if m.any():
-                raw[m] = xor_delta.apply_delta(raw[m], cm.base)
+                raw[m] = _undelta(raw[m], cm.base, kernels)
         return raw.view(self.dtype).reshape(len(rows), self.dim)
 
     @property
     def _rows_per_chunk(self) -> int:
         return getattr(self, "_rpc", len(self.ids))
+
+
+def _undelta(block: np.ndarray, base: np.ndarray, kernels=None) -> np.ndarray:
+    """XOR-delta inverse (byte-plane decode). With a non-ref kernel config
+    the bytes go through ``repro.kernels.dispatch.byteplane_decode`` (the
+    same op the device tier fuses into its gather); XOR is lossless either
+    way, so both paths are bit-identical."""
+    if kernels is None or getattr(kernels, "byteplane", "ref") == "ref":
+        return xor_delta.apply_delta(block, base)
+    import jax.numpy as jnp
+
+    from repro.kernels import dispatch
+    kernels = kernels.resolve()   # host side (never traced): degrade a raw
+    out = dispatch.byteplane_decode(  # 'pallas' request off-TPU safely
+        jnp.asarray(block), jnp.asarray(base), kernels)
+    return np.asarray(out)
 
 
 @dataclass
@@ -159,6 +181,9 @@ class StoreConfig:
     chunk_bytes: int = 4 << 20          # C (4 MiB paper default)
     beta: float | None = None           # if set, derive C from β (§3.3)
     compress: bool = True               # False -> "Decouple" ablation arm
+    kernels: object = None              # resolved KernelConfig: route the
+                                        # XOR-delta inverse through the
+                                        # byteplane kernel on loads
 
     @property
     def v_bytes(self) -> int:
@@ -297,7 +322,8 @@ class DecoupledVectorStore:
                 continue
             seg = self.sealed[sid]
             rows = seg.rows_of(ids[poss])
-            out[np.asarray(poss)] = seg.decode_rows(rows, io=self.io)
+            out[np.asarray(poss)] = seg.decode_rows(rows, io=self.io,
+                                                    kernels=self.cfg.kernels)
         return out
 
     # ------------------------------------------------------------- updates
@@ -321,7 +347,8 @@ class DecoupledVectorStore:
             live = ~seg.stale
             if live.any():
                 rows = np.flatnonzero(live)
-                vecs = seg.decode_rows(rows, io=self.io)      # GC read I/O
+                vecs = seg.decode_rows(rows, io=self.io,      # GC read I/O
+                                       kernels=self.cfg.kernels)
                 self.append(seg.ids[rows], vecs)              # copy-forward
             # Atomic switch: old segment released only now (§3.5 consistency).
             del self.sealed[sid]

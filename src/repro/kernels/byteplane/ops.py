@@ -1,14 +1,12 @@
-"""Public byte-plane decode op."""
-import jax
+"""Public byte-plane decode op, routed through the dispatch registry.
 
-from .byteplane import byteplane_decode_pallas
-from .ref import byteplane_decode_ref
+Backend selection happens at config time (``dispatch.KernelConfig``), not
+via a trace-time ``jax.default_backend()`` check.
+"""
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelConfig
 
 
-def byteplane_decode(packed, base, *, force_kernel: bool | None = None):
-    use_kernel = force_kernel if force_kernel is not None \
-        else jax.default_backend() == "tpu"
-    if use_kernel:
-        return byteplane_decode_pallas(packed, base,
-                                       interpret=jax.default_backend() != "tpu")
-    return byteplane_decode_ref(packed, base)
+def byteplane_decode(packed, base, *, cfg: KernelConfig | None = None):
+    """[n, V] uint8 XOR [V] uint8 base -> [n, V] uint8 (lossless)."""
+    return dispatch.byteplane_decode(packed, base, cfg)

@@ -1,0 +1,183 @@
+"""Kernel dispatch layer: one registry from (op, backend) to implementation.
+
+The seed picked per-op between the Pallas kernel and the jnp oracle by
+calling ``jax.default_backend()`` *inside* each op — a trace-time check that
+is wrong under ``jit`` on mixed-backend meshes and invisible to callers.
+This module moves the decision to **config time**: a ``KernelConfig`` names
+a backend per op, ``auto`` entries are resolved exactly once (when the
+config is built — never at trace time), and the resolved config is threaded
+through ``SearchParams`` / ``BatchedSearcher`` as static jit state, so every
+op call inside the search program is a direct table lookup.
+
+Backends:
+
+    ref               pure-jnp oracle (the deployable XLA CPU path)
+    pallas            compiled ``pallas_call`` (TPU)
+    pallas-interpret  the same kernel run by the Pallas interpreter —
+                      correct everywhere, used to validate kernels on CPU
+
+Requested values additionally allow ``auto``. Resolution (once, at config
+time): ``auto`` -> ``pallas`` on TPU else ``ref``; ``pallas`` off-TPU
+degrades to ``pallas-interpret`` (a compiled Mosaic kernel only exists on
+TPU). An unresolved ``auto`` reaching ``get_impl`` is a bug and raises.
+
+Env override: ``REPRO_KERNELS=ref|pallas|auto`` (also accepts
+``pallas-interpret``) sets the backend for every op when the caller does
+not pass an explicit config (``SearchParams(kernels=None)``).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, NamedTuple
+
+import jax
+
+BACKENDS = ("ref", "pallas", "pallas-interpret")
+ENV_VAR = "REPRO_KERNELS"
+# The op list is KernelConfig._fields; the registry keys (which add the
+# batched pq_adc entry, keyed off the pq_adc config field) are authoritative.
+
+
+class KernelConfig(NamedTuple):
+    """Per-op backend selection. A plain NamedTuple of strings: hashable, so
+    it rides inside ``SearchParams`` as static jit state (changing backends
+    recompiles the search program — that is the point)."""
+    pq_adc: str = "auto"
+    ef_decode: str = "auto"
+    rerank_l2: str = "auto"
+    byteplane: str = "auto"
+
+    def resolve(self, platform: str | None = None) -> "KernelConfig":
+        """Map ``auto``/off-platform requests to concrete backends. Call at
+        config time. Idempotent: ``ref``/``pallas-interpret`` are fixed
+        points (short-circuited without a platform query); ``pallas``
+        re-checks the platform so it degrades to the interpreter off-TPU."""
+        if all(b in ("ref", "pallas-interpret") for b in self):
+            return self
+        platform = platform or jax.default_backend()
+        return KernelConfig(*(resolve_backend(b, platform) for b in self))
+
+    @property
+    def is_resolved(self) -> bool:
+        """True when no entry is ``auto`` (safe to hand to ``get_impl``).
+        Note a ``pallas`` entry still degrades per-platform in
+        ``resolve()`` — resolve at config time, don't rely on this alone."""
+        return all(b in BACKENDS for b in self)
+
+
+def resolve_backend(requested: str, platform: str | None = None) -> str:
+    """One op's requested backend -> concrete backend for ``platform``."""
+    if requested not in BACKENDS + ("auto",):
+        raise ValueError(
+            f"unknown kernel backend {requested!r}; "
+            f"expected one of {BACKENDS + ('auto',)}")
+    platform = platform or jax.default_backend()
+    if requested == "auto":
+        return "pallas" if platform == "tpu" else "ref"
+    if requested == "pallas" and platform != "tpu":
+        return "pallas-interpret"
+    return requested
+
+
+def from_env(default: str = "auto",
+             platform: str | None = None) -> KernelConfig:
+    """Uniform config from ``REPRO_KERNELS``, resolved (config time)."""
+    req = os.environ.get(ENV_VAR, default).strip() or default
+    return KernelConfig(req, req, req, req).resolve(platform)
+
+
+def default_config() -> KernelConfig:
+    """The config used when a caller passes ``kernels=None``."""
+    return from_env()
+
+
+# --------------------------------------------------------------- registry
+@functools.lru_cache(maxsize=1)
+def _registry() -> dict[tuple[str, str], Callable]:
+    # Imports are local: implementation modules must not import dispatch
+    # back (ops.py does), and building the table lazily keeps module import
+    # cycle-free.
+    from .byteplane.byteplane import byteplane_decode_pallas
+    from .byteplane.ref import byteplane_decode_ref
+    from .ef_decode.ef_decode import ef_decode_pallas
+    from .ef_decode.ref import ef_decode_ref
+    from .pq_adc.pq_adc import pq_adc_batched_pallas, pq_adc_pallas
+    from .pq_adc.ref import pq_adc_batched_ref, pq_adc_ref
+
+    from .rerank_l2.ref import rerank_l2_ref
+    from .rerank_l2.rerank_l2 import rerank_l2_pallas
+
+    def pallas(fn, interpret):
+        return functools.partial(fn, interpret=interpret)
+
+    table: dict[tuple[str, str], Callable] = {}
+    for op, ref, kern in (
+            ("pq_adc", pq_adc_ref, pq_adc_pallas),
+            ("pq_adc_batched", pq_adc_batched_ref, pq_adc_batched_pallas),
+            ("ef_decode", ef_decode_ref, ef_decode_pallas),
+            ("rerank_l2", rerank_l2_ref, rerank_l2_pallas),
+            ("byteplane", byteplane_decode_ref, byteplane_decode_pallas)):
+        table[op, "ref"] = ref
+        table[op, "pallas"] = pallas(kern, False)
+        table[op, "pallas-interpret"] = pallas(kern, True)
+    return table
+
+
+def get_impl(op: str, backend: str) -> Callable:
+    """(op, concrete backend) -> implementation. Raises on ``auto``: an
+    unresolved config reaching dispatch means selection leaked past config
+    time (exactly the trace-time bug this layer removes)."""
+    if backend == "auto":
+        raise RuntimeError(
+            f"unresolved 'auto' backend reached dispatch for op {op!r}; "
+            "call KernelConfig.resolve() at config time")
+    try:
+        return _registry()[op, backend]
+    except KeyError:
+        raise KeyError(f"no implementation registered for "
+                       f"op={op!r} backend={backend!r}") from None
+
+
+def register(op: str, backend: str, fn: Callable) -> None:
+    """Extension hook: register/override an implementation."""
+    _registry()[op, backend] = fn
+
+
+# ------------------------------------------------------------- public ops
+# Thin wrappers so hot-path call sites read as ops, not table lookups.
+# ``cfg`` must be a resolved KernelConfig (None -> env default).
+
+def _cfg(cfg: KernelConfig | None) -> KernelConfig:
+    return default_config() if cfg is None else cfg
+
+
+def pq_adc(codes, lut, cfg: KernelConfig | None = None):
+    """[n, M] codes x [M, K] LUT -> [n] ADC distances."""
+    cfg = _cfg(cfg)
+    return get_impl("pq_adc", cfg.pq_adc)(codes, lut)
+
+
+def pq_adc_batched(codes, luts, cfg: KernelConfig | None = None):
+    """[nq, n, M] codes x [nq, M, K] per-query LUTs -> [nq, n]."""
+    cfg = _cfg(cfg)
+    return get_impl("pq_adc_batched", cfg.pq_adc)(codes, luts)
+
+
+def ef_decode(slots, r_max: int, universe: int,
+              cfg: KernelConfig | None = None):
+    """[B, W] uint32 slots -> (neighbors [B, r_max], counts [B])."""
+    cfg = _cfg(cfg)
+    return get_impl("ef_decode", cfg.ef_decode)(slots, r_max, universe)
+
+
+def rerank_l2(queries, cands, cfg: KernelConfig | None = None):
+    """[Q, D] queries x [Q, C, D] candidates -> squared L2 [Q, C]."""
+    cfg = _cfg(cfg)
+    return get_impl("rerank_l2", cfg.rerank_l2)(queries, cands)
+
+
+def byteplane_decode(packed, base, cfg: KernelConfig | None = None):
+    """[n, V] uint8 XOR [V] uint8 base -> [n, V] uint8."""
+    cfg = _cfg(cfg)
+    return get_impl("byteplane", cfg.byteplane)(packed, base)

@@ -31,31 +31,39 @@ def _make_kernel(r_max: int, universe: int):
     nbits = hb * 32
 
     def kernel(slots_ref, nbr_ref, cnt_ref):
+        # Index vectors are built with broadcasted_iota INSIDE the kernel:
+        # eager jnp.arange would be captured as a closure constant, which
+        # pallas_call rejects (and TPU Mosaic requires >=2-D iota anyway).
         slots = slots_ref[...]                       # [BL, total] uint32
+        bl = slots.shape[0]
         cnt_ref[...] = slots[:, 0].astype(jnp.int32)
+        j_r = jax.lax.broadcasted_iota(jnp.int32, (1, r_max), 1)   # [1, R]
         # ---- low bits: fixed-width unpack (vectorised over lists & slots)
         if l:
-            start = jnp.arange(r_max, dtype=jnp.int32) * l
-            word = start // 32
-            off = (start % 32).astype(jnp.uint32)
-            low_words = slots[:, 1:1 + lw].astype(jnp.uint32)   # [BL, lw]
-            g0 = low_words[:, jnp.clip(word, 0, lw - 1)]
-            g1 = low_words[:, jnp.clip(word + 1, 0, lw - 1)]
-            lo = jnp.right_shift(g0, off[None, :])
-            hi = jnp.where(off[None, :] > 0,
-                           jnp.left_shift(g1, jnp.uint32(32) - off[None, :]), 0)
+            start = j_r * l
+            word = jnp.broadcast_to(start // 32, (bl, r_max))
+            off = (start % 32).astype(jnp.uint32)                  # [1, R]
+            low_words = slots[:, 1:1 + lw].astype(jnp.uint32)      # [BL, lw]
+            g0 = jnp.take_along_axis(low_words, jnp.clip(word, 0, lw - 1), 1)
+            g1 = jnp.take_along_axis(low_words,
+                                     jnp.clip(word + 1, 0, lw - 1), 1)
+            lo = jnp.right_shift(g0, off)
+            hi = jnp.where(off > 0,
+                           jnp.left_shift(g1, jnp.uint32(32) - off), 0)
             low = ((lo | hi) & jnp.uint32((1 << l) - 1)).astype(jnp.int32)
         else:
-            low = jnp.zeros((slots.shape[0], r_max), jnp.int32)
+            low = jnp.zeros((bl, r_max), jnp.int32)
         # ---- high bits: rank-compare select over the unary bitmap
-        hw = slots[:, 1 + lw:].astype(jnp.uint32)                # [BL, hb]
-        bitidx = jnp.arange(nbits, dtype=jnp.uint32)
-        bits = (hw[:, bitidx // 32] >> (bitidx % 32)) & jnp.uint32(1)
-        csum = jnp.cumsum(bits.astype(jnp.int32), axis=1)        # [BL, nbits]
-        ranks = jnp.arange(1, r_max + 1, dtype=jnp.int32)
-        hit = csum[:, None, :] == ranks[None, :, None]           # [BL, R, nbits]
+        hw = slots[:, 1 + lw:].astype(jnp.uint32)                  # [BL, hb]
+        bitidx = jax.lax.broadcasted_iota(jnp.int32, (1, nbits), 1)
+        bits = (jnp.take_along_axis(hw, jnp.broadcast_to(bitidx // 32,
+                                                         (bl, nbits)), 1)
+                >> bitidx.astype(jnp.uint32) % 32) & jnp.uint32(1)
+        csum = jnp.cumsum(bits.astype(jnp.int32), axis=1)          # [BL, nbits]
+        ranks = 1 + jax.lax.broadcasted_iota(jnp.int32, (1, r_max, 1), 1)
+        hit = csum[:, None, :] == ranks                  # [BL, R, nbits]
         pos = jnp.argmax(hit, axis=2).astype(jnp.int32)
-        high = pos - jnp.arange(r_max, dtype=jnp.int32)[None, :]
+        high = pos - j_r
         nbr_ref[...] = jnp.left_shift(high, l) | low
 
     return kernel, total

@@ -1,15 +1,13 @@
-"""Public EF slot-decode op."""
-import jax
+"""Public EF slot-decode op, routed through the dispatch registry.
 
-from .ef_decode import ef_decode_pallas
-from .ref import ef_decode_ref
+Backend selection happens at config time (``dispatch.KernelConfig``), not
+via a trace-time ``jax.default_backend()`` check.
+"""
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelConfig
 
 
 def ef_decode(slots, r_max: int, universe: int, *,
-              force_kernel: bool | None = None):
-    use_kernel = force_kernel if force_kernel is not None \
-        else jax.default_backend() == "tpu"
-    if use_kernel:
-        return ef_decode_pallas(slots, r_max, universe,
-                                interpret=jax.default_backend() != "tpu")
-    return ef_decode_ref(slots, r_max, universe)
+              cfg: KernelConfig | None = None):
+    """[B, W] uint32 slots -> (neighbors [B, r_max], counts [B])."""
+    return dispatch.ef_decode(slots, r_max, universe, cfg)

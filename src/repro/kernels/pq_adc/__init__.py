@@ -1,3 +1,3 @@
-from .ops import pq_adc  # noqa: F401
-from .pq_adc import pq_adc_pallas  # noqa: F401
-from .ref import pq_adc_ref  # noqa: F401
+from .ops import pq_adc, pq_adc_batched  # noqa: F401
+from .pq_adc import pq_adc_batched_pallas, pq_adc_pallas  # noqa: F401
+from .ref import pq_adc_batched_ref, pq_adc_ref  # noqa: F401

@@ -1,16 +1,18 @@
-"""Public ADC op: Pallas kernel on TPU, jnp oracle elsewhere."""
-import jax
-import jax.numpy as jnp
+"""Public ADC ops, routed through the dispatch registry.
 
-from .pq_adc import pq_adc_pallas
-from .ref import pq_adc_ref
+Backend selection happens at config time (``dispatch.KernelConfig``); these
+wrappers never query ``jax.default_backend()`` — passing a resolved config
+makes the implementation choice explicit and jit-static.
+"""
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelConfig
 
 
-def pq_adc(codes: jnp.ndarray, lut: jnp.ndarray, *,
-           force_kernel: bool | None = None) -> jnp.ndarray:
-    use_kernel = force_kernel if force_kernel is not None \
-        else jax.default_backend() == "tpu"
-    if use_kernel:
-        return pq_adc_pallas(codes, lut,
-                             interpret=jax.default_backend() != "tpu")
-    return pq_adc_ref(codes, lut)
+def pq_adc(codes, lut, *, cfg: KernelConfig | None = None):
+    """[n, M] codes x [M, K] LUT -> [n] ADC distances."""
+    return dispatch.pq_adc(codes, lut, cfg)
+
+
+def pq_adc_batched(codes, luts, *, cfg: KernelConfig | None = None):
+    """[nq, n, M] codes x [nq, M, K] per-query LUTs -> [nq, n]."""
+    return dispatch.pq_adc_batched(codes, luts, cfg)

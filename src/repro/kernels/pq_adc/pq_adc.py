@@ -54,3 +54,43 @@ def pq_adc_pallas(codes: jnp.ndarray, lut: jnp.ndarray,
         interpret=interpret,
     )(codes_p, lut.astype(jnp.float32))
     return out[:n]
+
+
+def _kernel_batched(codes_ref, lut_ref, out_ref):
+    # One (query, row-block) grid step: this query's LUT stays resident
+    # while its row block runs the same one-hot x LUT matmul as _kernel.
+    codes = codes_ref[0].astype(jnp.int32)            # [BN, M]
+    lut = lut_ref[0]                                  # [M, K]
+    m, k = lut.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], m, k), 2)
+    onehot = (iota == codes[:, :, None]).astype(lut.dtype)
+    flat = onehot.reshape(codes.shape[0], m * k)
+    out_ref[0, :] = jax.lax.dot_general(
+        flat, lut.reshape(m * k),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pq_adc_batched_pallas(codes: jnp.ndarray, luts: jnp.ndarray,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Batched-queries entry: [nq, n, M] codes x [nq, M, K] per-query LUTs
+    -> [nq, n] distances. Grid is (queries, row-blocks); each query's rows
+    are scored against its own LUT, so rows are batch-invariant."""
+    nq, n, m = codes.shape
+    nq2, m2, k = luts.shape
+    assert nq == nq2 and m == m2
+    pad = (-n) % BN
+    codes_p = jnp.pad(codes.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _kernel_batched,
+        grid=(nq, (n + pad) // BN),
+        in_specs=[
+            pl.BlockSpec((1, BN, m), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, m, k), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, n + pad), jnp.float32),
+        interpret=interpret,
+    )(codes_p, luts.astype(jnp.float32))
+    return out[:, :n]

@@ -1,4 +1,5 @@
 """Oracle for PQ asymmetric distance computation (ADC)."""
+import jax
 import jax.numpy as jnp
 
 
@@ -9,3 +10,8 @@ def pq_adc_ref(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
     """
     m = lut.shape[0]
     return lut[jnp.arange(m)[None, :], codes.astype(jnp.int32)].sum(-1)
+
+
+def pq_adc_batched_ref(codes: jnp.ndarray, luts: jnp.ndarray) -> jnp.ndarray:
+    """Batched-queries oracle: [nq, n, M] x [nq, M, K] -> [nq, n]."""
+    return jax.vmap(pq_adc_ref)(codes, luts)

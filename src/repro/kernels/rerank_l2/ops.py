@@ -1,14 +1,12 @@
-"""Public exact-rerank op."""
-import jax
+"""Public exact-rerank op, routed through the dispatch registry.
 
-from .ref import rerank_l2_ref
-from .rerank_l2 import rerank_l2_pallas
+Backend selection happens at config time (``dispatch.KernelConfig``), not
+via a trace-time ``jax.default_backend()`` check.
+"""
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelConfig
 
 
-def rerank_l2(queries, cands, *, force_kernel: bool | None = None):
-    use_kernel = force_kernel if force_kernel is not None \
-        else jax.default_backend() == "tpu"
-    if use_kernel:
-        return rerank_l2_pallas(queries, cands,
-                                interpret=jax.default_backend() != "tpu")
-    return rerank_l2_ref(queries, cands)
+def rerank_l2(queries, cands, *, cfg: KernelConfig | None = None):
+    """[Q, D] queries x [Q, C, D] candidates -> squared L2 [Q, C]."""
+    return dispatch.rerank_l2(queries, cands, cfg)

@@ -33,8 +33,9 @@ import jax.numpy as jnp
 
 from repro.core.codec import elias_fano as ef
 from repro.core.distributed.sharded_index import ShardedIndex
-from repro.core.search.beam import DeviceIndex, SearchParams, search
-from repro.core.search.engine import T_DEC, T_EX, T_IO, T_PQ
+from repro.core.search.beam import (DeviceIndex, SearchParams,
+                                    resolve_kernels, search)
+from repro.core.search.engine import T_IO, compute_costs
 from repro.core.storage.index_store import LRUCache
 
 
@@ -114,8 +115,17 @@ class BatchedSearcher:
         cfg = cfg or ServeConfig()
         if cfg.account_io:
             p = p._replace(trace_fetches=True)
+        # Config time: pin the per-op kernel backends here, once — every
+        # bucket program this searcher compiles dispatches statically, and
+        # the I/O model prices compute with the matching cost constants.
+        p = resolve_kernels(p)
         self.p = p
         self.cfg = cfg
+        # Decompressions split per tier: graph-list decode prices at the
+        # ef_decode backend, vector-record decode at the byteplane backend.
+        self._t_pq, self._t_ex, self._t_dec_ix = compute_costs(
+            p.kernels.pq_adc, p.kernels.rerank_l2, p.kernels.ef_decode)
+        *_, self._t_dec_vec = compute_costs(dec_backend=p.kernels.byteplane)
         if isinstance(index, ShardedIndex):
             s = index.pq_codes.shape[0]
             self._shards = [
@@ -204,7 +214,9 @@ class BatchedSearcher:
                     io_rounds += 1
             # decompressions: EF list decode per fetched list (graph tier)
             # + per-record decompress on the vector tier (§3.3 layout).
-            dec = (misses + hits if self.p.use_ef else 0) + int(exact[qi])
+            dec_ix = (misses + hits) if self.p.use_ef else 0
+            dec_vec = int(exact[qi])
+            dec = dec_ix + dec_vec
             report.graph_ios += misses
             report.cache_hits += hits
             report.vector_ios += int(exact[qi])
@@ -214,8 +226,8 @@ class BatchedSearcher:
             report.io_rounds += io_rounds
             report.rerank_batches += int(batches[qi])
             io = io_rounds * T_IO
-            cpu = (int(pq_ops[qi]) * T_PQ + int(exact[qi]) * T_EX
-                   + dec * T_DEC)
+            cpu = (int(pq_ops[qi]) * self._t_pq + int(exact[qi]) * self._t_ex
+                   + dec_ix * self._t_dec_ix + dec_vec * self._t_dec_vec)
             tail = max(0, int(batches[qi]) - 1) * T_IO * 0.5
             lat[qi] = max(io, cpu) + min(io, cpu) * 0.1 + tail
         return lat

@@ -1,11 +1,18 @@
 """Graph build + device beam search behaviour (recall, losslessness of the
-compressed index, latency-aware search mechanics)."""
+compressed index, latency-aware search mechanics), plus the kernel-backend
+equivalence tier: the SAME search program under `ref` and `pallas`
+(interpret on CPU) backends must agree."""
 import numpy as np
 import pytest
 
-from repro.core.index import build_device_index, recall_at_k
+from repro.core.index import build_device_index, recall_at_k, verify_index_slots
 from repro.core.search.beam import SearchParams, search
+from repro.kernels.dispatch import KernelConfig
 from repro.data.synthetic import ground_truth, make_queries, make_vector_dataset
+
+CFG_REF = KernelConfig("ref", "ref", "ref", "ref")
+# Config-time resolution: on CPU this degrades to pallas-interpret.
+CFG_PALLAS = KernelConfig("pallas", "pallas", "pallas", "pallas").resolve()
 
 
 @pytest.fixture(scope="module")
@@ -71,6 +78,75 @@ def test_larger_l_does_not_reduce_recall(small_index):
     r_small = recall_at_k(np.asarray(search(index, queries, _params(index, l_size=16))[0]), gt, 10)
     r_big = recall_at_k(np.asarray(search(index, queries, _params(index, l_size=96))[0]), gt, 10)
     assert r_big >= r_small - 0.02
+
+
+# ------------------------------------------------- backend equivalence tier
+@pytest.mark.parametrize("nq", [1, 7, 32])
+def test_ref_pallas_end_to_end_equivalence(small_index, nq):
+    """`search_batched` under KernelConfig(ref) vs KernelConfig(pallas):
+    identical candidate ids, distances within 1e-5, identical traversal
+    stats — the kernels are drop-in replacements, not approximations."""
+    vecs, index, graph, queries, gt = small_index
+    ids_r, d_r, st_r = search(index, queries[:nq],
+                              _params(index, kernels=CFG_REF))
+    ids_p, d_p, st_p = search(index, queries[:nq],
+                              _params(index, kernels=CFG_PALLAS))
+    np.testing.assert_array_equal(np.asarray(ids_r), np.asarray(ids_p))
+    np.testing.assert_allclose(np.asarray(d_r), np.asarray(d_p),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(st_r.iters),
+                                  np.asarray(st_p.iters))
+    np.testing.assert_array_equal(np.asarray(st_r.exact_dists),
+                                  np.asarray(st_p.exact_dists))
+
+
+def test_batch_invisibility_under_pallas(small_index):
+    """The PR-1 batching contract holds under the pallas backend: a row of
+    a batched search equals the nq=1 run of that query (the kernels' grid
+    tiling must not leak across rows)."""
+    vecs, index, graph, queries, gt = small_index
+    p = _params(index, kernels=CFG_PALLAS)
+    ids, dists, stats = search(index, queries, p)
+    for qi in [0, 13, 31]:
+        i1, d1, s1 = search(index, queries[qi][None], p)
+        np.testing.assert_array_equal(np.asarray(ids)[qi], np.asarray(i1)[0])
+        np.testing.assert_array_equal(np.asarray(dists)[qi],
+                                      np.asarray(d1)[0])
+        assert int(np.asarray(stats.iters)[qi]) == int(s1.iters[0])
+
+
+def test_golden_recall_regression(small_index):
+    """Pinned-seed golden: future kernel tuning must not silently degrade
+    search quality under either backend. Recorded on the seed fixture
+    (n=1200, dim=32, r=24, pq_m=8, 32 queries) — both backends reproduce
+    it exactly today."""
+    GOLDEN_RECALL_AT_10 = 0.971875
+    vecs, index, graph, queries, gt = small_index
+    for cfg in (CFG_REF, CFG_PALLAS):
+        ids, _, _ = search(index, queries, _params(index, kernels=cfg))
+        rec = recall_at_k(np.asarray(ids), gt, 10)
+        assert rec >= GOLDEN_RECALL_AT_10, \
+            f"recall@10 = {rec} < golden {GOLDEN_RECALL_AT_10} under {cfg}"
+
+
+def test_unresolved_pallas_config_degrades_off_tpu(small_index):
+    """A caller passing a RAW KernelConfig('pallas', ...) without calling
+    .resolve() must still work on CPU: resolve_kernels always resolves, so
+    the request degrades to the interpreter instead of crashing."""
+    vecs, index, graph, queries, gt = small_index
+    raw = KernelConfig("pallas", "pallas", "pallas", "pallas")
+    ids, _, _ = search(index, queries[:2], _params(index, kernels=raw))
+    ids_ref, _, _ = search(index, queries[:2], _params(index,
+                                                       kernels=CFG_REF))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_ref))
+
+
+def test_index_slots_verify_under_both_backends(small_index):
+    """The EF slot tier decodes losslessly through the dispatch layer."""
+    vecs, index, graph, queries, gt = small_index
+    n = index.pq_codes.shape[0]
+    assert verify_index_slots(index, 24, n, CFG_REF)
+    assert verify_index_slots(index, 24, n, CFG_PALLAS)
 
 
 def test_vamana_graph_properties(small_index):
