@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-kernels bench-smoke bench bench-kernels quickstart
+.PHONY: test test-fast test-kernels bench-smoke bench bench-kernels bench-update quickstart
 
 test:            ## tier-1: full test suite, stop at first failure (~2.5 min)
 	$(PY) -m pytest -x -q
@@ -16,6 +16,9 @@ test-kernels:    ## kernel conformance + backend-equivalence tier
 
 bench-kernels:   ## ref-vs-pallas per op + e2e -> BENCH_kernels.json
 	$(PY) -m benchmarks.bench_kernels
+
+bench-update:    ## streaming-update arms (inc/full/colocated) -> BENCH_update.json
+	$(PY) -m benchmarks.bench_update
 
 bench-smoke:     ## ~30 s serving-path benchmark (QPS vs batch x shards)
 	$(PY) -m benchmarks.bench_serve_ann --smoke

@@ -1,11 +1,29 @@
-"""Exp#5 (Fig. 9) + Exp#7 (Fig. 10): streaming updates.
+"""Exp#5 (Fig. 9) + Exp#7 (Fig. 10): streaming updates — written to
+``BENCH_update.json`` (mirroring ``bench_kernels.py``).
 
 Runs the paper's replacement schedule (replace a fraction over N merge
-cycles) against the decoupled stores, reporting merge computation/write
-breakdown, GC impact (DecoupleVS vs -NoGC), storage stability, and
-search-during-update recall — plus the co-located full-rewrite baseline's
-write amplification for comparison.
+cycles) against the decoupled stores in three arms:
+
+- ``decoupled-incremental``: dirty-block index-store merges
+  (``CompressedIndexStore.rewrite_blocks``) — the §3.5 refactor target;
+- ``decoupled-full``: the pre-refactor behavior, every merge rewrites the
+  whole compressed index store (``merge(force_full=True)``);
+- ``colocated`` (modeled): the DiskANN-style baseline that must rewrite
+  vectors AND index together each merge.
+
+Per merge it records the phase breakdown (repair / insert / vector-GC /
+store / publish), dirty-vertex + dirty-block counts, block-granular write
+bytes, and the engine-modeled merge cost; per cycle it measures
+search-during-update recall@10 through the LIVE device path
+(``StreamingIndex.search_batch`` = ``search_batched`` over the snapshot
+device view + memtable side-scan) against brute force over the live set.
+A GC-off arm preserves the Exp#7 comparison.
+
+Env: REPRO_BENCH_UPDATE_N rescales the corpus (default 800);
+REPRO_BENCH_OUT overrides the JSON path (default ./BENCH_update.json).
 """
+import json
+import os
 import time
 
 import numpy as np
@@ -19,12 +37,13 @@ from repro.data.synthetic import make_vector_dataset
 
 from .common import csv
 
-N, DIM, ITERS = 800, 24, 3
+DIM, ITERS, R = 24, 3, 16
+N = int(os.environ.get("REPRO_BENCH_UPDATE_N", 800))
 
 
 def _build(gc: bool):
     vecs = make_vector_dataset("prop-like", N, DIM, seed=1).astype(np.float32)
-    graph = build_vamana(vecs, r=16, l_build=32, seed=0)
+    graph = build_vamana(vecs, r=R, l_build=32, seed=0)
     cb = train_pq(vecs, m=8, seed=0)
     codes = encode_pq(vecs, cb)
     vs = DecoupledVectorStore(StoreConfig(dim=DIM, dtype=np.float32,
@@ -32,59 +51,121 @@ def _build(gc: bool):
     vs.append(np.arange(N), vecs)
     vs.seal_active()
     idx = StreamingIndex(graph.adjacency, graph.medoid, vs, codes, cb,
-                         UpdateConfig(r=16, l_build=32, merge_threshold=10**9,
+                         UpdateConfig(r=R, l_build=32, merge_threshold=10**9,
                                       gc_threshold=0.25 if gc else 1.1))
     return vecs, idx
 
 
-def run(gc: bool):
+def run(gc: bool, incremental: bool):
     vecs, idx = _build(gc)
     vs = idx.vector_store
+    live = {i: vecs[i] for i in range(N)}
     wl = StreamingVectorWorkload(vecs, replace_frac=0.4, iterations=ITERS)
-    deleted: set = set()
-    merge_s, writes, sizes, recalls = [], [], [], []
+    rng = np.random.default_rng(11)
+    merges, writes, sizes, recalls = [], [], [], []
     for cyc in wl.cycles():
-        w0 = vs.io.write_bytes + idx.handle.current().index_store.io.write_bytes
+        # Each published store carries a fresh IOStats with only its own
+        # merge's writes, so take the vector-tier delta from the cumulative
+        # store counter and the index-tier writes from the merge stats.
+        w0 = vs.io.write_bytes
         idx.delete(cyc["delete"])
-        deleted.update(int(d) for d in cyc["delete"])
+        for d in cyc["delete"]:
+            live.pop(int(d))
         idx.insert(cyc["insert_ids"], cyc["insert_vecs"])
+        for i, v in zip(cyc["insert_ids"], cyc["insert_vecs"]):
+            live[int(i)] = v
         t0 = time.time()
-        idx.merge()
-        merge_s.append(time.time() - t0)
+        st = idx.merge(force_full=not incremental)
+        merge_s = time.time() - t0
         snap = idx.handle.current()
-        writes.append(vs.io.write_bytes + snap.index_store.io.write_bytes - w0)
+        writes.append(vs.io.write_bytes - w0 + st.write_bytes)
         sizes.append(vs.physical_bytes + snap.index_store.physical_bytes)
-        # probe with a LIVE vector; its own id must come back and no
-        # tombstoned id may ever be returned (batch-visible model).
-        live_id = next(i for i in range(N) if i not in deleted)
-        got = idx.search(vecs[live_id], k=5)
-        ok = live_id in got and not (set(got.tolist()) & deleted)
-        recalls.append(1.0 if ok else 0.0)
-    return dict(merge_s=float(np.mean(merge_s)),
+        merges.append(dict(
+            merge_s=round(merge_s, 4),
+            t_repair_s=round(st.t_repair_s, 4),
+            t_insert_s=round(st.t_insert_s, 4),
+            t_vector_s=round(st.t_vector_s, 4),
+            t_store_s=round(st.t_store_s, 4),
+            t_publish_s=round(st.t_publish_s, 4),
+            dirty_vertices=st.dirty_vertices,
+            blocks_rewritten=st.blocks_rewritten,
+            blocks_appended=st.blocks_appended,
+            total_blocks=st.total_blocks,
+            index_write_kib=round(st.write_bytes / 1024, 1),
+            full_rebuild=st.full_rebuild,
+            modeled_cost_us=round(st.modeled_cost_us, 1)))
+        # Search-during-update recall@10: live device path vs brute force.
+        lids = np.asarray(sorted(live))
+        mat = np.stack([live[i] for i in lids])
+        qsel = rng.choice(len(lids), size=16, replace=False)
+        ids, _ = idx.search_batch(mat[qsel], k=10, l_size=64)
+        for j, qi in enumerate(qsel):
+            gt = lids[np.argsort(((mat - mat[qi][None]) ** 2).sum(-1),
+                                 kind="stable")[:10]]
+            recalls.append(len(set(ids[j].tolist()) & set(gt.tolist())) / 10)
+    return dict(merges=merges,
                 write_mib=float(np.mean(writes)) / 2**20,
+                index_write_mib=float(np.mean(
+                    [m["index_write_kib"] for m in merges])) / 1024,
                 final_mib=sizes[-1] / 2**20, growth=sizes[-1] / sizes[0],
-                probe_hit=float(np.mean(recalls)))
+                recall_at_10=float(np.mean(recalls)))
 
 
 def main(quiet=False):
     t0 = time.time()
-    gc_on = run(gc=True)
-    gc_off = run(gc=False)
-    us = (time.time() - t0) * 1e6 / (2 * ITERS)
-    # co-located baseline rewrites vectors+index each merge
-    colo_write_mib = N * (DIM * 4 + 4 * 17) / 2**20
+    inc = run(gc=True, incremental=True)
+    full = run(gc=True, incremental=False)
+    gc_off = run(gc=False, incremental=True)
+    us = (time.time() - t0) * 1e6 / (3 * ITERS)
+    # co-located baseline (modeled): vectors+index rewritten each merge
+    colo_write_mib = N * (DIM * 4 + 4 * (R + 1)) / 2**20
+    write_amp = dict(
+        decoupled_incremental_mib=round(inc["index_write_mib"], 4),
+        decoupled_full_mib=round(full["index_write_mib"], 4),
+        colocated_mib=round(colo_write_mib, 4),
+        incremental_vs_full=round(
+            inc["index_write_mib"] / max(full["index_write_mib"], 1e-9), 3),
+        incremental_vs_colocated=round(
+            inc["index_write_mib"] / colo_write_mib, 3))
     csv("exp5/decouplevs", us,
-        f"merge_s={gc_on['merge_s']:.2f};write_mib={gc_on['write_mib']:.2f};"
+        f"merge_s={np.mean([m['merge_s'] for m in inc['merges']]):.2f};"
+        f"write_mib={inc['write_mib']:.2f};"
+        f"index_write_inc_mib={inc['index_write_mib']:.3f};"
+        f"index_write_full_mib={full['index_write_mib']:.3f};"
         f"colocated_rewrite_mib={colo_write_mib:.2f};"
-        f"final_mib={gc_on['final_mib']:.2f};"
-        f"storage_growth={gc_on['growth']:.2f}x;"
-        f"probe_hit={gc_on['probe_hit']:.2f}")
+        f"final_mib={inc['final_mib']:.2f};"
+        f"storage_growth={inc['growth']:.2f}x;"
+        f"recall_at_10={inc['recall_at_10']:.3f}")
+    m_gc = float(np.mean([m["merge_s"] for m in inc["merges"]]))
+    m_nogc = float(np.mean([m["merge_s"] for m in gc_off["merges"]]))
     csv("exp7/gc_impact", 0.0,
-        f"merge_s_gc={gc_on['merge_s']:.2f};merge_s_nogc={gc_off['merge_s']:.2f};"
-        f"overhead={100*(gc_on['merge_s']/max(gc_off['merge_s'],1e-9)-1):.1f}%;"
-        f"storage_gc={gc_on['final_mib']:.2f}mib;"
-        f"storage_nogc={gc_off['final_mib']:.2f}mib")
-    return gc_on, gc_off
+        f"merge_s_gc={m_gc:.2f};merge_s_nogc={m_nogc:.2f};"
+        f"overhead={100 * (m_gc / max(m_nogc, 1e-9) - 1):.1f}%;"
+        f"storage_gc={inc['final_mib']:.2f}mib;"
+        f"storage_nogc={gc_off['final_mib']:.2f}mib;"
+        f"growth_gc={inc['growth']:.2f}x;growth_nogc={gc_off['growth']:.2f}x")
+    doc = dict(
+        n=N, dim=DIM, iterations=ITERS, r=R,
+        replace_frac=0.4,
+        write_amp=write_amp,
+        arms=dict(decoupled_incremental=inc, decoupled_full=full,
+                  decoupled_incremental_nogc=gc_off),
+        note=("index_write_* is the index-store merge write I/O at block "
+              "granularity; write_mib additionally includes vector-tier "
+              "appends + GC copies. colocated is the modeled DiskANN-style "
+              "full vectors+index rewrite. NB: delete-repair + back-edge "
+              "patching amplify the dirty set to ~(1+2R)x the replaced "
+              "fraction, so at this benchmark's replacement rate "
+              "(0.4/3 per cycle) the dirty set saturates every block and "
+              "incremental ~= full (+append); the incremental win appears "
+              "for block-local / small deltas — see "
+              "tests/test_incremental_store.py and docs/UPDATES.md."))
+    out = os.environ.get("REPRO_BENCH_OUT", "BENCH_update.json")
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2)
+    if not quiet:
+        print(f"# wrote {out} (3 arms x {ITERS} merges)")
+    return inc, full
 
 
 if __name__ == "__main__":

@@ -42,12 +42,17 @@ def main():
         w0 = vs.io.write_bytes
         idx.delete(cyc["delete"])
         idx.insert(cyc["insert_ids"], cyc["insert_vecs"])
-        idx.merge()
-        got = idx.search(probe, k=5)
+        st = idx.merge()
+        got = idx.search(probe, k=5)     # batched device path + side-scan
+        mode = "full rebuild" if st.full_rebuild else (
+            f"incremental ({st.blocks_rewritten}+{st.blocks_appended} of "
+            f"{st.total_blocks} blocks)")
         print(f"iter {cyc['iteration']}: merged "
               f"{len(cyc['delete'])} deletes + {len(cyc['insert_ids'])} "
               f"inserts | storage {vs.physical_bytes/2**20:.2f} MiB | "
-              f"merge writes {(vs.io.write_bytes - w0)/2**20:.2f} MiB | "
+              f"vector writes {(vs.io.write_bytes - w0)/2**20:.2f} MiB | "
+              f"index merge {mode}, {st.write_bytes/1024:.0f} KiB | "
+              f"snapshot v{idx.handle.current().version} | "
               f"top-5 near probe: {got.tolist()}")
     print("storage stable + deleted ids never returned (batch-visible model)")
 

@@ -57,6 +57,15 @@ class DeviceIndex(NamedTuple):
     pq_centroids: jnp.ndarray   # [M, K, dsub] f32
     vectors: jnp.ndarray        # [n, d] full precision (re-rank tier)
     medoid: jnp.ndarray         # scalar int32
+    tombstone: jnp.ndarray = None  # [n] bool — §3.5 live-snapshot deletes;
+                                # None for frozen indexes (an empty pytree
+                                # node, so frozen programs are unchanged).
+                                # Masked in rerank when
+                                # SearchParams.filter_tombstones is set:
+                                # traversal still routes THROUGH deleted
+                                # vertices (graph connectivity is repaired
+                                # only at merge), they are just never
+                                # returned.
 
 
 class SearchParams(NamedTuple):
@@ -78,6 +87,9 @@ class SearchParams(NamedTuple):
     kernels: KernelConfig | None = None  # per-op compute backend (dispatch
                                  # layer); None -> REPRO_KERNELS env default.
                                  # Resolve at config time (resolve_kernels).
+    filter_tombstones: bool = False  # live-snapshot mode (§3.5): mask
+                                 # index.tombstone rows out of the re-rank
+                                 # heap (id -> -1), never out of traversal.
 
 
 class SearchStats(NamedTuple):
@@ -286,12 +298,20 @@ def rerank(index: DeviceIndex, queries: jnp.ndarray, cand_ids: jnp.ndarray,
     """
     n, K, B = index.vectors.shape[0], p.k, p.rerank_batch
     nq = queries.shape[0]
+    if p.filter_tombstones and index.tombstone is None:
+        raise ValueError(
+            "SearchParams.filter_tombstones=True requires an index with a "
+            "tombstone mask (live snapshots set DeviceIndex.tombstone; "
+            "frozen indexes leave it None)")
     # Candidates beyond L don't exist; bound the batch loop statically.
     max_batches = min(p.max_rerank_batches, max(0, (p.l_size - K) // B))
 
     def exact(ids):
         v = index.vectors[jnp.clip(ids, 0, n - 1)]
         d = dispatch.rerank_l2(queries, v, p.kernels)
+        if p.filter_tombstones:
+            dead = index.tombstone[jnp.clip(ids, 0, n - 1)]
+            d = jnp.where(dead, jnp.inf, d)
         return jnp.where(ids >= 0, d, jnp.inf)
 
     # Batch 0: the prefetched top-K (always re-ranked).
@@ -329,6 +349,9 @@ def rerank(index: DeviceIndex, queries: jnp.ndarray, cand_ids: jnp.ndarray,
     order = jnp.argsort(heap_d, axis=1)
     ids = jnp.take_along_axis(heap_ids, order, 1)
     dists = jnp.take_along_axis(heap_d, order, 1)
+    if p.filter_tombstones:
+        # A tombstoned (masked-to-inf) id must never surface: -1 = no result.
+        ids = jnp.where(jnp.isfinite(dists), ids, -1)
     exact_ct = (K + batches * B).astype(jnp.int32)
     return ids, dists, (batches, exact_ct)
 
@@ -377,6 +400,29 @@ def search_one(index: DeviceIndex, query: jnp.ndarray, p: SearchParams):
     """Single-query search: the nq=1 case of the batch-first path."""
     ids, dists, stats = search(index, query[None], p)
     return ids[0], dists[0], jax.tree_util.tree_map(lambda x: x[0], stats)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def _candidates_jit(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
+    luts = jax.vmap(
+        lambda q: build_lut_jnp(q.astype(jnp.float32), index.pq_centroids)
+    )(queries)
+    cand_ids, cand_d, _ = traverse(index, luts, p)
+    return cand_ids, cand_d
+
+
+def search_candidates(index: DeviceIndex, queries: jnp.ndarray,
+                      p: SearchParams):
+    """Batched traversal WITHOUT the re-rank phase ->
+    (cand_ids [nq, L], pq_dists [nq, L]), -1 = empty slot.
+
+    This is the §3.5 insert path's candidate pool: a fresh point's robust-
+    prune input is the candidate list its own search would produce, so the
+    streaming-update tier runs the exact same beam core as serving — one
+    batched call for the whole insert buffer instead of a Python greedy
+    loop per point. Distances are PQ (ADC) approximations; insert-side
+    pruning re-ranks with exact vectors on the host."""
+    return _candidates_jit(index, queries, resolve_kernels(p))
 
 
 @functools.partial(jax.jit, static_argnames=("p",))

@@ -32,6 +32,7 @@ import numpy as np
 from ..graph.pq import PQCodebook, adc_lookup_np, build_lut
 
 T_IO = 80.0
+T_IO_WRITE = 20.0    # µs per queued 4 KiB NVMe block write (merge path)
 
 # Per-backend compute costs (µs/op) for the latency model. "ref" prices the
 # paper's CPU implementation (the constants documented above); "pallas"
@@ -68,6 +69,35 @@ def compute_costs(pq_backend: str = "ref", ex_backend: str | None = None,
     return (cost(pq_backend, "pq"),
             cost(ex_backend or pq_backend, "ex"),
             cost(dec_backend or pq_backend, "dec"))
+
+
+def merge_cost_us(blocks_written: int, lists_reencoded: int,
+                  backend: str = "ref") -> float:
+    """Model one §3.5 merge's index-store cost from its DIRTY-BLOCK count.
+
+    The incremental path (``CompressedIndexStore.rewrite_blocks``) writes
+    only the blocks whose adjacency lists changed plus fresh tail blocks, so
+    merge I/O is ``blocks_written * T_IO_WRITE``; each re-encoded list is
+    priced like a record (de)compression at the given kernel backend. A full
+    rebuild is the same formula with every block dirty — which is exactly
+    why dirty-block accounting matters for the paper's write-amp claim.
+    """
+    _, _, t_dec = compute_costs(dec_backend=backend)
+    return blocks_written * T_IO_WRITE + lists_reencoded * t_dec
+
+
+def merge_topk(ids, dists, k: int):
+    """[S, nq, K] per-shard globally-translated ids + dists -> global top-K
+    (host-side mirror of the gather + top_k merge that runs inside
+    shard_map on a mesh; also merges the §3.5 memtable side-scan "shard"
+    with graph results). Stable sort: earlier shards win ties, and inf
+    distances (padding / tombstone-masked rows) sink to the tail."""
+    s, nq, kk = ids.shape
+    flat_i = ids.transpose(1, 0, 2).reshape(nq, s * kk)
+    flat_d = dists.transpose(1, 0, 2).reshape(nq, s * kk)
+    order = np.argsort(flat_d, axis=1, kind="stable")[:, :k]
+    return (np.take_along_axis(flat_i, order, 1),
+            np.take_along_axis(flat_d, order, 1))
 
 
 @dataclass

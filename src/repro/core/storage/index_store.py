@@ -16,7 +16,8 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..codec import elias_fano as ef
-from .layout import BLOCK_SIZE, pack_blocks, locate_block
+from .layout import (BLOCK_SIZE, block_bytes_needed, pack_block_image,
+                     pack_blocks)
 from .vector_store import IOStats
 
 
@@ -47,12 +48,40 @@ class LRUCache:
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
 
+    def invalidate(self, keys) -> int:
+        """Drop specific entries (incremental merge: only the lists whose
+        contents changed are evicted; clean entries stay warm)."""
+        n = 0
+        for k in keys:
+            if self._d.pop(int(k), None) is not None:
+                n += 1
+        return n
+
+    def clone(self) -> "LRUCache":
+        """Copy for the next snapshot's store: same capacity/entry size,
+        same recency order, independent mutation + stats."""
+        c = LRUCache(self.capacity, self.entry_bytes)
+        c._d = OrderedDict(self._d)
+        return c
+
     @property
     def memory_bytes(self) -> int:
         return len(self._d) * self.entry_bytes
 
     def reset_stats(self) -> None:
         self.hits = self.misses = 0
+
+
+@dataclass
+class RewriteReport:
+    """Accounting for one index-store merge (incremental or full)."""
+    blocks_rewritten: int = 0     # existing blocks repacked in place
+    blocks_appended: int = 0      # fresh blocks for newly inserted vertices
+    total_blocks: int = 0         # store size after the merge
+    write_bytes: int = 0          # merge write I/O at block granularity
+    dirty_records: int = 0        # adjacency lists re-encoded
+    cache_invalidated: int = 0    # LRU entries dropped (dirty lists only)
+    full_rebuild: bool = False    # incremental infeasible -> whole store
 
 
 @dataclass
@@ -69,22 +98,128 @@ class CompressedIndexStore:
     medoid: int
     io: IOStats = None
     cache: LRUCache = None
+    fill_factor: float = 1.0     # build-time block fill cap (rewrite headroom)
 
     @classmethod
     def from_graph(cls, adjacency: list, medoid: int, r: int,
                    universe: int | None = None,
-                   cache_bytes: int = 0) -> "CompressedIndexStore":
+                   cache_bytes: int = 0,
+                   fill_factor: float = 1.0) -> "CompressedIndexStore":
         n = len(adjacency)
         universe = universe or n
         records = [ef.encode_record(np.sort(np.asarray(adj, np.uint64)), universe)
                    for adj in adjacency]
-        pk = pack_blocks(np.arange(n), records, implicit_ids=True)
+        pk = pack_blocks(np.arange(n), records, implicit_ids=True,
+                         fill_factor=fill_factor)
         entry_bytes = (ef.worst_case_bits(r, universe) + 7) // 8
         return cls(data=pk.data, n_blocks=pk.n_blocks,
                    sparse_index=pk.block_first_id, rec_block=pk.rec_block,
                    rec_start=pk.rec_start, rec_len=pk.rec_len,
                    universe=universe, r=r, medoid=medoid, io=IOStats(),
-                   cache=LRUCache(cache_bytes // max(1, entry_bytes), entry_bytes))
+                   cache=LRUCache(cache_bytes // max(1, entry_bytes), entry_bytes),
+                   fill_factor=fill_factor)
+
+    # ------------------------------------------------------ incremental merge
+    def rewrite_blocks(self, adjacency: list, dirty_ids,
+                       medoid: int | None = None
+                       ) -> tuple["CompressedIndexStore", RewriteReport] | None:
+        """Block-granular merge: re-encode ONLY the adjacency lists in
+        ``dirty_ids`` and rewrite ONLY the 4 KiB blocks that hold them;
+        vertices appended past the current universe of records are packed
+        into fresh blocks at the tail (ids are dense and ascending, so the
+        sparse boundary index stays sorted). Returns a NEW store — the
+        receiver is immutable so in-flight snapshots keep reading the old
+        image — plus a :class:`RewriteReport` with the write I/O accounted
+        at block granularity. The new store's LRU starts from the old one
+        with only the dirty lists invalidated (§3.4 entries stay warm).
+
+        Returns ``None`` when the incremental path is infeasible — a dirty
+        block overflows 4 KiB after re-encoding, or a new neighbor id falls
+        outside the store's EF universe — in which case the caller must do
+        a full rebuild (``from_graph``). Build stores with
+        ``fill_factor < 1`` to leave in-place growth headroom.
+        """
+        n_old = len(self.rec_start)
+        n_new = len(adjacency)
+        if n_new < n_old:
+            return None
+        dirty_list = list(dirty_ids)
+        dirty = np.unique(np.asarray(dirty_list, np.int64)) \
+            if dirty_list else np.zeros(0, np.int64)
+        appended = np.arange(n_old, n_new, dtype=np.int64)
+        dirty_old = dirty[(dirty >= 0) & (dirty < n_old)]
+        # Re-encode every dirty list under the store's FIXED universe; a
+        # neighbor id beyond it cannot be represented -> full rebuild.
+        recs: dict[int, np.ndarray] = {}
+        for vid in np.concatenate([dirty_old, appended]):
+            adj = np.sort(np.asarray(adjacency[int(vid)], np.uint64))
+            if len(adj) and int(adj[-1]) >= self.universe:
+                return None
+            recs[int(vid)] = ef.encode_record(adj, self.universe)
+
+        data = self.data.copy()
+        rec_block = np.concatenate([self.rec_block,
+                                    np.zeros(len(appended), np.int32)])
+        rec_start = np.concatenate([self.rec_start,
+                                    np.zeros(len(appended), np.int64)])
+        rec_len = np.concatenate([self.rec_len,
+                                  np.zeros(len(appended), np.int32)])
+        touched = np.unique(self.rec_block[dirty_old]) \
+            if len(dirty_old) else np.zeros(0, np.int32)
+        for b in touched:
+            # ids are dense-ascending and packed in order, so rec_block is
+            # non-decreasing: block b's members are one contiguous range.
+            members = np.arange(
+                np.searchsorted(self.rec_block, b, side="left"),
+                np.searchsorted(self.rec_block, b, side="right"))
+            payloads = []
+            for vid in members:
+                vid = int(vid)
+                if vid in recs:
+                    payloads.append(recs[vid])
+                else:
+                    s = int(self.rec_start[vid])
+                    payloads.append(self.data[s:s + int(self.rec_len[vid])])
+            need = block_bytes_needed(len(members),
+                                      sum(len(p) for p in payloads),
+                                      implicit_ids=True)
+            if need > BLOCK_SIZE:                  # grown past the block
+                return None
+            base = int(b) * BLOCK_SIZE
+            img, offsets = pack_block_image(members, payloads,
+                                            implicit_ids=True)
+            for vid, off, rec in zip(members, offsets, payloads):
+                rec_start[int(vid)] = base + int(off)
+                rec_len[int(vid)] = len(rec)
+            data[base:base + BLOCK_SIZE] = img
+        sparse_index = self.sparse_index
+        n_blocks = self.n_blocks
+        if len(appended):
+            pk = pack_blocks(appended, [recs[int(v)] for v in appended],
+                             implicit_ids=True, fill_factor=self.fill_factor)
+            data = np.concatenate([data, pk.data])
+            rec_block[n_old:] = pk.rec_block + n_blocks
+            rec_start[n_old:] = pk.rec_start + n_blocks * BLOCK_SIZE
+            rec_len[n_old:] = pk.rec_len
+            sparse_index = np.concatenate([sparse_index, pk.block_first_id])
+            n_blocks += pk.n_blocks
+        cache = self.cache.clone() if self.cache is not None else None
+        invalidated = cache.invalidate(dirty_old) if cache is not None else 0
+        report = RewriteReport(
+            blocks_rewritten=len(touched),
+            blocks_appended=n_blocks - self.n_blocks,
+            total_blocks=n_blocks,
+            write_bytes=(len(touched) + n_blocks - self.n_blocks) * BLOCK_SIZE,
+            dirty_records=len(recs), cache_invalidated=invalidated)
+        io = IOStats()
+        io.write(report.write_bytes, n=len(touched) + report.blocks_appended)
+        store = CompressedIndexStore(
+            data=data, n_blocks=n_blocks, sparse_index=sparse_index,
+            rec_block=rec_block, rec_start=rec_start, rec_len=rec_len,
+            universe=self.universe, r=self.r,
+            medoid=self.medoid if medoid is None else medoid,
+            io=io, cache=cache, fill_factor=self.fill_factor)
+        return store, report
 
     # ------------------------------------------------------------- reads
     def _decode_record(self, vid: int) -> np.ndarray:

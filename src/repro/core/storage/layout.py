@@ -61,13 +61,63 @@ class PackedBlocks:
         return self.data[s:s + int(self.rec_len[i])]
 
 
+def block_bytes_needed(n_records: int, payload_bytes: int,
+                       implicit_ids: bool = False) -> int:
+    """Bytes one block needs for ``n_records`` totalling ``payload_bytes``."""
+    per_rec = 2 if implicit_ids else _HDR_PER_REC
+    hdr = (_HDR_FIXED + 4) if implicit_ids else _HDR_FIXED
+    return hdr + n_records * per_rec + payload_bytes
+
+
+def pack_block_image(ids: np.ndarray, records: list,
+                     implicit_ids: bool = False
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Serialize ONE block's records -> (image uint8[BLOCK_SIZE],
+    payload offsets int64[len(records)] within the block).
+
+    The single definition of the on-disk block format — used by
+    :func:`pack_blocks` for fresh builds and by
+    ``CompressedIndexStore.rewrite_blocks`` for in-place dirty-block
+    repacking, so the two can never diverge."""
+    per_rec = 2 if implicit_ids else _HDR_PER_REC
+    hdr_fixed = (_HDR_FIXED + 4) if implicit_ids else _HDR_FIXED
+    cnt = len(records)
+    img = np.zeros(BLOCK_SIZE, dtype=np.uint8)
+    img[0:2] = np.frombuffer(np.uint16(cnt).tobytes(), dtype=np.uint8)
+    if implicit_ids:
+        img[2:6] = np.frombuffer(np.uint32(ids[0]).tobytes(), np.uint8)
+    off = hdr_fixed + cnt * per_rec
+    offsets = np.zeros(cnt, dtype=np.int64)
+    for j, (vid, rec) in enumerate(zip(ids, records)):
+        h = hdr_fixed + j * per_rec
+        if not implicit_ids:
+            img[h:h + 4] = np.frombuffer(np.uint32(vid).tobytes(), np.uint8)
+            img[h + 4:h + 6] = np.frombuffer(np.uint16(off).tobytes(), np.uint8)
+        else:
+            img[h:h + 2] = np.frombuffer(np.uint16(off).tobytes(), np.uint8)
+        rec = np.frombuffer(bytes(rec), dtype=np.uint8) \
+            if not isinstance(rec, np.ndarray) else rec
+        if off + len(rec) > BLOCK_SIZE:
+            raise ValueError("records overflow the block")
+        img[off:off + len(rec)] = rec
+        offsets[j] = off
+        off += len(rec)
+    return img, offsets
+
+
 def pack_blocks(ids: np.ndarray, records: list[bytes | np.ndarray],
-                implicit_ids: bool = False) -> PackedBlocks:
+                implicit_ids: bool = False,
+                fill_factor: float = 1.0) -> PackedBlocks:
     """Greedy first-fit packing of (id-ordered) variable-size records.
 
     ``implicit_ids=True`` is the auxiliary-index layout (§3.3): vertex IDs
     are dense/consecutive, so the block header stores only the first id +
     u16 record offsets (the per-record u32 id column is elided).
+
+    ``fill_factor < 1`` caps the *build-time* fill of each block, leaving
+    headroom so records can grow in place later (the block-granular
+    incremental rewrite of ``CompressedIndexStore.rewrite_blocks``); a
+    single record is always admitted to an empty block regardless.
     """
     m = len(records)
     ids = np.asarray(ids, dtype=np.int64)
@@ -76,12 +126,19 @@ def pack_blocks(ids: np.ndarray, records: list[bytes | np.ndarray],
     lens = np.array([len(r) for r in records], dtype=np.int64)
     if np.any(lens + hdr_fixed + per_rec > BLOCK_SIZE):
         raise ValueError("record larger than a block")
+    if not 0.0 < fill_factor <= 1.0:
+        raise ValueError(f"fill_factor must be in (0, 1], got {fill_factor}")
+    limit = int(BLOCK_SIZE * fill_factor)
     rec_block = np.zeros(m, np.int32)
     blocks: list[list[int]] = []
     used = BLOCK_SIZE + 1  # force new block at first record
     for i in range(m):
         need = per_rec + int(lens[i])
-        if used + need > BLOCK_SIZE:
+        # Open a fresh block once the fill cap would be exceeded; the
+        # unconditional append below means a freshly opened block always
+        # admits its first record, even past the cap (records are already
+        # checked to fit a raw block).
+        if used + need > limit:
             blocks.append([])
             used = hdr_fixed
         blocks[-1].append(i)
@@ -93,26 +150,13 @@ def pack_blocks(ids: np.ndarray, records: list[bytes | np.ndarray],
     block_first_id = np.zeros(n_blocks, np.int64)
     for b, members in enumerate(blocks):
         base = b * BLOCK_SIZE
-        cnt = len(members)
-        data[base:base + 2] = np.frombuffer(
-            np.uint16(cnt).tobytes(), dtype=np.uint8)
-        if implicit_ids:
-            data[base + 2:base + 6] = np.frombuffer(
-                np.uint32(ids[members[0]]).tobytes(), np.uint8)
-        off = hdr_fixed + cnt * per_rec
+        img, offsets = pack_block_image(ids[members],
+                                        [records[i] for i in members],
+                                        implicit_ids)
+        data[base:base + BLOCK_SIZE] = img
         block_first_id[b] = ids[members[0]]
         for j, i in enumerate(members):
-            h = base + hdr_fixed + j * per_rec
-            if not implicit_ids:
-                data[h:h + 4] = np.frombuffer(np.uint32(ids[i]).tobytes(), np.uint8)
-                data[h + 4:h + 6] = np.frombuffer(np.uint16(off).tobytes(), np.uint8)
-            else:
-                data[h:h + 2] = np.frombuffer(np.uint16(off).tobytes(), np.uint8)
-            rec = np.frombuffer(bytes(records[i]), dtype=np.uint8) \
-                if not isinstance(records[i], np.ndarray) else records[i]
-            data[base + off:base + off + len(rec)] = rec
-            rec_start[i] = base + off
-            off += len(rec)
+            rec_start[i] = base + offsets[j]
     return PackedBlocks(data=data, n_blocks=n_blocks, rec_block=rec_block,
                         rec_start=rec_start, rec_len=lens.astype(np.int32),
                         block_first_id=block_first_id)

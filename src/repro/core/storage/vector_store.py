@@ -239,8 +239,12 @@ class DecoupledVectorStore:
         self._next_seg += 1
         self.sealed[sid] = sealed
         rows = np.arange(len(ids))
+        # Rows deleted while still mutable stay out of the id->location map
+        # (mark_stale popped them); re-adding them would resurrect deleted
+        # ids at the vector tier and dangle after GC drops the segment.
         for i, r in zip(ids, rows):
-            self.loc[int(i)] = (sid, int(r))
+            if int(i) not in seg.stale_set:
+                self.loc[int(i)] = (sid, int(r))
         for i in seg.stale_set:
             row = int(np.searchsorted(ids, i))
             if row < len(ids) and ids[row] == i:
@@ -308,7 +312,10 @@ class DecoupledVectorStore:
         return seg
 
     # ------------------------------------------------------------- reads
-    def get(self, ids: np.ndarray) -> np.ndarray:
+    def get(self, ids: np.ndarray, account: bool = True) -> np.ndarray:
+        """Fetch records by id. ``account=False`` skips read-I/O accounting —
+        for bulk loads into an HBM-resident device view (publish-time
+        materialization is not serving I/O), never for the query path."""
         ids = np.asarray(ids, dtype=np.int64)
         out = np.zeros((len(ids), self.cfg.dim), dtype=self.cfg.dtype)
         by_seg: dict[int, list[int]] = {}
@@ -322,8 +329,9 @@ class DecoupledVectorStore:
                 continue
             seg = self.sealed[sid]
             rows = seg.rows_of(ids[poss])
-            out[np.asarray(poss)] = seg.decode_rows(rows, io=self.io,
-                                                    kernels=self.cfg.kernels)
+            out[np.asarray(poss)] = seg.decode_rows(
+                rows, io=self.io if account else None,
+                kernels=self.cfg.kernels)
         return out
 
     # ------------------------------------------------------------- updates

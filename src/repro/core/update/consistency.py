@@ -1,4 +1,4 @@
-"""Batch-visible consistency model (paper §3.5).
+"""Batch-visible consistency model (paper §3.5) with a device-resident view.
 
 Searches run against an immutable *snapshot* (index store + vector store +
 tombstone set). A merge builds the next snapshot in the background and
@@ -7,11 +7,31 @@ publishes it atomically; in-flight queries keep referencing the old snapshot
 after in-flight queries finalize"). Newly deleted vectors are filtered by the
 tombstone set even before their on-disk references are removed, so they are
 never returned mid-batch.
+
+Since the live-serving refactor, every snapshot also carries a cached
+**device view**: the same :class:`~repro.core.search.beam.DeviceIndex` a
+frozen index serves from — padded adjacency, EF slots, PQ codes, re-rank
+vectors — plus a boolean tombstone mask, built ONCE per publish
+(:func:`build_device_view`, incrementally patched from the previous view
+where only a dirty subset of vertices changed). `StreamingIndex.search` and
+the serving tier (`serve/ann.py` with a `SnapshotHandle`) both run the
+batched beam core over this view; buffered inserts are covered by the
+brute-force memtable side-scan (:func:`memtable_topk`) merged into the
+graph top-K. Deletes flip bits in the mask in place of the old Python-set
+filtering — the beam's re-rank masks them to +inf (`filter_tombstones`), so
+a tombstoned id is unreturnable on-device for the same reason it was
+unreturnable on-host.
 """
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field, replace
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..codec.elias_fano import encode_slot, slot_layout
+from ..search.beam import DeviceIndex
 
 
 @dataclass(frozen=True)
@@ -22,6 +42,93 @@ class Snapshot:
     pq_codes: object
     tombstones: frozenset = frozenset()
     mem_rows: dict = field(default_factory=dict)   # buffered inserts id->vec
+    device: DeviceIndex | None = None   # HBM view + tombstone mask (publish-
+                                        # time artifact; never mutated except
+                                        # the mask bits via with_tombstones)
+
+
+def build_device_view(adjacency: list, medoid: int, pq_codes: np.ndarray,
+                      pq_centroids: np.ndarray, fetch_vectors, dim: int,
+                      r_max: int, universe: int,
+                      prev: DeviceIndex | None = None,
+                      dirty=None) -> DeviceIndex:
+    """Host graph state -> the HBM-resident :class:`DeviceIndex` a snapshot
+    serves from (padded adjacency + EF slots + PQ codes + re-rank vectors +
+    a cleared tombstone mask).
+
+    ``fetch_vectors(ids) -> [k, dim] float32`` supplies re-rank rows (the
+    update tier backs it with the vector store, zero-filling ids whose
+    records are gone — such vertices are unreachable after delete-repair).
+
+    With ``prev`` + ``dirty`` (and an unchanged EF slot layout — same
+    ``r_max``/``universe``) only the dirty rows and the appended tail are
+    re-encoded/re-fetched; everything else is row-copied from the previous
+    view, mirroring the index store's dirty-block merge.
+    """
+    n = len(adjacency)
+    _, _, _, words = slot_layout(r_max, universe)
+    nbrs = np.full((n, r_max), -1, np.int32)
+    cnts = np.zeros(n, np.int32)
+    slots = np.zeros((n, words), np.uint32)
+    vecs = np.zeros((n, dim), np.float32)
+    n_prev = prev.neighbors.shape[0] if prev is not None else 0
+    reuse = (prev is not None and dirty is not None and n_prev <= n
+             and prev.ef_slots.shape[1] == words
+             and prev.neighbors.shape[1] == r_max
+             and prev.vectors.shape[1] == dim)
+    if reuse:
+        nbrs[:n_prev] = np.asarray(prev.neighbors)
+        cnts[:n_prev] = np.asarray(prev.counts)
+        slots[:n_prev] = np.asarray(prev.ef_slots)
+        vecs[:n_prev] = np.asarray(prev.vectors)
+        todo = sorted({int(d) for d in dirty if 0 <= int(d) < n}
+                      | set(range(n_prev, n)))
+    else:
+        todo = range(n)
+    todo = list(todo)
+    for i in todo:
+        adj = np.sort(np.asarray(adjacency[i], np.int64))
+        k = min(len(adj), r_max)
+        nbrs[i, :k] = adj[:k].astype(np.int32)
+        nbrs[i, k:] = -1
+        cnts[i] = k
+        slots[i] = encode_slot(adj[:k].astype(np.uint64), r_max, universe)
+    if todo:
+        vecs[np.asarray(todo)] = fetch_vectors(np.asarray(todo, np.int64))
+    return DeviceIndex(
+        neighbors=jnp.asarray(nbrs), counts=jnp.asarray(cnts),
+        ef_slots=jnp.asarray(slots),
+        pq_codes=jnp.asarray(np.asarray(pq_codes, np.uint8)),
+        pq_centroids=jnp.asarray(np.asarray(pq_centroids, np.float32)),
+        vectors=jnp.asarray(vecs), medoid=jnp.int32(medoid),
+        tombstone=jnp.zeros((n,), jnp.bool_))
+
+
+def memtable_topk(snap: Snapshot, queries: np.ndarray, k: int,
+                  kernels=None) -> tuple[np.ndarray, np.ndarray]:
+    """Brute-force side-scan of the snapshot's buffered inserts (§3.5):
+    exact L2 against every live mem row -> (ids [nq, k], d [nq, k]) padded
+    with (-1, +inf). Goes through the ``rerank_l2`` kernel dispatch — the
+    memtable is just one more exact-distance batch to the compute tier."""
+    queries = np.asarray(queries, np.float32)
+    nq = len(queries)
+    ids = np.full((nq, k), -1, np.int64)
+    d = np.full((nq, k), np.inf, np.float32)
+    rows = [(i, v) for i, v in snap.mem_rows.items()
+            if i not in snap.tombstones]
+    if not rows:
+        return ids, d
+    from repro.kernels import dispatch
+    mids = np.asarray([i for i, _ in rows], np.int64)
+    mat = np.stack([np.asarray(v, np.float32) for _, v in rows])
+    cand = jnp.broadcast_to(jnp.asarray(mat)[None],
+                            (nq, len(rows), mat.shape[1]))
+    dd = np.asarray(dispatch.rerank_l2(jnp.asarray(queries), cand, kernels))
+    take = min(k, len(rows))
+    order = np.argsort(dd, axis=1, kind="stable")[:, :take]
+    ids[:, :take] = mids[order]
+    d[:, :take] = np.take_along_axis(dd, order, 1)
+    return ids, d
 
 
 class SnapshotHandle:
@@ -42,11 +149,22 @@ class SnapshotHandle:
             self._snap = snap
 
     def with_tombstones(self, ids) -> None:
-        """Deletions become visible immediately (batch-visible reads)."""
+        """Deletions become visible immediately (batch-visible reads): the
+        id set grows AND the device view's mask bits flip, so both the host
+        filters and the in-beam re-rank mask see them without a publish."""
         with self._lock:
-            self._snap = replace(self._snap,
-                                 tombstones=self._snap.tombstones | frozenset(int(i) for i in ids),
-                                 version=self._snap.version)
+            ids = [int(i) for i in ids]
+            snap = self._snap
+            dev = snap.device
+            if dev is not None and dev.tombstone is not None:
+                n = int(dev.tombstone.shape[0])
+                hit = np.asarray([i for i in ids if 0 <= i < n], np.int32)
+                if len(hit):
+                    dev = dev._replace(
+                        tombstone=dev.tombstone.at[jnp.asarray(hit)].set(True))
+            self._snap = replace(snap,
+                                 tombstones=snap.tombstones | frozenset(ids),
+                                 device=dev)
 
     def with_mem_rows(self, rows: dict) -> None:
         with self._lock:

@@ -1,37 +1,60 @@
 """Decoupled streaming updates (paper §3.5): FreshDiskANN-style batch merges
-for the auxiliary index + log-structured appends & GC for vector data.
+for the auxiliary index + log-structured appends & GC for vector data,
+served by the SAME batched device search core as a frozen index.
 
 The asymmetric treatment is the paper's point:
 
 - the graph is globally interconnected -> buffered deletes/inserts are merged
-  in batches with robust-prune repair (full index-store rewrite per merge,
-  like FreshDiskANN — but the *compressed* index is much smaller to write);
+  in batches with robust-prune repair. The merge tracks the **dirty vertex
+  set** (repair-patched + deleted + inserted + back-edge-patched vertices)
+  and rewrites ONLY the 4 KiB index-store blocks holding those lists
+  (``CompressedIndexStore.rewrite_blocks``); a full rebuild remains the
+  fallback (block overflow / EF-universe overflow) and the co-located
+  baseline for write-amp accounting.
 - vector data has no inter-record dependencies -> inserts append to the
   active mutable segment at insert time, deletes only mark staleness, and a
   background GC pass (greedy by garbage ratio) reclaims space without
   rewriting the whole store.
 
-Write-amplification accounting: merge I/O = new index-store bytes (+ the GC
-copy traffic), vs. the co-located baseline which must rewrite vectors AND
-index together.
+Search during updates is NOT a private Python loop: every published
+:class:`Snapshot` carries a cached device view (``consistency.py``), graph
+results come from ``search_batched`` with tombstones masked in-beam, and
+buffered inserts are covered by the brute-force memtable side-scan, merged
+through the same top-K merge the sharded serving tier uses. The insert path
+of the merge itself batches all buffered points through one
+``search_candidates`` traversal over the pre-merge snapshot.
+
+Write-amplification accounting: merge I/O = dirty index-store blocks (+ the
+GC copy traffic), vs. full-rebuild (every block) and the co-located baseline
+which must rewrite vectors AND index together. ``engine.merge_cost_us``
+prices the merge from the dirty-block count.
 
 ID contract: vertex ids are *dense* (id == graph array position), exactly as
 in DiskANN, where the disk offset is computed from the id. Fresh inserts must
-therefore allocate the next dense ids; production deployments put an
-id-allocator in front (the paper's "ID-to-location mapping within each
-segment group" plays this role for the vector tier).
+therefore allocate the next dense ids; reusing an id that already exists in
+the graph raises ``ValueError``. Production deployments put an id-allocator
+in front (the paper's "ID-to-location mapping within each segment group"
+plays this role for the vector tier).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
 
 from ..graph.pq import PQCodebook, encode_pq
 from ..graph.vamana import robust_prune
+from ..search.beam import (SearchParams, resolve_kernels, search,
+                           search_candidates)
+from ..search.engine import merge_cost_us, merge_topk
 from ..storage.index_store import CompressedIndexStore
 from ..storage.vector_store import DecoupledVectorStore
-from .consistency import Snapshot, SnapshotHandle
+from .consistency import (Snapshot, SnapshotHandle, build_device_view,
+                          memtable_topk)
 
 
 @dataclass
@@ -42,10 +65,47 @@ class UpdateConfig:
     merge_threshold: int = 256        # buffered inserts triggering a merge
     gc_threshold: float = 0.25
     cache_bytes: int = 0
+    fill_factor: float = 0.85         # index-store build-time block fill cap:
+                                      # the headroom that keeps dirty-block
+                                      # rewrites in place (§3.5 incremental)
+    universe_headroom: float = 2.0    # EF universe slack over the current max
+                                      # id, so fresh dense ids stay encodable
+                                      # without forcing a full rebuild
+    incremental: bool = True          # False -> always full store rebuild
+    benefit_threshold: float = 0.0    # live-search re-rank early-stop; 0.0 =
+                                      # exact re-rank of the whole cand list
+    kernels: object = None            # KernelConfig for the device path
+                                      # (None -> REPRO_KERNELS env default)
+
+
+@dataclass
+class MergeStats:
+    """One merge's accounting: phase wall-times, dirty set, block-granular
+    write I/O, and the engine-modeled cost."""
+    dirty_vertices: int = 0
+    inserted: int = 0
+    deleted: int = 0
+    blocks_rewritten: int = 0
+    blocks_appended: int = 0
+    total_blocks: int = 0
+    write_bytes: int = 0              # index-store merge write I/O
+    cache_invalidated: int = 0
+    full_rebuild: bool = False
+    modeled_cost_us: float = 0.0      # engine.merge_cost_us pricing
+    t_repair_s: float = 0.0
+    t_insert_s: float = 0.0
+    t_vector_s: float = 0.0           # stale-marking + seal + GC
+    t_store_s: float = 0.0            # index-store rewrite/rebuild
+    t_publish_s: float = 0.0          # device-view build + publish
 
 
 class StreamingIndex:
-    """DecoupleVS update path over (CompressedIndexStore, DecoupledVectorStore)."""
+    """DecoupleVS update path over (CompressedIndexStore, DecoupledVectorStore).
+
+    Reads and writes share one engine: searches (live or mid-merge) run the
+    batched beam core over the current snapshot's device view; merges use
+    the same core to find insert candidates, then rewrite only dirty blocks.
+    """
 
     def __init__(self, adjacency: list, medoid: int,
                  vector_store: DecoupledVectorStore, pq_codes: np.ndarray,
@@ -59,17 +119,25 @@ class StreamingIndex:
         self.insert_buffer: dict[int, np.ndarray] = {}
         self.delete_buffer: set[int] = set()
         self.merges = 0
+        self.last_merge: MergeStats | None = None
+        # Resolve the per-op kernel backends ONCE (config time): every
+        # search this index runs, and the merge cost pricing, use these.
+        self._kernels = (dispatch.default_config() if cfg.kernels is None
+                         else cfg.kernels.resolve())
         store = self._build_index_store()
         self.handle = SnapshotHandle(Snapshot(
             version=0, index_store=store, vector_store=vector_store,
-            pq_codes=pq_codes))
+            pq_codes=pq_codes,
+            device=self._device_view(store.universe)))
 
     # ------------------------------------------------------------- helpers
     def _build_index_store(self) -> CompressedIndexStore:
+        needed = max(len(self.adjacency), self._max_id() + 1)
+        universe = max(needed, int(needed * self.cfg.universe_headroom))
         return CompressedIndexStore.from_graph(
-            self.adjacency, self.medoid, self.cfg.r,
-            universe=max(len(self.adjacency), self._max_id() + 1),
-            cache_bytes=self.cfg.cache_bytes)
+            self.adjacency, self.medoid, self.cfg.r, universe=universe,
+            cache_bytes=self.cfg.cache_bytes,
+            fill_factor=self.cfg.fill_factor)
 
     def _max_id(self) -> int:
         return max(self.vector_store.loc.keys(), default=len(self.adjacency) - 1)
@@ -82,8 +150,52 @@ class StreamingIndex:
     def _vecs(self, ids: np.ndarray) -> np.ndarray:
         return self.vector_store.get(np.asarray(ids, np.int64)).astype(np.float32)
 
+    def _fetch_view_rows(self, ids: np.ndarray) -> np.ndarray:
+        """Re-rank rows for the device view: zero-fill ids whose vector
+        records are gone (deleted vertices are unreachable post-repair, the
+        rows just keep the array dense). Unaccounted: this is the publish-
+        time HBM materialization, not serving I/O."""
+        ids = np.asarray(ids, np.int64)
+        out = np.zeros((len(ids), self.vector_store.cfg.dim), np.float32)
+        have = [j for j, i in enumerate(ids) if int(i) in self.vector_store.loc]
+        if have:
+            out[np.asarray(have)] = self.vector_store.get(
+                ids[np.asarray(have)], account=False).astype(np.float32)
+        return out
+
+    def _device_view(self, universe: int, prev=None, dirty=None):
+        return build_device_view(
+            self.adjacency, self.medoid, self.pq_codes, self.cb.centroids,
+            self._fetch_view_rows, self.vector_store.cfg.dim,
+            r_max=self.cfg.r, universe=universe, prev=prev, dirty=dirty)
+
+    def _params(self, k: int, l_size: int, universe: int) -> SearchParams:
+        return SearchParams(
+            l_size=l_size, k=k, r_max=self.cfg.r, universe=universe,
+            benefit_threshold=self.cfg.benefit_threshold,
+            filter_tombstones=True, kernels=self._kernels)
+
     # ------------------------------------------------------------- updates
     def insert(self, ids: np.ndarray, vecs: np.ndarray) -> None:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        reused = [int(i) for i in ids if int(i) < len(self.adjacency)]
+        if reused:
+            raise ValueError(
+                f"id reuse not supported: ids {reused[:5]} already exist in "
+                f"the graph (dense-id contract — allocate fresh ids)")
+        # Also reject re-inserting a fresh id that is already buffered or
+        # already holds a vector-store record (a silent overwrite would
+        # leave the first record live-looking forever — GC only reclaims
+        # stale-marked rows) and duplicates within one call.
+        seen: set[int] = set()
+        dup = [int(i) for i in ids
+               if int(i) in self.insert_buffer
+               or int(i) in self.vector_store.loc
+               or (int(i) in seen or seen.add(int(i)))]
+        if dup:
+            raise ValueError(
+                f"id reuse not supported: ids {dup[:5]} already inserted "
+                f"(buffered or stored; delete + merge before reusing)")
         vecs = np.asarray(vecs, np.float32)
         # Vector data path: append to the active segment NOW (§3.5).
         self.vector_store.append(ids, vecs)
@@ -101,9 +213,22 @@ class StreamingIndex:
         self.handle.with_tombstones(ids)   # batch-visible immediately
 
     # ------------------------------------------------------------- merge
-    def merge(self) -> None:
-        """Batch merge: delete-repair + insert + store rebuild + GC + publish."""
+    def merge(self, force_full: bool = False) -> MergeStats:
+        """Batch merge: delete-repair + insert + dirty-block store rewrite +
+        GC + publish. Returns the merge's :class:`MergeStats` (also kept as
+        ``self.last_merge``)."""
+        stats = MergeStats()
+        snap0 = self.handle.current()
+        reused = sorted(i for i in self.insert_buffer
+                        if i < len(self.adjacency))
+        if reused:
+            raise ValueError(
+                f"id reuse not supported: buffered ids {reused[:5]} already "
+                f"exist in the graph (dense-id contract)")
+        dirty: set[int] = set()
+        t0 = time.perf_counter()
         D = {d for d in self.delete_buffer if d < len(self.adjacency)}
+        stats.deleted = len(D)
         # 1. Delete consolidation (FreshDiskANN): patch every vertex whose
         #    list touches D with its deleted neighbors' neighbors.
         if D:
@@ -129,22 +254,41 @@ class StreamingIndex:
                                          vmat, self.cfg.alpha, self.cfg.r)
                     cand = cand[local]
                 self.adjacency[p] = cand
+                dirty.add(p)
             for d in D:
                 self.adjacency[d] = np.zeros(0, np.int64)
+            dirty.update(D)
+        stats.t_repair_s = time.perf_counter() - t0
 
-        # 2. Insert buffered points with greedy search + robust prune.
-        for vid, v in sorted(self.insert_buffer.items()):
-            visited = self._greedy_visit(v)
-            if vid < len(self.adjacency):
-                pass  # id reuse not supported; ids are fresh by contract
+        # 2. Insert buffered points: ONE batched device traversal over the
+        #    pre-merge snapshot supplies every point's candidate pool, then
+        #    robust prune + back-edge patching on the host.
+        t1 = time.perf_counter()
+        # A buffered insert that was deleted before the merge must NOT be
+        # integrated (it would resurrect: publish clears the tombstones);
+        # its vector row is reclaimed with the other deletes in step 3.
+        items = sorted((vid, v) for vid, v in self.insert_buffer.items()
+                       if vid not in self.delete_buffer)
+        stats.inserted = len(items)
+        if items:
+            qs = jnp.asarray(np.stack([v for _, v in items]))
+            p_ins = self._params(k=min(10, self.cfg.l_build),
+                                 l_size=self.cfg.l_build,
+                                 universe=snap0.index_store.universe)
+            cand_rows, _ = search_candidates(snap0.device, qs, p_ins)
+            cand_rows = np.asarray(cand_rows, np.int64)
+        for (vid, v), row in zip(items, cand_rows if items else ()):
             while len(self.adjacency) <= vid:
                 self.adjacency.append(np.zeros(0, np.int64))
-            cand_ids = np.asarray(visited, np.int64)
+            cand_ids = np.asarray(
+                [c for c in row if c >= 0 and c not in self.delete_buffer],
+                np.int64)
             vmat = np.concatenate([self._vecs(cand_ids), v[None]]) \
                 if len(cand_ids) else v[None]
             local = robust_prune(len(cand_ids), np.arange(len(cand_ids)),
                                  vmat, self.cfg.alpha, self.cfg.r)
             self.adjacency[vid] = cand_ids[local]
+            dirty.add(vid)
             for q in self.adjacency[vid]:
                 q = int(q)
                 if vid not in self.adjacency[q]:
@@ -155,6 +299,7 @@ class StreamingIndex:
                                             qv, self.cfg.alpha, self.cfg.r)
                         merged = merged[keep]
                     self.adjacency[q] = merged
+                    dirty.add(q)
             # PQ code for steering future traversals.
             code = encode_pq(v[None], self.cb)[0]
             if vid >= len(self.pq_codes):
@@ -162,68 +307,98 @@ class StreamingIndex:
                                  self.pq_codes.shape[1]), np.uint8)
                 self.pq_codes = np.concatenate([self.pq_codes, grow])
             self.pq_codes[vid] = code
+        stats.t_insert_s = time.perf_counter() - t1
 
         # 3. Vector-data path: tombstones -> stale marks, then GC (§3.5).
-        self.vector_store.mark_stale(np.asarray(sorted(D), np.int64))
+        #    The whole delete buffer is marked (not just D): a deleted
+        #    buffered insert has a vector row but no graph slot, and ids
+        #    that never existed are skipped by mark_stale.
+        t2 = time.perf_counter()
+        self.vector_store.mark_stale(
+            np.asarray(sorted(self.delete_buffer), np.int64))
         self.vector_store.seal_active()
         self.vector_store.gc(self.cfg.gc_threshold)
+        stats.t_vector_s = time.perf_counter() - t2
 
-        # 4. Rebuild the compressed index store (merge write I/O) + publish.
+        # 4. Index-store merge: rewrite only dirty blocks; full rebuild is
+        #    the fallback (and the forced baseline for write-amp studies).
+        t3 = time.perf_counter()
         if self.medoid in D:
             alive = [i for i, a in enumerate(self.adjacency)
                      if len(a) and i not in D]
             self.medoid = alive[0] if alive else 0
-        store = self._build_index_store()
-        store.io.write(store.physical_bytes)
-        old = self.handle.current()
+        stats.dirty_vertices = len(dirty)
+        old_store = snap0.index_store
+        store = None
+        if self.cfg.incremental and not force_full:
+            res = old_store.rewrite_blocks(self.adjacency, dirty,
+                                           medoid=self.medoid)
+            if res is not None:
+                store, rep = res
+                stats.blocks_rewritten = rep.blocks_rewritten
+                stats.blocks_appended = rep.blocks_appended
+                stats.total_blocks = rep.total_blocks
+                stats.write_bytes = rep.write_bytes
+                stats.cache_invalidated = rep.cache_invalidated
+        if store is None:                     # full rebuild (or forced)
+            store = self._build_index_store()
+            store.io.write(store.physical_bytes, n=store.n_blocks)
+            stats.full_rebuild = True
+            stats.blocks_rewritten = store.n_blocks
+            stats.total_blocks = store.n_blocks
+            stats.write_bytes = store.physical_bytes
+        stats.modeled_cost_us = merge_cost_us(
+            stats.blocks_rewritten + stats.blocks_appended,
+            len(self.adjacency) if stats.full_rebuild else len(dirty),
+            backend=self._kernels.ef_decode)
+        stats.t_store_s = time.perf_counter() - t3
+
+        # 5. Publish: device view patched from the previous snapshot's view
+        #    where the store merge was incremental (same EF universe).
+        t4 = time.perf_counter()
+        prev_view = snap0.device \
+            if store.universe == old_store.universe else None
+        view = self._device_view(store.universe, prev=prev_view, dirty=dirty)
         self.handle.publish(Snapshot(
-            version=old.version + 1, index_store=store,
+            version=snap0.version + 1, index_store=store,
             vector_store=self.vector_store, pq_codes=self.pq_codes,
-            tombstones=frozenset(), mem_rows={}))
+            tombstones=frozenset(), mem_rows={}, device=view))
+        stats.t_publish_s = time.perf_counter() - t4
         self.insert_buffer.clear()
         self.delete_buffer.clear()
         self.merges += 1
-
-    def _greedy_visit(self, query: np.ndarray, l_size: int | None = None) -> list[int]:
-        """Greedy search over current adjacency using store-resident vectors."""
-        l_size = l_size or self.cfg.l_build
-        tomb = self.delete_buffer
-        entry = self.medoid
-        def dist(ids):
-            return ((self._vecs(np.asarray(ids, np.int64)) - query[None]) ** 2).sum(-1)
-        cand = {entry: float(dist([entry])[0])}
-        expanded: set[int] = set()
-        visited: list[int] = []
-        while True:
-            frontier = [(d, v) for v, d in cand.items() if v not in expanded]
-            if not frontier:
-                break
-            _, best = min(frontier)
-            expanded.add(best)
-            if best not in tomb:
-                visited.append(best)
-            nbrs = [int(x) for x in self.adjacency[best] if int(x) not in cand]
-            if nbrs:
-                for v, d in zip(nbrs, dist(nbrs)):
-                    cand[v] = float(d)
-            if len(cand) > l_size:
-                keep = sorted(cand.items(), key=lambda kv: kv[1])[:l_size]
-                cand = dict(keep)
-        return visited
+        self.last_merge = stats
+        return stats
 
     # ------------------------------------------------------------- search
     def search(self, query: np.ndarray, k: int = 10, l_size: int = 64
                ) -> np.ndarray:
         """Snapshot search honouring tombstones + buffered inserts (§3.5)."""
+        ids, _ = self.search_batch(np.asarray(query, np.float32)[None],
+                                   k=k, l_size=l_size)
+        return ids[0]
+
+    def search_batch(self, queries: np.ndarray, k: int = 10,
+                     l_size: int = 64) -> tuple[np.ndarray, np.ndarray]:
+        """Batched live search -> (ids [nq, k], dists [nq, k]); -1 = none."""
         snap = self.handle.current()
-        query = np.asarray(query, np.float32)
-        visited = self._greedy_visit(query, l_size=l_size)
-        ids = [v for v in visited if v not in snap.tombstones]
-        d = ((self._vecs(np.asarray(ids, np.int64)) - query[None]) ** 2).sum(-1) \
-            if ids else np.zeros(0)
-        pool = list(zip(d.tolist(), ids))
-        for vid, vec in snap.mem_rows.items():
-            if vid not in snap.tombstones and vid not in set(ids):
-                pool.append((float(((vec - query) ** 2).sum()), vid))
-        pool.sort()
-        return np.asarray([vid for _, vid in pool[:k]], np.int64)
+        p = self._params(k, l_size, snap.index_store.universe)
+        return snapshot_search(snap, queries, p)
+
+
+def snapshot_search(snap: Snapshot, queries: np.ndarray, p: SearchParams
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Search one live snapshot with the frozen-index engine (§3.5 reads):
+    ``search_batched`` over the snapshot's device view (tombstones masked
+    in-beam via ``p.filter_tombstones``) + the brute-force memtable
+    side-scan over buffered inserts, merged by the serving tier's top-K
+    merge. ``p`` must carry the snapshot's EF universe."""
+    queries = np.asarray(queries, np.float32)
+    p = resolve_kernels(p)
+    ids, dists, _ = search(snap.device, jnp.asarray(queries), p)
+    gids = np.asarray(ids, np.int64)
+    gd = np.asarray(dists, np.float32)
+    mids, md = memtable_topk(snap, queries, p.k, p.kernels)
+    out_i, out_d = merge_topk(np.stack([gids, mids]).astype(np.int64),
+                              np.stack([gd, md]), p.k)
+    return out_i, out_d

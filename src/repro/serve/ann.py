@@ -22,6 +22,16 @@ Three layers (docs/SERVING.md):
    device fetch trace through the fixed-entry LRU of §3.4
    (``core/storage/index_store.LRUCache``) and pricing the counters with the
    I/O model constants of ``core/search/engine.py`` (T_IO/T_PQ/T_EX/T_DEC).
+
+**Live-updatable serving (§3.5).** A ``BatchedSearcher`` also accepts a
+``SnapshotHandle`` (the streaming-update tier's publication point): each
+served batch *pins* the current snapshot once — every bucket and the I/O
+accounting run against that snapshot's cached device view, so queries in
+flight never observe a half-published merge — and the next batch picks up
+whatever view the updater published since (hot swap; no searcher rebuild).
+Tombstones are masked inside the beam (``filter_tombstones``) and buffered
+inserts are covered by the memtable side-scan, merged as one more "shard"
+in the global top-K.
 """
 from __future__ import annotations
 
@@ -35,8 +45,12 @@ from repro.core.codec import elias_fano as ef
 from repro.core.distributed.sharded_index import ShardedIndex
 from repro.core.search.beam import (DeviceIndex, SearchParams,
                                     resolve_kernels, search)
-from repro.core.search.engine import T_IO, compute_costs
+from repro.core.search.engine import T_IO, compute_costs, merge_topk
 from repro.core.storage.index_store import LRUCache
+from repro.core.update.consistency import SnapshotHandle, memtable_topk
+
+__all__ = ["ServeConfig", "BatchReport", "BatchedSearcher", "plan_buckets",
+           "merge_topk"]
 
 
 @dataclass
@@ -66,6 +80,9 @@ class BatchReport:
     rerank_batches: int = 0
     modeled_latency_us: float = 0.0   # mean per-query modeled latency
     modeled_p99_us: float = 0.0
+    snapshot_version: int = -1      # live mode: the snapshot pinned for this
+                                    # batch (-1 for frozen indexes)
+    mem_candidates: int = 0         # live mode: memtable rows side-scanned
 
 
 def plan_buckets(nq: int, buckets: tuple) -> list:
@@ -92,19 +109,10 @@ def plan_buckets(nq: int, buckets: tuple) -> list:
     return out
 
 
-def merge_topk(ids, dists, k: int):
-    """[S, nq, K] per-shard globally-translated ids + dists -> global top-K
-    (the same gather + top_k merge that runs inside shard_map on a mesh)."""
-    s, nq, kk = ids.shape
-    flat_i = ids.transpose(1, 0, 2).reshape(nq, s * kk)
-    flat_d = dists.transpose(1, 0, 2).reshape(nq, s * kk)
-    order = np.argsort(flat_d, axis=1, kind="stable")[:, :k]
-    return (np.take_along_axis(flat_i, order, 1),
-            np.take_along_axis(flat_d, order, 1))
-
-
 class BatchedSearcher:
-    """Serve query batches against a DeviceIndex (1 shard) or ShardedIndex.
+    """Serve query batches against a DeviceIndex (1 shard), a ShardedIndex,
+    or a live ``SnapshotHandle`` (§3.5 streaming index — hot-swapped on
+    every publish, pinned per served batch).
 
     >>> searcher = BatchedSearcher(index, SearchParams(...))
     >>> ids, dists, report = searcher.search(queries)   # [nq, d] float32
@@ -115,6 +123,15 @@ class BatchedSearcher:
         cfg = cfg or ServeConfig()
         if cfg.account_io:
             p = p._replace(trace_fetches=True)
+        self._handle = index if isinstance(index, SnapshotHandle) else None
+        if self._handle is not None:
+            snap = self._handle.current()
+            store = snap.index_store
+            # Live mode: the beam masks the snapshot's tombstones, and the
+            # EF decode geometry must match the updater's store (its slot
+            # universe carries id headroom past the current max id).
+            p = p._replace(filter_tombstones=True, universe=store.universe,
+                           r_max=store.r)
         # Config time: pin the per-op kernel backends here, once — every
         # bucket program this searcher compiles dispatches statically, and
         # the I/O model prices compute with the matching cost constants.
@@ -126,7 +143,10 @@ class BatchedSearcher:
         self._t_pq, self._t_ex, self._t_dec_ix = compute_costs(
             p.kernels.pq_adc, p.kernels.rerank_l2, p.kernels.ef_decode)
         *_, self._t_dec_vec = compute_costs(dec_backend=p.kernels.byteplane)
-        if isinstance(index, ShardedIndex):
+        if self._handle is not None:
+            self._shards = None        # resolved per batch (snapshot pin)
+            self.shard_size = int(snap.device.pq_codes.shape[0])
+        elif isinstance(index, ShardedIndex):
             s = index.pq_codes.shape[0]
             self._shards = [
                 DeviceIndex(*(jnp.asarray(f[i]) for f in index))
@@ -139,9 +159,10 @@ class BatchedSearcher:
         # worst case so capacity is a hard bound (index_store semantics).
         universe = p.universe or self.shard_size
         entry_bytes = (ef.worst_case_bits(p.r_max, universe) + 7) // 8
+        n_caches = 1 if self._handle is not None else len(self._shards)
         self._caches = [
             LRUCache(cfg.cache_bytes // max(1, entry_bytes), entry_bytes)
-            for _ in self._shards]
+            for _ in range(n_caches)]
 
     # ------------------------------------------------------------- serving
     def search(self, queries: np.ndarray):
@@ -152,12 +173,36 @@ class BatchedSearcher:
         """
         queries = np.asarray(queries, np.float32)
         nq = len(queries)
-        report = BatchReport(n_queries=nq, n_shards=len(self._shards))
+        # Live mode: pin ONE snapshot for the whole batch — every bucket and
+        # shard below reads this snapshot's device view, so a merge that
+        # publishes mid-batch is invisible until the next search() call
+        # (hot swap at batch granularity, §3.5 consistency).
+        snap = self._handle.current() if self._handle is not None else None
+        if snap is not None:
+            store = snap.index_store
+            if (store.universe != self.p.universe
+                    or store.r != self.p.r_max):
+                # A fallback full rebuild renewed the EF geometry; re-pin
+                # (recompiles the bucket programs once) and re-size the
+                # modeled LRU to the new worst-case entry bound (§3.4).
+                self.p = self.p._replace(universe=store.universe,
+                                         r_max=store.r)
+                entry_bytes = (ef.worst_case_bits(store.r, store.universe)
+                               + 7) // 8
+                self._caches = [LRUCache(
+                    self.cfg.cache_bytes // max(1, entry_bytes), entry_bytes)]
+            shards = [snap.device]
+            self.shard_size = int(snap.device.pq_codes.shape[0])
+        else:
+            shards = self._shards
+        n_lanes = len(shards) + (1 if snap is not None else 0)
+        report = BatchReport(n_queries=nq, n_shards=len(shards),
+                             snapshot_version=snap.version if snap else -1)
         t0 = time.perf_counter()
         chunks = plan_buckets(nq, self.cfg.buckets)
-        out_ids = np.full((len(self._shards), nq, self.p.k), -1, np.int64)
-        out_d = np.full((len(self._shards), nq, self.p.k), np.inf, np.float32)
-        lat = np.zeros((len(self._shards), nq), np.float64)
+        out_ids = np.full((n_lanes, nq, self.p.k), -1, np.int64)
+        out_d = np.full((n_lanes, nq, self.p.k), np.inf, np.float32)
+        lat = np.zeros((n_lanes, nq), np.float64)
         for start, count, bucket in chunks:
             report.buckets.append(bucket)
             report.n_padded += bucket - count
@@ -165,7 +210,7 @@ class BatchedSearcher:
             if bucket > count:      # pad by repeating the last query
                 q = np.concatenate([q, np.repeat(q[-1:], bucket - count, 0)])
             qj = jnp.asarray(q)
-            for si, shard in enumerate(self._shards):
+            for si, shard in enumerate(shards):
                 ids, dists, stats = search(shard, qj, self.p)
                 ids = np.asarray(ids)[:count]
                 gids = np.where(ids >= 0,
@@ -176,6 +221,12 @@ class BatchedSearcher:
                 if self.cfg.account_io:
                     lat[si, start:start + count] = self._account(
                         report, stats, count, self._caches[si])
+        if snap is not None:
+            # Memtable side-scan: buffered inserts are one more "shard" in
+            # the global merge (ids are globally unique fresh dense ids).
+            out_ids[-1], out_d[-1] = memtable_topk(
+                snap, queries, self.p.k, self.p.kernels)
+            report.mem_candidates = len(snap.mem_rows)
         ids, dists = merge_topk(out_ids, out_d, self.p.k)
         report.wall_s = time.perf_counter() - t0
         report.qps = nq / max(report.wall_s, 1e-9)

@@ -1,0 +1,165 @@
+"""Incremental index-store merges (§3.5 refactor): block-granular
+``rewrite_blocks`` vs full rebuild — losslessness, write savings, sparse
+index preservation, LRU invalidation, fill-factor headroom, fallbacks.
+
+Separate from test_storage.py so these run where ``hypothesis`` is absent.
+"""
+import numpy as np
+import pytest
+
+from repro.core.storage.index_store import CompressedIndexStore
+from repro.core.storage.layout import BLOCK_SIZE, pack_blocks
+
+
+def _random_graph(n, r, universe, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.sort(rng.choice(n, size=int(rng.integers(max(2, r // 2), r + 1)),
+                               replace=False)).astype(np.int64)
+            for _ in range(n)], rng
+
+
+def _assert_lossless(store, adjacency):
+    assert len(store.rec_start) == len(adjacency)
+    for vid in range(len(adjacency)):
+        np.testing.assert_array_equal(
+            store._decode_record(vid), np.sort(np.asarray(adjacency[vid])))
+
+
+# ------------------------------------------------------------- fill factor
+def test_pack_blocks_fill_factor_leaves_headroom():
+    recs = [np.full(100, 7, np.uint8) for _ in range(200)]
+    tight = pack_blocks(np.arange(200), recs, implicit_ids=True)
+    slack = pack_blocks(np.arange(200), recs, implicit_ids=True,
+                        fill_factor=0.5)
+    assert slack.n_blocks > tight.n_blocks
+    # every block stays under the cap (header + records <= fill * BLOCK)
+    for b in range(slack.n_blocks):
+        members = np.flatnonzero(slack.rec_block == b)
+        used = 6 + 2 * len(members) + int(slack.rec_len[members].sum())
+        assert used <= int(0.5 * BLOCK_SIZE)
+
+
+def test_pack_blocks_fill_factor_admits_oversized_record():
+    """A record bigger than the cap (but <= BLOCK_SIZE) still packs: an
+    empty block always admits one record."""
+    recs = [np.full(3000, 1, np.uint8)]
+    pk = pack_blocks(np.arange(1), recs, implicit_ids=True, fill_factor=0.5)
+    assert pk.n_blocks == 1
+
+
+def test_pack_blocks_rejects_bad_fill():
+    with pytest.raises(ValueError):
+        pack_blocks(np.arange(1), [np.zeros(4, np.uint8)], fill_factor=0.0)
+
+
+# ------------------------------------------------------- incremental merge
+def test_rewrite_blocks_small_delta_under_half_of_rebuild():
+    """ACCEPTANCE: a small-delta merge (< 10% of vertices dirty, block-local
+    — e.g. a time-correlated id range expiring) writes < 50% of a full
+    index-store rebuild, and the result is content-identical to the full
+    rebuild (verify_index_slots-style losslessness)."""
+    n, r, universe = 4000, 16, 16000
+    adj, rng = _random_graph(n, r, universe, seed=1)
+    store = CompressedIndexStore.from_graph(adj, 0, r, universe=universe,
+                                            fill_factor=0.85)
+    adj2 = [a.copy() for a in adj]
+    dirty = np.arange(300, 640)          # 8.5% of vertices, block-local
+    for d in dirty:
+        adj2[int(d)] = np.sort(rng.choice(
+            n, size=int(rng.integers(8, r + 1)), replace=False)).astype(np.int64)
+    res = store.rewrite_blocks(adj2, dirty)
+    assert res is not None
+    inc, rep = res
+    full = CompressedIndexStore.from_graph(adj2, 0, r, universe=universe,
+                                           fill_factor=0.85)
+    assert len(dirty) / n < 0.10
+    assert rep.write_bytes < 0.5 * full.physical_bytes
+    assert rep.write_bytes == (rep.blocks_rewritten
+                               + rep.blocks_appended) * BLOCK_SIZE
+    _assert_lossless(inc, adj2)
+    _assert_lossless(full, adj2)
+
+
+def test_rewrite_blocks_appends_new_vertices():
+    n, r, universe = 1000, 16, 8000
+    adj, rng = _random_graph(n, r, universe, seed=2)
+    store = CompressedIndexStore.from_graph(adj, 0, r, universe=universe,
+                                            fill_factor=0.85)
+    adj2 = [a.copy() for a in adj]
+    for _ in range(40):
+        adj2.append(np.sort(rng.choice(n, size=r, replace=False)).astype(np.int64))
+    inc, rep = store.rewrite_blocks(adj2, [])
+    assert rep.blocks_rewritten == 0 and rep.blocks_appended >= 1
+    _assert_lossless(inc, adj2)
+    # sparse boundary index stayed sorted (locate_block contract) and the
+    # old prefix is untouched
+    assert np.all(np.diff(inc.sparse_index) > 0)
+    np.testing.assert_array_equal(inc.sparse_index[:store.n_blocks],
+                                  store.sparse_index)
+
+
+def test_rewrite_blocks_preserves_old_store():
+    """Snapshot isolation: the receiver's image/offsets never mutate."""
+    n, r, universe = 600, 8, 2400
+    adj, rng = _random_graph(n, r, universe, seed=3)
+    store = CompressedIndexStore.from_graph(adj, 0, r, universe=universe)
+    before = store.data.copy()
+    adj2 = [a.copy() for a in adj]
+    adj2[5] = np.sort(rng.choice(n, size=r, replace=False)).astype(np.int64)
+    res = store.rewrite_blocks(adj2, [5])
+    assert res is not None
+    np.testing.assert_array_equal(store.data, before)
+    _assert_lossless(store, adj)         # old snapshot still reads old lists
+
+
+def test_rewrite_blocks_invalidates_only_dirty_lru_entries():
+    n, r, universe = 800, 8, 3200
+    adj, rng = _random_graph(n, r, universe, seed=4)
+    store = CompressedIndexStore.from_graph(adj, 0, r, universe=universe,
+                                            cache_bytes=1 << 16)
+    for vid in range(100):
+        store.get_neighbors(vid)
+    adj2 = [a.copy() for a in adj]
+    adj2[7] = np.sort(rng.choice(n, size=r, replace=False)).astype(np.int64)
+    inc, rep = store.rewrite_blocks(adj2, [7])
+    assert rep.cache_invalidated == 1
+    assert 7 not in inc.cache._d and 8 in inc.cache._d
+    # warm entries survive; the dirty one re-reads the new block
+    h0 = inc.cache.hits
+    np.testing.assert_array_equal(np.sort(inc.get_neighbors(8)),
+                                  np.sort(adj2[8]))
+    assert inc.cache.hits == h0 + 1
+    np.testing.assert_array_equal(np.sort(inc.get_neighbors(7)),
+                                  np.sort(adj2[7]))
+
+
+def test_rewrite_blocks_falls_back_on_block_overflow():
+    """fill_factor=1.0 leaves no headroom: growing every list in a packed
+    block must overflow it -> incremental path reports infeasible (None)."""
+    n, r, universe = 400, 8, 1 << 30    # huge universe -> fat records
+    rng = np.random.default_rng(5)
+    adj = [np.sort(rng.choice(10**9, size=4, replace=False)).astype(np.int64)
+           for _ in range(n)]
+    store = CompressedIndexStore.from_graph(adj, 0, r, universe=universe,
+                                            fill_factor=1.0)
+    adj2 = [a.copy() for a in adj]
+    grown = np.flatnonzero(store.rec_block == 0)   # every list in block 0
+    for g in grown:
+        adj2[int(g)] = np.sort(rng.choice(
+            10**9, size=8, replace=False)).astype(np.int64)
+    assert store.rewrite_blocks(adj2, grown) is None
+
+
+def test_rewrite_blocks_falls_back_on_universe_overflow():
+    n, r, universe = 300, 8, 300
+    adj, rng = _random_graph(n, r, universe, seed=6)
+    store = CompressedIndexStore.from_graph(adj, 0, r, universe=universe)
+    adj2 = [a.copy() for a in adj]
+    adj2[0] = np.asarray([1, 2, universe + 5], np.int64)   # id beyond EF range
+    assert store.rewrite_blocks(adj2, [0]) is None
+
+
+def test_rewrite_blocks_rejects_shrunk_graph():
+    adj, _ = _random_graph(100, 8, 400, seed=7)
+    store = CompressedIndexStore.from_graph(adj, 0, 8, universe=400)
+    assert store.rewrite_blocks(adj[:50], [0]) is None

@@ -147,3 +147,75 @@ def test_stats_disabled_path(small_world):
     assert rep.graph_ios == 0 and rep.modeled_latency_us == 0
     ids_ref, _, _ = search(index, queries[:8], p)
     np.testing.assert_array_equal(ids, np.asarray(ids_ref))
+
+
+# --------------------------------------------------------------------------
+# Live-updatable serving: BatchedSearcher over a SnapshotHandle (§3.5)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def live_world():
+    from repro.core.graph.pq import encode_pq, train_pq
+    from repro.core.graph.vamana import build_vamana
+    from repro.core.storage.vector_store import (DecoupledVectorStore,
+                                                 StoreConfig)
+    from repro.core.update.fresh import StreamingIndex, UpdateConfig
+    vecs = make_vector_dataset("prop-like", n=400, dim=16,
+                               seed=2).astype(np.float32)
+    graph = build_vamana(vecs, r=16, l_build=32, seed=0)
+    cb = train_pq(vecs, m=4, seed=0)
+    codes = encode_pq(vecs, cb)
+    vs = DecoupledVectorStore(StoreConfig(dim=16, dtype=np.float32,
+                                          segment_capacity=256))
+    vs.append(np.arange(len(vecs)), vecs)
+    vs.seal_active()
+    idx = StreamingIndex(graph.adjacency, graph.medoid, vs, codes, cb,
+                         UpdateConfig(r=16, l_build=32,
+                                      merge_threshold=10**9))
+    return vecs, idx
+
+
+def test_live_searcher_matches_streaming_search(live_world):
+    """The serving tier over a SnapshotHandle returns exactly what the
+    update tier's own snapshot search returns (one engine, two callers)."""
+    vecs, idx = live_world
+    searcher = BatchedSearcher(idx.handle,
+                               SearchParams(l_size=32, k=5, rerank_batch=5,
+                                            max_iters=64,
+                                            benefit_threshold=0.0),
+                               ServeConfig(buckets=(4, 8)))
+    queries = vecs[[3, 50, 90, 123, 200]] + 0.001
+    ids, dists, rep = searcher.search(queries)
+    ref_ids, ref_d = idx.search_batch(queries, k=5, l_size=32)
+    np.testing.assert_array_equal(ids, ref_ids)
+    assert rep.snapshot_version == idx.handle.current().version
+
+
+def test_live_searcher_hot_swaps_on_publish(live_world):
+    """Each batch pins the snapshot current at admission; a merge between
+    batches is picked up (version moves), tombstones/memtable included."""
+    vecs, idx = live_world
+    searcher = BatchedSearcher(idx.handle,
+                               SearchParams(l_size=32, k=5, rerank_batch=5,
+                                            max_iters=64,
+                                            benefit_threshold=0.0),
+                               ServeConfig(buckets=(4,)))
+    q = vecs[[60, 61, 62, 63]]
+    ids0, _, rep0 = searcher.search(q)
+    v0 = rep0.snapshot_version
+    target = int(ids0[0, 0])
+    idx.delete([target])
+    fresh = vecs[60] * 1.0002
+    idx.insert(np.array([len(idx.adjacency) + 10]), fresh[None])
+    fresh_id = len(idx.adjacency) + 10
+    ids1, _, rep1 = searcher.search(q)
+    assert rep1.snapshot_version == v0          # no publish yet
+    assert target not in set(ids1.reshape(-1).tolist())   # tombstone masked
+    assert fresh_id in set(ids1[0].tolist())    # memtable side-scan
+    assert rep1.mem_candidates == 1
+    idx.merge()
+    ids2, _, rep2 = searcher.search(q)
+    assert rep2.snapshot_version == v0 + 1      # hot swap on publish
+    assert target not in set(ids2.reshape(-1).tolist())
+    assert fresh_id in set(ids2[0].tolist())    # now served from the graph
+    assert rep2.mem_candidates == 0

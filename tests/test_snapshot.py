@@ -1,0 +1,130 @@
+"""SnapshotHandle semantics (paper §3.5 consistency): publish-version
+monotonicity, immediate tombstone visibility, and in-flight snapshot
+isolation under a threaded publisher.
+
+Property-style under ``hypothesis`` where available; deterministic seeded
+draws otherwise (same pattern as tests/test_kernel_conformance.py).
+"""
+import threading
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.update.consistency import Snapshot, SnapshotHandle
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def hypothesize(n_fallback=8, **bounds):
+    """@given(**integer strategies) when hypothesis is available; otherwise
+    a deterministic seeded-numpy parametrization of the same bounds."""
+    if HAVE_HYPOTHESIS:
+        strats = {k: st.integers(lo, hi) for k, (lo, hi) in bounds.items()}
+
+        def deco(fn):
+            return settings(max_examples=16, deadline=None)(
+                given(**strats)(fn))
+        return deco
+
+    def deco(fn):
+        rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+        cases = [tuple(int(rng.integers(lo, hi + 1))
+                       for lo, hi in bounds.values())
+                 for _ in range(n_fallback)]
+        if len(bounds) == 1:
+            cases = [c[0] for c in cases]
+        return pytest.mark.parametrize(",".join(bounds), cases)(fn)
+    return deco
+
+
+def _snap(version, payload=None):
+    return Snapshot(version=version, index_store=payload,
+                    vector_store=None, pq_codes=version)
+
+
+def test_publish_must_increase_version():
+    h = SnapshotHandle(_snap(0))
+    h.publish(_snap(1))
+    with pytest.raises(ValueError):
+        h.publish(_snap(1))            # equal version rejected
+    with pytest.raises(ValueError):
+        h.publish(_snap(0))            # stale version rejected
+    h.publish(_snap(5))                # gaps are fine; only monotonicity
+    assert h.current().version == 5
+
+
+@hypothesize(versions=(2, 12))
+def test_publish_version_monotone_over_any_sequence(versions):
+    h = SnapshotHandle(_snap(0))
+    seen = [0]
+    for v in range(1, versions + 1):
+        h.publish(_snap(v))
+        seen.append(h.current().version)
+    assert seen == sorted(seen)
+
+
+def test_tombstones_visible_before_any_publish():
+    """Batch-visible deletes: the id set grows in place, version unchanged."""
+    h = SnapshotHandle(_snap(3))
+    h.with_tombstones([7, 9])
+    snap = h.current()
+    assert snap.version == 3
+    assert snap.tombstones == frozenset({7, 9})
+    h.with_tombstones([9, 11])
+    assert h.current().tombstones == frozenset({7, 9, 11})
+
+
+def test_mem_rows_accumulate_without_publish():
+    h = SnapshotHandle(_snap(0))
+    h.with_mem_rows({100: "a"})
+    h.with_mem_rows({101: "b"})
+    snap = h.current()
+    assert snap.version == 0 and set(snap.mem_rows) == {100, 101}
+
+
+@hypothesize(n_publishes=(4, 32))
+def test_inflight_snapshot_isolation_threaded(n_publishes):
+    """A reader that pinned a snapshot keeps a self-consistent view while a
+    publisher thread races ahead: the pinned object never mutates, and
+    every observed (version, payload) pair matches what that version
+    published — no torn snapshots."""
+    h = SnapshotHandle(_snap(0, payload=0))
+    stop = threading.Event()
+    errors = []
+
+    def publisher():
+        for v in range(1, n_publishes + 1):
+            # payload is derived from version: readers check the invariant
+            h.publish(_snap(v, payload=v * 10))
+        stop.set()
+
+    def reader():
+        pinned = h.current()                 # in-flight query pins here
+        pinned_version = pinned.version
+        pinned_payload = pinned.index_store
+        while not stop.is_set():
+            snap = h.current()
+            if snap.index_store != snap.version * 10 and snap.version > 0:
+                errors.append(("torn", snap.version, snap.index_store))
+            if snap.version > 0 and snap.pq_codes != snap.version:
+                errors.append(("mixed", snap.version))
+        # the pinned snapshot was never mutated by the publisher
+        if (pinned.version, pinned.index_store) != (pinned_version,
+                                                    pinned_payload):
+            errors.append(("pinned-mutated",))
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    pub = threading.Thread(target=publisher)
+    for t in threads:
+        t.start()
+    pub.start()
+    pub.join()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert h.current().version == n_publishes
