@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-kernels bench-smoke bench bench-kernels bench-update quickstart
+.PHONY: test test-fast test-kernels bench-smoke bench bench-kernels bench-update bench-storage quickstart
 
 test:            ## tier-1: full test suite, stop at first failure (~2.5 min)
 	$(PY) -m pytest -x -q
@@ -19,6 +19,9 @@ bench-kernels:   ## ref-vs-pallas per op + e2e -> BENCH_kernels.json
 
 bench-update:    ## streaming-update arms (inc/full/colocated) -> BENCH_update.json
 	$(PY) -m benchmarks.bench_update
+
+bench-storage:   ## planner vs fixed-codec vs colocated space savings -> BENCH_storage.json
+	$(PY) -m benchmarks.bench_storage
 
 bench-smoke:     ## ~30 s serving-path benchmark (QPS vs batch x shards)
 	$(PY) -m benchmarks.bench_serve_ann --smoke

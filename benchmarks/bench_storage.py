@@ -1,16 +1,49 @@
-"""Exp#2 (Fig. 6): storage savings of DecoupleVS vs DiskANN vs SPANN-like.
+"""Exp#2 (Fig. 6) end-to-end on the component-aware storage engine —
+written to ``BENCH_storage.json`` (in the ``run.py`` harness).
 
-Per-component breakdown: vector data (raw vs Huffman[+XOR-delta]) and
-auxiliary index (page-aligned fixed records vs decoupled vs +Elias-Fano),
-plus the SPANN-like baseline modeled with the paper's 8x posting-list
-replication. Paper claims to match: up to 58.7% total saving vs DiskANN;
-delta helps fp32 corpora, not 8-bit-quantised ones.
+Reproduces the paper's space-savings table by building every arm through
+the SAME BlockStore/codec-registry stack:
+
+- ``colocated``      — §2.2 DiskANN-style page-aligned baseline
+                       (block-granular accounting);
+- ``fixed_raw``      — decoupled, raw codec everywhere (the "Decouple"
+                       ablation: decoupling alone, no compression);
+- ``fixed_default``  — decoupled with the historical hard-coded choices
+                       (Elias-Fano adjacency + §3.3 two-stage vector path);
+- ``planner``        — the compression planner samples every component
+                       (adjacency ids, EF slot streams, PQ codes, vector
+                       chunks), selects the winning codec per component
+                       (``codec.registry.plan_components``), and the stores
+                       are built from the persisted ``StorageManifest``;
+- ``spann_like``     — modeled 8x posting-list replication baseline.
+
+Paper claims to match: up to 58.7% total saving vs DiskANN; delta helps
+fp32 corpora, not 8-bit-quantised ones. The acceptance gate for this repo:
+planner-selected layout saves >= 40% vs colocated across the synthetic
+suite (``suite.min_planner_saving``).
+
+Env: REPRO_BENCH_STORAGE_OUT overrides the JSON path.
 """
+import json
+import os
 import time
 
-from repro.core.storage.layout import BLOCK_SIZE
+import numpy as np
 
-from .common import csv, world
+from repro.core.codec import elias_fano as ef
+from repro.core.codec import registry as codecs
+from repro.core.search.engine import (EngineConfig, manifest_dec_costs,
+                                      search_decoupled)
+from repro.core.storage.index_store import CompressedIndexStore
+from repro.core.storage.vector_store import DecoupledVectorStore, StoreConfig
+from repro.core.storage.layout import (BLOCK_SIZE, ComponentPlan,
+                                       StorageManifest)
+
+from .common import R, csv, world
+
+N_LAT_QUERIES = 8          # I/O-model probe queries per arm
+
+SLOT_SAMPLE = 256          # ef_slots sample size for the planner
 
 
 def spann_like_bytes(w, replication: float = 8.0) -> int:
@@ -18,31 +51,143 @@ def spann_like_bytes(w, replication: float = 8.0) -> int:
     return int(len(w["vecs"]) * v_bytes * replication)
 
 
+def component_samples(w, rng) -> dict:
+    """Planner input: a sample of records per storage component."""
+    graph = w["graph"]
+    n = len(graph.adjacency)
+    sel = rng.choice(n, size=min(n, 1024), replace=False)
+    adjacency = [np.sort(np.asarray(graph.adjacency[int(i)], np.int64))
+                 for i in sel]
+    slots = [ef.encode_slot(np.asarray(a, np.uint64), R, n)
+             for a in adjacency[:SLOT_SAMPLE]]
+    pq_rows = [w["codes"][int(i)] for i in sel]
+    vec_rows = [np.ascontiguousarray(w["vecs"][int(i)]).view(np.uint8)
+                for i in sel]
+    return dict(adjacency=adjacency, ef_slots=slots, pq_codes=pq_rows,
+                vector_chunks=vec_rows)
+
+
+def fixed_manifest(ix_codec: str, vec_codec: str) -> StorageManifest:
+    """A degenerate manifest for a fixed-codec arm, so engine.py prices
+    THAT arm's codecs too (the seal mode "auto" runs the §3.3 two-stage
+    path and is priced at its xor_delta_huffman upper bound)."""
+    vec_codec = "xor_delta_huffman" if vec_codec == "auto" else vec_codec
+    mk = lambda comp, codec: ComponentPlan(
+        component=comp, codec=codec, raw_bytes=0, est_bytes=0,
+        candidates={}, params={})
+    return StorageManifest(components={
+        "adjacency": mk("adjacency", ix_codec),
+        "vector_chunks": mk("vector_chunks", vec_codec)})
+
+
+def build_decoupled(w, *, ix_codec: str, store_cfg: StoreConfig,
+                    manifest=None):
+    """One decoupled arm: vector store + index store under the given codecs
+    -> per-component byte breakdown + manifest-priced modeled latency
+    (engine.py T_DEC comes from each tier's RESOLVED codec, not a flat
+    per-arm constant; fixed arms get a degenerate manifest of their own
+    codecs)."""
+    if manifest is None:
+        manifest = fixed_manifest(ix_codec, store_cfg.resolved_codec)
+    vecs, graph = w["vecs"], w["graph"]
+    vs = DecoupledVectorStore(store_cfg)
+    vs.append(np.arange(len(vecs)), vecs)
+    vs.seal_active()
+    ix = CompressedIndexStore.from_graph(graph.adjacency, graph.medoid, R,
+                                         codec=ix_codec,
+                                         cache_bytes=64 << 10)
+    cfg = EngineConfig(l_size=48, latency_aware=True, compressed=True,
+                       manifest=manifest)
+    lat = [search_decoupled(ix, vs, w["codes"], w["cb"], q, cfg)[1].latency_us
+           for q in w["queries"][:N_LAT_QUERIES]]
+    t_dec_ix, t_dec_vec = manifest_dec_costs(manifest)
+    return dict(
+        vector_chunks=vs.physical_bytes,
+        adjacency=ix.physical_bytes,
+        total=vs.physical_bytes + ix.physical_bytes,
+        metadata=vs.metadata_bytes + ix.sparse_index_bytes,
+        ix_codec=ix_codec, vector_codec=store_cfg.resolved_codec,
+        modeled_latency_us=float(np.mean(lat)),
+        t_dec_index_us=t_dec_ix, t_dec_vector_us=t_dec_vec)
+
+
+def run_kind(kind: str, rng) -> dict:
+    w = world(kind)
+    dim, dtype = w["vecs"].shape[1], w["vecs"].dtype
+    colo = w["colo"].physical_bytes
+
+    base_cfg = StoreConfig(dim=dim, dtype=dtype, segment_capacity=2048)
+    arms = {}
+    arms["fixed_raw"] = build_decoupled(
+        w, ix_codec="raw",
+        store_cfg=StoreConfig(dim=dim, dtype=dtype, segment_capacity=2048,
+                              compress=False))
+    arms["fixed_default"] = build_decoupled(
+        w, ix_codec="elias_fano", store_cfg=base_cfg)
+
+    # The planner: sample every component, select codecs, persist manifest.
+    manifest = codecs.plan_components(component_samples(w, rng),
+                                      universe=len(w["vecs"]),
+                                      itemsize=dtype.itemsize,
+                                      sample_limit=1024)
+    arms["planner"] = build_decoupled(
+        w, ix_codec=manifest.codec_for("adjacency", "elias_fano"),
+        store_cfg=base_cfg.from_manifest(manifest), manifest=manifest)
+
+    spann = spann_like_bytes(w)
+    for arm in arms.values():
+        arm["saving_vs_colocated"] = 1 - arm["total"] / colo
+        arm["saving_vs_spann"] = 1 - arm["total"] / spann
+    return dict(
+        kind=kind, dim=dim, dtype=str(dtype), n=len(w["vecs"]),
+        block_size=BLOCK_SIZE,
+        colocated_bytes=colo, spann_like_bytes=spann,
+        arms=arms,
+        manifest=manifest.to_json())
+
+
 def main(quiet=False):
+    rng = np.random.default_rng(7)
     out = {}
     for kind in ("sift-like", "spacev-like", "prop-like"):
         t0 = time.time()
-        w = world(kind)
-        colo = w["colo"].physical_bytes
-        dvs_total = w["vs"].physical_bytes + w["comp_ix"].physical_bytes
-        raw_vec = w["vecs"].nbytes
-        vec_saving = 1 - w["vs"].physical_bytes / w["vs_raw"].physical_bytes
-        ix_frag = 1 - w["raw_ix"].physical_bytes / (
-            colo - 0)  # decoupling removes co-location fragmentation
-        ix_ef = 1 - w["comp_ix"].physical_bytes / w["raw_ix"].physical_bytes
-        total_saving = 1 - dvs_total / colo
-        spann = spann_like_bytes(w)
+        r = run_kind(kind, rng)
         us = (time.time() - t0) * 1e6
+        out[kind] = r
+        a = r["arms"]
         csv(f"exp2/{kind}", us,
-            f"diskann_mib={colo/2**20:.2f};dvs_mib={dvs_total/2**20:.2f};"
-            f"spann_mib={spann/2**20:.2f};"
-            f"total_saving_vs_diskann={100*total_saving:.1f}%;"
-            f"vector_saving={100*vec_saving:.1f}%;"
-            f"ef_index_saving={100*ix_ef:.1f}%;"
-            f"saving_vs_spann={100*(1-dvs_total/spann):.1f}%;"
-            f"meta_bytes={w['vs'].metadata_bytes + w['comp_ix'].sparse_index_bytes}")
-        out[kind] = dict(total_saving=total_saving, vec_saving=vec_saving,
-                         ef_saving=ix_ef)
+            f"diskann_mib={r['colocated_bytes']/2**20:.2f};"
+            f"dvs_mib={a['fixed_default']['total']/2**20:.2f};"
+            f"planner_mib={a['planner']['total']/2**20:.2f};"
+            f"spann_mib={r['spann_like_bytes']/2**20:.2f};"
+            f"fixed_saving_vs_diskann="
+            f"{100*a['fixed_default']['saving_vs_colocated']:.1f}%;"
+            f"planner_saving_vs_diskann="
+            f"{100*a['planner']['saving_vs_colocated']:.1f}%;"
+            f"planner_ix_codec={a['planner']['ix_codec']};"
+            f"planner_vec_codec={a['planner']['vector_codec']};"
+            f"meta_bytes={a['planner']['metadata']}")
+    savings = [out[k]["arms"]["planner"]["saving_vs_colocated"] for k in out]
+    doc = dict(
+        kinds=out,
+        suite=dict(
+            min_planner_saving=float(np.min(savings)),
+            mean_planner_saving=float(np.mean(savings)),
+            acceptance_planner_saving_ge=0.40,
+            passed=bool(np.min(savings) >= 0.40)),
+        note=("Per-arm 'total' is vector_chunks + adjacency physical block "
+              "bytes; 'metadata' is the in-memory chunk metadata + sparse "
+              "index (the beta budget of section 3.3). The planner arm is "
+              "built from the persisted StorageManifest; its 'candidates' "
+              "tables record every codec estimate per component (the "
+              "planner decision table in docs/STORAGE.md)."))
+    path = os.environ.get("REPRO_BENCH_STORAGE_OUT", "BENCH_storage.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    if not quiet:
+        print(f"# wrote {path} (3 kinds x 3 decoupled arms + baselines; "
+              f"min planner saving "
+              f"{100*doc['suite']['min_planner_saving']:.1f}%)")
     return out
 
 

@@ -7,6 +7,12 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
   bench_breakdown    Exp#6 (Tab 3)  bench_roofline     §Roofline (dry-run)
   bench_kernels      Pallas kernel oracles
   bench_serve_ann    Serving path: QPS vs batch size vs shard count
+
+JSON artifacts (written in-harness, one per experiment family):
+  bench_storage     -> BENCH_storage.json     (planner vs fixed vs colocated)
+  bench_compression -> BENCH_compression.json (codec sizes + decision table)
+  bench_update      -> BENCH_update.json      (merge/write-amp arms)
+  bench_kernels     -> BENCH_kernels.json     (ref vs pallas per op)
 """
 import sys
 import time

@@ -5,5 +5,9 @@
 - :mod:`elias_fano` — monotone integer lists (auxiliary index codec).
 - :mod:`bitpack` — fixed-width bit packing (shared substrate + TPU byte-plane).
 - :mod:`entropy` — Table-1 compressibility characterization.
+- :mod:`registry` — the Codec protocol over all of the above + the
+  compression planner (``plan_components``) that selects a codec per
+  storage component and emits the persisted ``StorageManifest``.
 """
 from . import bitpack, elias_fano, entropy, huffman, xor_delta  # noqa: F401
+from . import registry  # noqa: F401  (imports last: pulls storage.layout)

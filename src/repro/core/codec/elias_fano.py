@@ -42,6 +42,13 @@ def worst_case_bits(n: int, universe: int) -> int:
     return 2 * n + n * int(math.ceil(math.log2(max(2, universe) / n)))
 
 
+def worst_case_record_bytes(n: int, universe: int) -> int:
+    """The §3.4 fixed-entry cache bound in bytes — the ONE definition of
+    the EF entry sizing rule (index store, serving-tier modeled LRUs, and
+    the codec registry all derive from here)."""
+    return (worst_case_bits(n, universe) + 7) // 8
+
+
 @dataclass(frozen=True)
 class EFList:
     """A variable-size Elias-Fano encoded monotone list."""

@@ -106,18 +106,66 @@ class HuffmanTable:
         return cls.from_frequencies(freqs)
 
 
-def encode_records(data: np.ndarray, table: HuffmanTable
+@dataclass
+class PlaneTables:
+    """One canonical table per byte *plane* (byte position mod itemsize).
+
+    Multi-byte elements (fp32/int16 vectors) have radically different
+    per-plane distributions — exponent bytes nearly constant, low mantissa
+    bytes near-uniform (paper Table 1's columnar concentration). A single
+    unified stream pays the entropy of the *mixture*; XOR-delta only aligns
+    each position's mode to zero (a per-position bijection cannot reshape a
+    multi-modal position). P per-plane tables close that gap at P*256 B of
+    segment metadata. Byte j of every record codes with table ``j % P``, so
+    per-record random access is fully preserved."""
+    tables: list                # [P] HuffmanTable
+
+    @property
+    def nplanes(self) -> int:
+        return len(self.tables)
+
+    @property
+    def size_bytes(self) -> int:
+        return NSYM * len(self.tables)
+
+    @classmethod
+    def from_data(cls, data: np.ndarray, nplanes: int) -> "PlaneTables":
+        data = np.asarray(data, dtype=np.uint8)
+        if data.ndim == 1:
+            data = data[None, :]
+        return cls([HuffmanTable.from_data(data[:, j::nplanes])
+                    for j in range(nplanes)])
+
+    def column_luts(self, v: int) -> tuple[np.ndarray, np.ndarray]:
+        """(lengths, codes) per byte column -> [v, 256] each."""
+        plane = np.arange(v) % self.nplanes
+        lens = np.stack([t.lengths for t in self.tables])[plane]
+        codes = np.stack([t.codes for t in self.tables])[plane]
+        return lens, codes
+
+    def table_for(self, j: int) -> HuffmanTable:
+        return self.tables[j % self.nplanes]
+
+
+def encode_records(data: np.ndarray, table: "HuffmanTable | PlaneTables"
                    ) -> tuple[np.ndarray, np.ndarray]:
     """Encode rows of ``data`` [n, V] uint8 -> (payload bytes, byte offsets).
 
     Returns ``payload`` (concatenated byte-aligned records) and ``offsets``
     [n+1] int64 such that record i is ``payload[offsets[i]:offsets[i+1]]``.
-    Bits are MSB-first within each byte.
+    Bits are MSB-first within each byte. With :class:`PlaneTables`, byte
+    column j codes with table ``j % P``.
     """
     data = np.asarray(data, dtype=np.uint8)
     n, v = data.shape
-    lens = table.lengths[data].astype(np.int64)          # [n, V]
-    codes = table.codes[data].astype(np.uint64)          # [n, V]
+    if isinstance(table, PlaneTables):
+        lut_len, lut_code = table.column_luts(v)         # [V, 256]
+        cols = np.arange(v)[None, :]
+        lens = lut_len[cols, data].astype(np.int64)      # [n, V]
+        codes = lut_code[cols, data].astype(np.uint64)
+    else:
+        lens = table.lengths[data].astype(np.int64)      # [n, V]
+        codes = table.codes[data].astype(np.uint64)
     row_bits = lens.sum(axis=1)
     row_bytes = (row_bits + 7) // 8
     offsets = np.zeros(n + 1, dtype=np.int64)
@@ -155,11 +203,12 @@ def decode_records(payload: np.ndarray, offsets: np.ndarray, v: int,
 
 
 def decode_at(payload: np.ndarray, starts: np.ndarray, v: int,
-              table: HuffmanTable) -> np.ndarray:
+              table: "HuffmanTable | PlaneTables") -> np.ndarray:
     """Decode records at absolute byte offsets ``starts`` -> [m, V] uint8.
 
-    Lockstep vectorised decode: V steps, each peeking MAX_LEN bits per row via
-    a 4-byte gather and the canonical LUT.
+    Lockstep vectorised decode: V steps, each peeking MAX_LEN bits per row
+    via a 4-byte gather and the canonical LUT (column j's LUT under
+    :class:`PlaneTables`).
     """
     payload = np.asarray(payload, dtype=np.uint8)
     starts = np.asarray(starts, dtype=np.int64)
@@ -167,15 +216,23 @@ def decode_at(payload: np.ndarray, starts: np.ndarray, v: int,
     out = np.zeros((m, v), dtype=np.uint8)
     buf = np.concatenate([payload, np.zeros(4, dtype=np.uint8)]).astype(np.uint32)
     bitpos = starts * 8
+    planar = isinstance(table, PlaneTables)
     for j in range(v):
+        tj = table.table_for(j) if planar else table
         byte = bitpos >> 3
         off = (bitpos & 7).astype(np.uint32)
         window = (buf[byte] << 24) | (buf[byte + 1] << 16) | (buf[byte + 2] << 8) | buf[byte + 3]
         peek = (window >> (np.uint32(32 - MAX_LEN) - off)) & np.uint32((1 << MAX_LEN) - 1)
-        out[:, j] = table.decode_sym[peek]
-        bitpos = bitpos + table.decode_len[peek]
+        out[:, j] = tj.decode_sym[peek]
+        bitpos = bitpos + tj.decode_len[peek]
     return out
 
 
-def encoded_size_bits(data: np.ndarray, table: HuffmanTable) -> int:
-    return int(table.lengths[np.asarray(data, np.uint8)].sum())
+def encoded_size_bits(data: np.ndarray,
+                      table: "HuffmanTable | PlaneTables") -> int:
+    data = np.asarray(data, np.uint8)
+    if isinstance(table, PlaneTables):
+        mat = data if data.ndim == 2 else data[None, :]
+        lut_len, _ = table.column_luts(mat.shape[1])
+        return int(lut_len[np.arange(mat.shape[1])[None, :], mat].sum())
+    return int(table.lengths[data].sum())

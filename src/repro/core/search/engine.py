@@ -51,6 +51,48 @@ T_PQ = KERNEL_COST_US["ref"]["pq"]
 T_EX = KERNEL_COST_US["ref"]["ex"]
 T_DEC = KERNEL_COST_US["ref"]["dec"]
 
+# Per-codec decode cost (µs/record, ref backend) — the manifest-resolved
+# replacement for the single hard-coded T_DEC: once the compression planner
+# has picked a codec per component (StorageManifest), the latency model
+# prices each tier's decompressions with ITS codec, scaled by the kernel
+# backend's dec ratio (pallas decodes run on the VPU an order of magnitude
+# faster, pallas-interpret prices as ref — see KERNEL_COST_US).
+CODEC_DEC_US = {
+    "raw": 0.0,                  # memcpy only — no decode on the critical path
+    "bitpack": 0.05,             # fixed-width shifts/masks
+    "elias_fano": 0.20,          # select-in-bitmap + low-bit unpack
+    "huffman": 0.20,             # table-driven byte decode (paper Table 3)
+    "xor_delta_huffman": 0.25,   # huffman + the XOR un-delta pass
+    "plane_huffman": 0.20,       # same LUT decode, table keyed by plane
+}
+
+
+def t_dec_for(codec: str, backend: str = "ref") -> float:
+    """µs to decode one record of a component stored under ``codec``,
+    priced at the given kernel backend. Unknown codec names raise — a typo
+    silently priced as raw would make the latency model lie."""
+    if codec not in CODEC_DEC_US:
+        raise ValueError(f"unknown codec {codec!r} in the cost model; "
+                         f"expected {tuple(CODEC_DEC_US)}")
+    *_, dec = compute_costs(dec_backend=backend)
+    scale = dec / KERNEL_COST_US["ref"]["dec"]
+    return CODEC_DEC_US[codec] if scale == 1.0 \
+        else CODEC_DEC_US[codec] * scale
+
+
+def manifest_dec_costs(manifest, backend: str = "ref"
+                       ) -> tuple[float, float]:
+    """(t_dec_index, t_dec_vector) in µs from a manifest's resolved codecs
+    (adjacency + vector_chunks components; a missing manifest prices both
+    at the legacy T_DEC; absent components price at the layer defaults:
+    elias_fano index records, xor_delta_huffman vector records)."""
+    if manifest is None:
+        *_, dec = compute_costs(dec_backend=backend)
+        return dec, dec
+    return (t_dec_for(manifest.codec_for("adjacency", "elias_fano"), backend),
+            t_dec_for(manifest.codec_for("vector_chunks",
+                                         "xor_delta_huffman"), backend))
+
 
 def compute_costs(pq_backend: str = "ref", ex_backend: str | None = None,
                   dec_backend: str | None = None) -> tuple[float, float, float]:
@@ -107,7 +149,9 @@ class QueryStats:
     cache_hits: int = 0
     pq_ops: int = 0
     exact_ops: int = 0
-    decompressions: int = 0
+    decompressions: int = 0         # graph_decs + vector_decs
+    graph_decs: int = 0             # adjacency-record decodes (index tier)
+    vector_decs: int = 0            # vector-record decodes (data tier)
     traversal_rounds: int = 0
     io_rounds: int = 0              # rounds with >=1 uncached block read
     rerank_batches: int = 0
@@ -125,6 +169,9 @@ class EngineConfig:
     latency_aware: bool = False     # §3.4 differentiated I/O + prefetch
     compressed: bool = False        # index/vector decompression accounting
     kernel_backend: str = "ref"     # prices T_PQ/T_EX/T_DEC (KERNEL_COST_US)
+    manifest: object = None         # StorageManifest: price each tier's
+                                    # T_DEC from its resolved codec
+                                    # (CODEC_DEC_US) instead of one constant
 
 
 class _CandidateList:
@@ -189,6 +236,7 @@ def _traverse(store_get_neighbors, pq_codes: np.ndarray, lut: np.ndarray,
                 nbrs = store_get_neighbors(vid)
                 if cfg.compressed:
                     st.decompressions += 1
+                    st.graph_decs += 1
             new = [v for v in nbrs if v not in cl.seen]
             if new:
                 nd = adc_lookup_np(pq_codes[np.asarray(new, np.int64)], lut)
@@ -228,6 +276,7 @@ def search_decoupled(index_store, vector_store, pq_codes: np.ndarray,
         st.exact_ops += len(ids)
         if cfg.compressed:
             st.decompressions += len(ids)
+            st.vector_decs += len(ids)
         return ((vecs - query[None].astype(np.float32)) ** 2).sum(-1)
 
     if cfg.latency_aware:
@@ -295,9 +344,17 @@ def search_colocated(store, pq_codes: np.ndarray, cb: PQCodebook,
 
 
 def _cpu_us(st: QueryStats, cfg: EngineConfig | None = None) -> float:
-    t_pq, t_ex, t_dec = compute_costs(cfg.kernel_backend if cfg else "ref")
-    return (st.pq_ops * t_pq + st.exact_ops * t_ex
-            + st.decompressions * t_dec)
+    backend = cfg.kernel_backend if cfg else "ref"
+    t_pq, t_ex, t_dec = compute_costs(backend)
+    if cfg is not None and cfg.manifest is not None:
+        # Component-aware pricing: each tier's decodes cost what ITS
+        # manifest-resolved codec costs (raw = free, EF/Huffman = T_DEC
+        # scale) instead of one per-arm constant.
+        t_dec_ix, t_dec_vec = manifest_dec_costs(cfg.manifest, backend)
+        dec_us = st.graph_decs * t_dec_ix + st.vector_decs * t_dec_vec
+    else:
+        dec_us = st.decompressions * t_dec
+    return st.pq_ops * t_pq + st.exact_ops * t_ex + dec_us
 
 
 def _latency_colocated(st: QueryStats, cfg: EngineConfig) -> float:

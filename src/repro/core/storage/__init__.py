@@ -1,4 +1,5 @@
-from . import colocated, index_store, layout, vector_store  # noqa: F401
-from .index_store import CompressedIndexStore, LRUCache, RawIndexStore  # noqa: F401
-from .layout import BLOCK_SIZE  # noqa: F401
-from .vector_store import DecoupledVectorStore, IOStats, StoreConfig  # noqa: F401
+from . import blockstore, colocated, index_store, layout, vector_store  # noqa: F401
+from .blockstore import BlockStore, IOStats, LRUCache, SharedBudget  # noqa: F401
+from .index_store import CompressedIndexStore, RawIndexStore  # noqa: F401
+from .layout import BLOCK_SIZE, ComponentPlan, StorageManifest  # noqa: F401
+from .vector_store import DecoupledVectorStore, StoreConfig  # noqa: F401

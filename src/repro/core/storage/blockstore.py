@@ -1,0 +1,270 @@
+"""The shared block-storage engine under all three stores (paper §3.3–3.4).
+
+One 4 KiB-block I/O layer — ONE :class:`IOStats` definition, ONE
+:class:`LRUCache` definition — with per-component partitions, so the
+co-located §2.2 baseline, the decoupled vector tier, and the compressed
+auxiliary-index tier are all measured on the same ruler (the block), and a
+cache budget can be split per component or pooled (`shared_budget` mode,
+globally-LRU eviction across partitions).
+
+Component accounting is hierarchical: every component's :class:`IOStats`
+chains to the engine total, so ``store.io`` keeps its historical per-store
+semantics while ``BlockStore.stats()`` reports the whole engine — the
+unification *Optimizing SSD-Resident Graph Indexing* argues the cache and
+I/O scheduler need in order to exploit per-component entropy differences.
+
+Canonical component names (shared with ``core/codec/registry.py``):
+``adjacency`` (EF adjacency records), ``ef_slots`` (device slot streams),
+``pq_codes``, ``vector_chunks`` (compressed vector payload), ``colocated``
+(the §2.2 baseline's bundled records).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from .layout import BLOCK_SIZE
+
+__all__ = ["BLOCK_SIZE", "IOStats", "LRUCache", "SharedBudget", "BlockStore"]
+
+
+@dataclass
+class IOStats:
+    """Block-layer read/write counters. ``parent`` chains a component's
+    stats into its engine total (reads propagate up, resets stay local)."""
+    reads: int = 0
+    read_bytes: int = 0
+    writes: int = 0
+    write_bytes: int = 0
+    parent: "IOStats | None" = None
+
+    def read(self, nbytes: int, n: int = 1) -> None:
+        self.reads += n
+        self.read_bytes += nbytes
+        if self.parent is not None:
+            self.parent.read(nbytes, n)
+
+    def write(self, nbytes: int, n: int = 1) -> None:
+        self.writes += n
+        self.write_bytes += nbytes
+        if self.parent is not None:
+            self.parent.write(nbytes, n)
+
+    def snapshot(self) -> dict:
+        return dict(reads=self.reads, read_bytes=self.read_bytes,
+                    writes=self.writes, write_bytes=self.write_bytes)
+
+
+class SharedBudget:
+    """One byte budget pooled across several LRU partitions (§3.4 shared
+    mode): eviction removes the *globally* least-recently-used entry, so a
+    hot component can grow into a cold component's share."""
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity_bytes = capacity_bytes
+        self._members: list["LRUCache"] = []
+        self._clock = 0
+
+    def tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def add(self, cache: "LRUCache") -> None:
+        if cache not in self._members:
+            self._members.append(cache)
+
+    def release(self, cache: "LRUCache") -> None:
+        """Retire a partition (e.g. an old snapshot's clone) from the pool."""
+        if cache in self._members:
+            self._members.remove(cache)
+
+    @property
+    def used_bytes(self) -> int:
+        return sum(c.memory_bytes for c in self._members)
+
+    @property
+    def hits(self) -> int:
+        return sum(c.hits for c in self._members)
+
+    @property
+    def misses(self) -> int:
+        return sum(c.misses for c in self._members)
+
+    def rebalance(self) -> None:
+        while self.used_bytes > self.capacity_bytes:
+            victims = [c for c in self._members if c._d]
+            if not victims:
+                break
+            # Oldest entry of each partition is its OrderedDict head; the
+            # global victim is the one with the smallest recency tick.
+            victim = min(victims, key=lambda c: c._tick[next(iter(c._d))])
+            victim._evict_oldest()
+
+
+class LRUCache:
+    """Fixed-entry-size LRU (paper §3.4): capacity in entries, every entry
+    reserves ``entry_bytes`` regardless of the stored value's actual size.
+    Attach a :class:`SharedBudget` to pool the byte budget across several
+    partitions (the per-entry recency tick enables global LRU eviction)."""
+
+    def __init__(self, capacity: int, entry_bytes: int,
+                 budget: SharedBudget | None = None):
+        self.capacity = capacity
+        self.entry_bytes = entry_bytes
+        self._d: OrderedDict[int, object] = OrderedDict()
+        self._tick: dict[int, int] = {}
+        self.budget = budget
+        if budget is not None:
+            budget.add(self)
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: int):
+        if key in self._d:
+            self._d.move_to_end(key)
+            if self.budget is not None:
+                self._tick[key] = self.budget.tick()
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: int, value) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        if self.budget is not None:
+            self._tick[key] = self.budget.tick()
+        while len(self._d) > self.capacity:
+            self._evict_oldest()
+        if self.budget is not None:
+            self.budget.rebalance()
+
+    def _evict_oldest(self) -> None:
+        key, _ = self._d.popitem(last=False)
+        self._tick.pop(key, None)
+
+    def invalidate(self, keys) -> int:
+        """Drop specific entries (incremental merge: only the lists whose
+        contents changed are evicted; clean entries stay warm)."""
+        n = 0
+        for k in keys:
+            if self._d.pop(int(k), None) is not None:
+                self._tick.pop(int(k), None)
+                n += 1
+        return n
+
+    def clone(self) -> "LRUCache":
+        """Copy for the next snapshot's store: same capacity/entry size,
+        same recency order, independent mutation + stats. Under a shared
+        budget the clone joins the same pool (retire the original with
+        ``budget.release`` once its snapshot is unpinned)."""
+        c = LRUCache(self.capacity, self.entry_bytes, budget=self.budget)
+        c._d = OrderedDict(self._d)
+        c._tick = dict(self._tick)
+        return c
+
+    @property
+    def memory_bytes(self) -> int:
+        return len(self._d) * self.entry_bytes
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = 0
+
+
+class BlockStore:
+    """The one block engine: per-component I/O accounting (chained to an
+    engine total) + a partitioned LRU pool.
+
+    Stores register a component once and then account every 4 KiB block
+    read/write through it — either via the returned per-component
+    :class:`IOStats` (historical ``store.io`` attribute) or the
+    ``read``/``write`` helpers here. ``shared_budget=True`` pools
+    ``cache_bytes`` across all partitions with global-LRU eviction;
+    otherwise each partition gets its own ``cache_bytes`` slice.
+    """
+
+    def __init__(self, cache_bytes: int = 0, shared_budget: bool = False):
+        self.io = IOStats()
+        self.cache_bytes = cache_bytes
+        self.budget = SharedBudget(cache_bytes) if shared_budget else None
+        self.components: dict[str, IOStats] = {}
+        self.partitions: dict[str, LRUCache] = {}
+
+    # ----------------------------------------------------------- components
+    def component_io(self, name: str) -> IOStats:
+        """The (persistent) per-component stats, chained to the total."""
+        if name not in self.components:
+            self.components[name] = IOStats(parent=self.io)
+        return self.components[name]
+
+    def fresh_io(self, name: str) -> IOStats:
+        """A FRESH per-component stats object (still chained to the total).
+        The §3.5 merge path uses this so each published store carries only
+        its own merge's writes while the engine total keeps accumulating."""
+        self.components[name] = IOStats(parent=self.io)
+        return self.components[name]
+
+    def adopt(self, name: str, io: IOStats) -> IOStats:
+        """Chain an existing store's stats into this engine (re-parents the
+        child; its past counters stay local, future traffic aggregates)."""
+        io.parent = self.io
+        self.components[name] = io
+        return io
+
+    def register_cache(self, name: str, entry_bytes: int,
+                       cache_bytes: int | None = None) -> LRUCache:
+        """Create a component's cache partition. Always FRESH: a rebuilt
+        store must never share a live partition with the store an in-flight
+        snapshot still reads (clone() is the warm-handover path). The
+        previous partition, if any, leaves the shared pool. Capacity is
+        bounded by the pooled budget in shared mode, else by this
+        partition's own ``cache_bytes`` slice."""
+        budget_bytes = self.cache_bytes if cache_bytes is None else cache_bytes
+        cap = budget_bytes // max(1, entry_bytes)
+        existing = self.partitions.get(name)
+        if existing is not None and self.budget is not None:
+            self.budget.release(existing)
+        c = LRUCache(cap, entry_bytes, budget=self.budget)
+        self.partitions[name] = c
+        return c
+
+    def replace_cache(self, name: str, cache: LRUCache) -> LRUCache:
+        """Install an externally-built partition (e.g. the ``clone()`` an
+        incremental merge hands the published store) as the component's
+        current cache; the previous partition leaves the shared pool."""
+        old = self.partitions.get(name)
+        if old is not None and old is not cache and self.budget is not None:
+            self.budget.release(old)
+        self.partitions[name] = cache
+        return cache
+
+    # ------------------------------------------------------------ accounting
+    def read(self, component: str, nbytes: int = BLOCK_SIZE, n: int = 1) -> None:
+        self.component_io(component).read(nbytes, n)
+
+    def write(self, component: str, nbytes: int, n: int = 1) -> None:
+        self.component_io(component).write(nbytes, n)
+
+    # --------------------------------------------------------------- metrics
+    def cache_stats(self) -> dict:
+        """Totals + per-partition hit/miss/bytes. In shared-budget mode the
+        invariant ``total hits+misses == sum(partition hits+misses)`` holds
+        by construction — the partitions ARE the pool's members."""
+        per = {name: dict(hits=c.hits, misses=c.misses,
+                          memory_bytes=c.memory_bytes)
+               for name, c in self.partitions.items()}
+        return dict(
+            hits=sum(p["hits"] for p in per.values()),
+            misses=sum(p["misses"] for p in per.values()),
+            memory_bytes=sum(p["memory_bytes"] for p in per.values()),
+            shared_budget=self.budget is not None,
+            budget_bytes=self.cache_bytes,
+            partitions=per)
+
+    def stats(self) -> dict:
+        return dict(total=self.io.snapshot(),
+                    components={n: s.snapshot()
+                                for n, s in self.components.items()},
+                    cache=self.cache_stats())

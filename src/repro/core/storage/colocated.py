@@ -5,16 +5,24 @@ Each vertex record bundles the full-precision vector with its neighbor list
 records per 4 KiB block is ``floor(4096 / record_size)`` — any remainder is
 the internal fragmentation the paper measures (Limitation #1). A single read
 fetches vector + adjacency together (the search-friendly, storage-inefficient
-layout DecoupleVS replaces)."""
+layout DecoupleVS replaces).
+
+Accounting runs through the shared :class:`BlockStore` engine at **block
+granularity** — the cache holds whole 4 KiB blocks (every record in a cached
+block hits), and ``rewrite_all`` counts one write per block — so this §2.2
+baseline is measured on exactly the same ruler as the decoupled arms in
+``bench_update.py``/``bench_storage.py``."""
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import numpy as np
 
+from .blockstore import BlockStore, IOStats, LRUCache
 from .layout import BLOCK_SIZE
-from .index_store import LRUCache
-from .vector_store import IOStats
+
+#: BlockStore component this baseline accounts under (see blockstore.py).
+COMPONENT = "colocated"
 
 
 @dataclass
@@ -24,17 +32,27 @@ class ColocatedStore:
     r: int
     medoid: int
     io: IOStats = None
-    cache: LRUCache = None
+    cache: LRUCache = None     # keyed by BLOCK index (block granularity)
+    blocks: BlockStore = None
 
     @classmethod
     def build(cls, vectors: np.ndarray, adjacency: list, medoid: int, r: int,
-              cache_bytes: int = 0) -> "ColocatedStore":
-        v_bytes = vectors.dtype.itemsize * vectors.shape[1]
-        entry_bytes = v_bytes + 4 * (r + 1)
+              cache_bytes: int = 0,
+              block_store: BlockStore = None) -> "ColocatedStore":
+        bs = block_store or BlockStore()
+        # One cache entry = one page group (co-located records are bundled
+        # per page, so the cacheable unit is the page — §2.2 semantics; a
+        # record wider than a page reserves all the blocks it spans, so
+        # the byte budget stays honest for wide-vector corpora).
+        record_bytes = (vectors.dtype.itemsize * vectors.shape[1]
+                        + 4 * (r + 1))
+        entry_bytes = max(1, -(-record_bytes // BLOCK_SIZE)) * BLOCK_SIZE
         return cls(vectors=vectors,
                    neighbors=[np.asarray(a, np.int64) for a in adjacency],
-                   r=r, medoid=medoid, io=IOStats(),
-                   cache=LRUCache(cache_bytes // max(1, entry_bytes), entry_bytes))
+                   r=r, medoid=medoid, io=bs.fresh_io(COMPONENT),
+                   cache=bs.register_cache(COMPONENT, entry_bytes,
+                                           cache_bytes),
+                   blocks=bs)
 
     @property
     def record_bytes(self) -> int:
@@ -46,23 +64,38 @@ class ColocatedStore:
         return max(1, BLOCK_SIZE // self.record_bytes)
 
     @property
-    def physical_bytes(self) -> int:
+    def blocks_per_record(self) -> int:
+        return max(1, -(-self.record_bytes // BLOCK_SIZE))
+
+    @property
+    def n_blocks(self) -> int:
         if self.record_bytes > BLOCK_SIZE:
-            blocks_per_rec = -(-self.record_bytes // BLOCK_SIZE)
-            return len(self.neighbors) * blocks_per_rec * BLOCK_SIZE
-        return -(-len(self.neighbors) // self.records_per_block) * BLOCK_SIZE
+            return len(self.neighbors) * self.blocks_per_record
+        return -(-len(self.neighbors) // self.records_per_block)
+
+    @property
+    def physical_bytes(self) -> int:
+        return self.n_blocks * BLOCK_SIZE
+
+    def block_of(self, vid: int) -> int:
+        """First block holding ``vid``'s record (offset arithmetic — the
+        co-located layout needs no sparse index)."""
+        if self.record_bytes > BLOCK_SIZE:
+            return int(vid) * self.blocks_per_record
+        return int(vid) // self.records_per_block
 
     def get_record(self, vid: int) -> tuple[np.ndarray, np.ndarray]:
-        """One I/O returns (vector, neighbor list) — co-located semantics."""
-        cached = self.cache.get(vid)
-        if cached is not None:
-            return cached
-        nblocks = max(1, -(-self.record_bytes // BLOCK_SIZE))
-        self.io.read(nblocks * BLOCK_SIZE, n=nblocks)
-        out = (self.vectors[int(vid)], self.neighbors[int(vid)])
-        self.cache.put(int(vid), out)
-        return out
+        """One I/O returns (vector, neighbor list) — co-located semantics.
+        The block is cached, so neighbors packed into the same page hit."""
+        bid = self.block_of(int(vid))
+        if self.cache.get(bid) is None:
+            nblocks = self.blocks_per_record
+            self.io.read(nblocks * BLOCK_SIZE, n=nblocks)
+            self.cache.put(bid, True)
+        return (self.vectors[int(vid)], self.neighbors[int(vid)])
 
-    def rewrite_all(self) -> None:
-        """Full index rewrite (what FreshDiskANN merges pay on this layout)."""
-        self.io.write(self.physical_bytes)
+    def rewrite_all(self) -> IOStats:
+        """Full index rewrite (what FreshDiskANN merges pay on this layout),
+        block-granular: every page is written once."""
+        self.io.write(self.physical_bytes, n=self.n_blocks)
+        return self.io

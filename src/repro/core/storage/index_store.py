@@ -10,66 +10,35 @@ R=128, N=1e9 — §3.4).
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
 
 from ..codec import elias_fano as ef
+from ..codec import registry as codecs
+from .blockstore import BlockStore, IOStats, LRUCache  # noqa: F401  (one
+                                              # definition, in blockstore.py;
+                                              # re-exported for the
+                                              # historical import path)
 from .layout import (BLOCK_SIZE, block_bytes_needed, pack_block_image,
                      pack_blocks)
-from .vector_store import IOStats
+
+#: BlockStore component this tier accounts under (see blockstore.py).
+COMPONENT = "adjacency"
 
 
-class LRUCache:
-    """Fixed-entry-size LRU (paper §3.4): capacity in entries, every entry
-    reserves ``entry_bytes`` regardless of the stored list's actual size."""
-
-    def __init__(self, capacity: int, entry_bytes: int):
-        self.capacity = capacity
-        self.entry_bytes = entry_bytes
-        self._d: OrderedDict[int, object] = OrderedDict()
-        self.hits = 0
-        self.misses = 0
-
-    def get(self, key: int):
-        if key in self._d:
-            self._d.move_to_end(key)
-            self.hits += 1
-            return self._d[key]
-        self.misses += 1
-        return None
-
-    def put(self, key: int, value) -> None:
-        if self.capacity <= 0:
-            return
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
-
-    def invalidate(self, keys) -> int:
-        """Drop specific entries (incremental merge: only the lists whose
-        contents changed are evicted; clean entries stay warm)."""
-        n = 0
-        for k in keys:
-            if self._d.pop(int(k), None) is not None:
-                n += 1
-        return n
-
-    def clone(self) -> "LRUCache":
-        """Copy for the next snapshot's store: same capacity/entry size,
-        same recency order, independent mutation + stats."""
-        c = LRUCache(self.capacity, self.entry_bytes)
-        c._d = OrderedDict(self._d)
-        return c
-
-    @property
-    def memory_bytes(self) -> int:
-        return len(self._d) * self.entry_bytes
-
-    def reset_stats(self) -> None:
-        self.hits = self.misses = 0
+def _record_bound(codec: str, r: int, universe: int) -> int:
+    """Worst-case encoded bytes of one R-list under ``codec`` — the §3.4
+    fixed-entry LRU sizing, dispatched to the codec's own bound so the
+    sizing rule lives in ONE place per codec (a codec without a
+    ``record_bound`` is not an adjacency candidate and raises loudly
+    rather than mis-sizing the cache)."""
+    cdc = codecs.get(codec)
+    bound = getattr(cdc, "record_bound", None)
+    if bound is None:
+        raise ValueError(f"codec {codec!r} declares no adjacency record "
+                         f"bound (not an index-store codec)")
+    return bound(r, universe)
 
 
 @dataclass
@@ -86,12 +55,17 @@ class RewriteReport:
 
 @dataclass
 class CompressedIndexStore:
-    """EF-compressed adjacency lists in 4 KiB blocks + sparse index."""
+    """Codec-compressed adjacency lists in 4 KiB blocks + sparse index.
+
+    The record codec is a registry name (``elias_fano`` default — the §3.2
+    choice; the planner may select ``bitpack``/``raw`` when a dataset's id
+    streams say so). I/O + cache come from a :class:`BlockStore` component
+    (private engine unless one is shared in)."""
     data: np.ndarray             # physical block image (uint8)
     n_blocks: int
     sparse_index: np.ndarray     # [n_blocks] boundary first-id (int64)
     rec_block: np.ndarray        # [n] block per vertex
-    rec_start: np.ndarray        # [n] absolute byte offset of the EF record
+    rec_start: np.ndarray        # [n] absolute byte offset of the record
     rec_len: np.ndarray          # [n] record byte length
     universe: int
     r: int
@@ -99,25 +73,33 @@ class CompressedIndexStore:
     io: IOStats = None
     cache: LRUCache = None
     fill_factor: float = 1.0     # build-time block fill cap (rewrite headroom)
+    codec: str = "elias_fano"    # adjacency record codec (registry name)
+    blocks: BlockStore = None    # owning engine (None for direct construction)
 
     @classmethod
     def from_graph(cls, adjacency: list, medoid: int, r: int,
                    universe: int | None = None,
                    cache_bytes: int = 0,
-                   fill_factor: float = 1.0) -> "CompressedIndexStore":
+                   fill_factor: float = 1.0,
+                   codec: str = "elias_fano",
+                   block_store: BlockStore = None) -> "CompressedIndexStore":
         n = len(adjacency)
         universe = universe or n
-        records = [ef.encode_record(np.sort(np.asarray(adj, np.uint64)), universe)
-                   for adj in adjacency]
+        cdc = codecs.get(codec)
+        records = [cdc.encode(np.sort(np.asarray(adj, np.uint64)),
+                              universe=universe) for adj in adjacency]
         pk = pack_blocks(np.arange(n), records, implicit_ids=True,
                          fill_factor=fill_factor)
-        entry_bytes = (ef.worst_case_bits(r, universe) + 7) // 8
+        bs = block_store or BlockStore()
+        entry_bytes = _record_bound(codec, r, universe)
         return cls(data=pk.data, n_blocks=pk.n_blocks,
                    sparse_index=pk.block_first_id, rec_block=pk.rec_block,
                    rec_start=pk.rec_start, rec_len=pk.rec_len,
-                   universe=universe, r=r, medoid=medoid, io=IOStats(),
-                   cache=LRUCache(cache_bytes // max(1, entry_bytes), entry_bytes),
-                   fill_factor=fill_factor)
+                   universe=universe, r=r, medoid=medoid,
+                   io=bs.fresh_io(COMPONENT),
+                   cache=bs.register_cache(COMPONENT, entry_bytes,
+                                           cache_bytes),
+                   fill_factor=fill_factor, codec=codec, blocks=bs)
 
     # ------------------------------------------------------ incremental merge
     def rewrite_blocks(self, adjacency: list, dirty_ids,
@@ -150,12 +132,13 @@ class CompressedIndexStore:
         dirty_old = dirty[(dirty >= 0) & (dirty < n_old)]
         # Re-encode every dirty list under the store's FIXED universe; a
         # neighbor id beyond it cannot be represented -> full rebuild.
+        cdc = codecs.get(self.codec)
         recs: dict[int, np.ndarray] = {}
         for vid in np.concatenate([dirty_old, appended]):
             adj = np.sort(np.asarray(adjacency[int(vid)], np.uint64))
             if len(adj) and int(adj[-1]) >= self.universe:
                 return None
-            recs[int(vid)] = ef.encode_record(adj, self.universe)
+            recs[int(vid)] = cdc.encode(adj, universe=self.universe)
 
         data = self.data.copy()
         rec_block = np.concatenate([self.rec_block,
@@ -205,27 +188,38 @@ class CompressedIndexStore:
             n_blocks += pk.n_blocks
         cache = self.cache.clone() if self.cache is not None else None
         invalidated = cache.invalidate(dirty_old) if cache is not None else 0
+        if cache is not None and self.blocks is not None:
+            # The clone is the component's LIVE partition now: metrics and
+            # the shared budget track it; the pre-merge store's partition
+            # leaves the pool (pinned old snapshots still read it, but a
+            # dead snapshot's cache must not evict live entries).
+            self.blocks.replace_cache(COMPONENT, cache)
         report = RewriteReport(
             blocks_rewritten=len(touched),
             blocks_appended=n_blocks - self.n_blocks,
             total_blocks=n_blocks,
             write_bytes=(len(touched) + n_blocks - self.n_blocks) * BLOCK_SIZE,
             dirty_records=len(recs), cache_invalidated=invalidated)
-        io = IOStats()
+        # Merge write I/O lands on the shared engine (fresh per-component
+        # stats for the published store, totals accumulate in the engine).
+        io = self.blocks.fresh_io(COMPONENT) if self.blocks is not None \
+            else IOStats()
         io.write(report.write_bytes, n=len(touched) + report.blocks_appended)
         store = CompressedIndexStore(
             data=data, n_blocks=n_blocks, sparse_index=sparse_index,
             rec_block=rec_block, rec_start=rec_start, rec_len=rec_len,
             universe=self.universe, r=self.r,
             medoid=self.medoid if medoid is None else medoid,
-            io=io, cache=cache, fill_factor=self.fill_factor)
+            io=io, cache=cache, fill_factor=self.fill_factor,
+            codec=self.codec, blocks=self.blocks)
         return store, report
 
     # ------------------------------------------------------------- reads
     def _decode_record(self, vid: int) -> np.ndarray:
         s = int(self.rec_start[vid])
         rec = self.data[s:s + int(self.rec_len[vid])]
-        return ef.decode_record(rec, self.universe).astype(np.int64)
+        return codecs.get(self.codec).decode(
+            rec, universe=self.universe).astype(np.int64)
 
     def get_neighbors(self, vid: int) -> np.ndarray:
         cached = self.cache.get(vid)
@@ -260,14 +254,19 @@ class RawIndexStore:
     medoid: int
     io: IOStats = None
     cache: LRUCache = None
+    blocks: BlockStore = None
 
     @classmethod
     def from_graph(cls, adjacency: list, medoid: int, r: int,
-                   cache_bytes: int = 0) -> "RawIndexStore":
+                   cache_bytes: int = 0,
+                   block_store: BlockStore = None) -> "RawIndexStore":
         entry_bytes = 4 * (r + 1)
+        bs = block_store or BlockStore()
         return cls(neighbors=[np.asarray(a, np.int64) for a in adjacency],
-                   r=r, medoid=medoid, io=IOStats(),
-                   cache=LRUCache(cache_bytes // max(1, entry_bytes), entry_bytes))
+                   r=r, medoid=medoid, io=bs.fresh_io(COMPONENT),
+                   cache=bs.register_cache(COMPONENT, entry_bytes,
+                                           cache_bytes),
+                   blocks=bs)
 
     def get_neighbors(self, vid: int) -> np.ndarray:
         cached = self.cache.get(vid)

@@ -166,3 +166,94 @@ def locate_block(block_first_id: np.ndarray, vector_id: int) -> int:
     """Sparse-index lookup: boundary ids -> block index (§3.3)."""
     b = int(np.searchsorted(block_first_id, vector_id, side="right")) - 1
     return max(b, 0)
+
+
+# ---------------------------------------------------------------------------
+# Storage manifest (persisted output of the §3.2 compression planner)
+# ---------------------------------------------------------------------------
+# The planner (core/codec/registry.plan_components) samples each storage
+# component — adjacency ids, EF slot streams, PQ codes, vector chunks —
+# estimates every applicable codec, and persists the winners here. Stores
+# build from the manifest; the search engine prices T_DEC from the resolved
+# codec names instead of one hard-coded per-arm constant.
+
+MANIFEST_VERSION = 1
+
+
+@dataclass(frozen=True)
+class ComponentPlan:
+    """One component's resolved codec choice + the evidence behind it."""
+    component: str
+    codec: str                    # winning codec name (codec registry key)
+    raw_bytes: int                # sample bytes before encoding
+    est_bytes: int                # winning codec's estimated encoded bytes
+    candidates: dict              # codec name -> estimated bytes (all tried)
+    params: dict                  # codec context (e.g. universe, dtype)
+
+    @property
+    def ratio(self) -> float:
+        return self.est_bytes / self.raw_bytes if self.raw_bytes else 1.0
+
+    def to_json(self) -> dict:
+        return dict(component=self.component, codec=self.codec,
+                    raw_bytes=int(self.raw_bytes),
+                    est_bytes=int(self.est_bytes),
+                    candidates={k: int(v) for k, v in self.candidates.items()},
+                    params=dict(self.params))
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ComponentPlan":
+        return cls(component=d["component"], codec=d["codec"],
+                   raw_bytes=int(d["raw_bytes"]), est_bytes=int(d["est_bytes"]),
+                   candidates=dict(d.get("candidates", {})),
+                   params=dict(d.get("params", {})))
+
+
+@dataclass(frozen=True)
+class StorageManifest:
+    """Per-component codec selection, persisted alongside the stores.
+
+    The single source of truth that makes the three stores component-aware:
+    ``codec_for()`` answers both build time (which codec encodes component
+    X) and model time (what does decoding component X cost, see
+    ``engine.CODEC_DEC_US``)."""
+    components: dict            # component name -> ComponentPlan
+    block_size: int = BLOCK_SIZE
+    version: int = MANIFEST_VERSION
+
+    def codec_for(self, component: str, default: str = "raw") -> str:
+        plan = self.components.get(component)
+        return plan.codec if plan is not None else default
+
+    def params_for(self, component: str) -> dict:
+        plan = self.components.get(component)
+        return dict(plan.params) if plan is not None else {}
+
+    @property
+    def total_ratio(self) -> float:
+        raw = sum(p.raw_bytes for p in self.components.values())
+        est = sum(p.est_bytes for p in self.components.values())
+        return est / raw if raw else 1.0
+
+    def to_json(self) -> dict:
+        return dict(version=self.version, block_size=self.block_size,
+                    components={k: p.to_json()
+                                for k, p in self.components.items()})
+
+    @classmethod
+    def from_json(cls, d: dict) -> "StorageManifest":
+        return cls(components={k: ComponentPlan.from_json(p)
+                               for k, p in d.get("components", {}).items()},
+                   block_size=int(d.get("block_size", BLOCK_SIZE)),
+                   version=int(d.get("version", MANIFEST_VERSION)))
+
+    def save(self, path) -> None:
+        import json
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+
+    @classmethod
+    def load(cls, path) -> "StorageManifest":
+        import json
+        with open(path) as f:
+            return cls.from_json(json.load(f))

@@ -19,33 +19,24 @@ Exp#2/5/6/7 benchmarks (hardware-independent I/O units).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from ..codec import huffman, xor_delta
+from .blockstore import BlockStore, IOStats  # noqa: F401  (one definition,
+                                             # in blockstore.py; re-exported
+                                             # for the historical import path)
 from .layout import (BLOCK_SIZE, PackedBlocks, beta_for_chunk,
                      chunk_metadata_bytes, chunk_size_for_beta, pack_blocks)
 
+#: BlockStore component this tier accounts under (see blockstore.py).
+COMPONENT = "vector_chunks"
 
-@dataclass
-class IOStats:
-    reads: int = 0
-    read_bytes: int = 0
-    writes: int = 0
-    write_bytes: int = 0
-
-    def read(self, nbytes: int, n: int = 1) -> None:
-        self.reads += n
-        self.read_bytes += nbytes
-
-    def write(self, nbytes: int, n: int = 1) -> None:
-        self.writes += n
-        self.write_bytes += nbytes
-
-    def snapshot(self) -> dict:
-        return dict(reads=self.reads, read_bytes=self.read_bytes,
-                    writes=self.writes, write_bytes=self.write_bytes)
+#: Manifest codec name -> StoreConfig.vector_codec seal mode.
+_CODEC_MODES = {"raw": "raw", "huffman": "huffman",
+                "xor_delta_huffman": "xor_delta_huffman",
+                "plane_huffman": "plane_huffman"}
 
 
 @dataclass
@@ -66,7 +57,7 @@ class SealedSegment:
     ids: np.ndarray              # [m] sorted int64
     packed: PackedBlocks         # physical block image
     chunks: list[ChunkMeta]
-    huff: huffman.HuffmanTable | None   # None -> stored uncompressed
+    huff: object | None          # HuffmanTable | PlaneTables; None -> raw
     v_bytes: int
     dtype: np.dtype
     dim: int
@@ -181,6 +172,11 @@ class StoreConfig:
     chunk_bytes: int = 4 << 20          # C (4 MiB paper default)
     beta: float | None = None           # if set, derive C from β (§3.3)
     compress: bool = True               # False -> "Decouple" ablation arm
+    vector_codec: str = "auto"          # seal-time codec mode: "auto" (the
+                                        # §3.3 two-stage sampled-entropy
+                                        # test), "xor_delta_huffman"
+                                        # (forced delta), "huffman", "raw";
+                                        # planner-selected via from_manifest
     kernels: object = None              # resolved KernelConfig: route the
                                         # XOR-delta inverse through the
                                         # byteplane kernel on loads
@@ -190,6 +186,29 @@ class StoreConfig:
         return int(np.dtype(self.dtype).itemsize * self.dim)
 
     @property
+    def resolved_codec(self) -> str:
+        """The effective seal mode (compress=False overrides to raw)."""
+        if not self.compress or self.vector_codec == "raw":
+            return "raw"
+        if self.vector_codec not in ("auto", "huffman", "xor_delta_huffman",
+                                     "plane_huffman"):
+            raise ValueError(f"unknown vector_codec {self.vector_codec!r}")
+        return self.vector_codec
+
+    def from_manifest(self, manifest) -> "StoreConfig":
+        """Resolve the seal mode from a planner manifest's
+        ``vector_chunks`` selection. A codec the store cannot seal with
+        raises — silently substituting another mode would let the built
+        store diverge from what ``engine.manifest_dec_costs`` prices."""
+        name = manifest.codec_for(COMPONENT, default="auto")
+        if name != "auto" and name not in _CODEC_MODES:
+            raise ValueError(
+                f"manifest selected vector codec {name!r} but the vector "
+                f"store implements only {sorted(_CODEC_MODES)} (+ 'auto')")
+        mode = _CODEC_MODES.get(name, "auto")
+        return replace(self, vector_codec=mode, compress=mode != "raw")
+
+    @property
     def chunk_vectors(self) -> int:
         c = self.chunk_bytes if self.beta is None else \
             chunk_size_for_beta(self.beta, self.v_bytes)
@@ -197,11 +216,18 @@ class StoreConfig:
 
 
 class DecoupledVectorStore:
-    """Log-structured compressed vector data tier (paper §3.3 + §3.5)."""
+    """Log-structured compressed vector data tier (paper §3.3 + §3.5).
 
-    def __init__(self, config: StoreConfig):
+    I/O is accounted through a :class:`BlockStore` component (a private
+    engine unless one is shared in — the §3.3 unification that puts all
+    three stores on one block ruler); ``self.io`` is this tier's
+    per-component stats, chained into the engine total.
+    """
+
+    def __init__(self, config: StoreConfig, block_store: BlockStore = None):
         self.cfg = config
-        self.io = IOStats()
+        self.blocks = block_store or BlockStore()
+        self.io = self.blocks.component_io(COMPONENT)
         self.sealed: dict[int, SealedSegment] = {}
         self._next_seg = 0
         self.active = self._new_mutable()
@@ -257,19 +283,34 @@ class DecoupledVectorStore:
         m = len(ids)
         rpc = self.cfg.chunk_vectors
         chunk_slices = [(s, min(s + rpc, m)) for s in range(0, m, rpc)]
-        if self.cfg.compress:
-            # Stage 1: per-chunk delta decision (sampled entropy test, §3.3).
+        mode = self.cfg.resolved_codec
+        if mode != "raw":
+            # Stage 1: per-chunk delta decision. "auto" runs the §3.3
+            # sampled-entropy test; a planner-selected codec pins the
+            # outcome (the planner already measured the whole component).
             transformed = vb.copy()
             bases: list[np.ndarray | None] = []
             for lo, hi in chunk_slices:
-                use, base = xor_delta.delta_wins(vb[lo:hi])
+                if mode in ("huffman", "plane_huffman"):
+                    use, base = False, None
+                elif mode == "xor_delta_huffman":
+                    sample = vb[lo:hi][:max(1, (hi - lo) // 10)]
+                    use, base = True, xor_delta.build_base(sample)
+                else:
+                    use, base = xor_delta.delta_wins(vb[lo:hi])
                 if use:
                     transformed[lo:hi] = xor_delta.apply_delta(vb[lo:hi], base)
                     bases.append(base)
                 else:
                     bases.append(None)
-            # Stage 2: unified per-segment frequency table + encode.
-            table = huffman.HuffmanTable.from_data(transformed)
+            # Stage 2: per-segment frequency table(s) + encode. The planar
+            # mode keys one table per byte plane (fp32 corpora's columnar
+            # concentration — huffman.PlaneTables); others share one.
+            if mode == "plane_huffman":
+                table = huffman.PlaneTables.from_data(
+                    transformed, np.dtype(self.cfg.dtype).itemsize)
+            else:
+                table = huffman.HuffmanTable.from_data(transformed)
             payload, offsets = huffman.encode_records(transformed, table)
             records = [payload[offsets[i]:offsets[i + 1]] for i in range(m)]
             self.compress_count += m

@@ -51,6 +51,7 @@ from ..graph.vamana import robust_prune
 from ..search.beam import (SearchParams, resolve_kernels, search,
                            search_candidates)
 from ..search.engine import merge_cost_us, merge_topk
+from ..storage.blockstore import BlockStore
 from ..storage.index_store import CompressedIndexStore
 from ..storage.vector_store import DecoupledVectorStore
 from .consistency import (Snapshot, SnapshotHandle, build_device_view,
@@ -124,6 +125,11 @@ class StreamingIndex:
         # search this index runs, and the merge cost pricing, use these.
         self._kernels = (dispatch.default_config() if cfg.kernels is None
                          else cfg.kernels.resolve())
+        # ONE storage engine under both tiers (§3.3): every index-store
+        # build/rewrite accounts through it, and the vector tier's engine
+        # chains into its total, so merge write-amp is read off one ruler.
+        self.blocks = BlockStore(cache_bytes=cfg.cache_bytes)
+        self.blocks.adopt("vector_chunks", vector_store.blocks.io)
         store = self._build_index_store()
         self.handle = SnapshotHandle(Snapshot(
             version=0, index_store=store, vector_store=vector_store,
@@ -137,7 +143,8 @@ class StreamingIndex:
         return CompressedIndexStore.from_graph(
             self.adjacency, self.medoid, self.cfg.r, universe=universe,
             cache_bytes=self.cfg.cache_bytes,
-            fill_factor=self.cfg.fill_factor)
+            fill_factor=self.cfg.fill_factor,
+            block_store=self.blocks)
 
     def _max_id(self) -> int:
         return max(self.vector_store.loc.keys(), default=len(self.adjacency) - 1)

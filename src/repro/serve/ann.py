@@ -45,8 +45,9 @@ from repro.core.codec import elias_fano as ef
 from repro.core.distributed.sharded_index import ShardedIndex
 from repro.core.search.beam import (DeviceIndex, SearchParams,
                                     resolve_kernels, search)
-from repro.core.search.engine import T_IO, compute_costs, merge_topk
-from repro.core.storage.index_store import LRUCache
+from repro.core.search.engine import (T_IO, compute_costs, manifest_dec_costs,
+                                      merge_topk)
+from repro.core.storage.blockstore import BlockStore, LRUCache
 from repro.core.update.consistency import SnapshotHandle, memtable_topk
 
 __all__ = ["ServeConfig", "BatchReport", "BatchedSearcher", "plan_buckets",
@@ -58,6 +59,10 @@ class ServeConfig:
     buckets: tuple = (1, 8, 32)     # ascending pad-and-bucket sizes
     cache_bytes: int = 1 << 20      # modeled §3.4 fixed-entry LRU, per shard
     account_io: bool = True         # replay fetch traces through the I/O model
+    manifest: object = None         # StorageManifest: price each tier's
+                                    # decode at its planner-resolved codec
+                                    # (engine.CODEC_DEC_US) instead of the
+                                    # flat per-backend T_DEC
 
 
 @dataclass
@@ -83,6 +88,11 @@ class BatchReport:
     snapshot_version: int = -1      # live mode: the snapshot pinned for this
                                     # batch (-1 for frozen indexes)
     mem_candidates: int = 0         # live mode: memtable rows side-scanned
+    # Component-aware storage engine metrics (BlockStore partitions):
+    component_io: dict = field(default_factory=dict)     # shard -> IOStats
+    component_cache: dict = field(default_factory=dict)  # shard -> hit/miss
+    storage_bytes: dict = field(default_factory=dict)    # live mode: bytes
+                                    # per component of the pinned snapshot
 
 
 def plan_buckets(nq: int, buckets: tuple) -> list:
@@ -139,10 +149,16 @@ class BatchedSearcher:
         self.p = p
         self.cfg = cfg
         # Decompressions split per tier: graph-list decode prices at the
-        # ef_decode backend, vector-record decode at the byteplane backend.
+        # ef_decode backend, vector-record decode at the byteplane backend —
+        # and, with a planner manifest, at each tier's RESOLVED codec cost.
         self._t_pq, self._t_ex, self._t_dec_ix = compute_costs(
             p.kernels.pq_adc, p.kernels.rerank_l2, p.kernels.ef_decode)
         *_, self._t_dec_vec = compute_costs(dec_backend=p.kernels.byteplane)
+        if cfg.manifest is not None:
+            self._t_dec_ix, _ = manifest_dec_costs(cfg.manifest,
+                                                   p.kernels.ef_decode)
+            _, self._t_dec_vec = manifest_dec_costs(cfg.manifest,
+                                                    p.kernels.byteplane)
         if self._handle is not None:
             self._shards = None        # resolved per batch (snapshot pin)
             self.shard_size = int(snap.device.pq_codes.shape[0])
@@ -155,14 +171,17 @@ class BatchedSearcher:
         else:
             self._shards = [index]
             self.shard_size = int(index.pq_codes.shape[0])
-        # One §3.4 fixed-entry LRU per shard: entries are sized to the EF
-        # worst case so capacity is a hard bound (index_store semantics).
+        # The modeled storage engine: one BlockStore whose partitions are
+        # the per-shard §3.4 fixed-entry LRUs (entries sized to the EF
+        # worst case so capacity is a hard bound — index_store semantics);
+        # the fetch-trace replay accounts reads per shard component.
         universe = p.universe or self.shard_size
-        entry_bytes = (ef.worst_case_bits(p.r_max, universe) + 7) // 8
+        entry_bytes = ef.worst_case_record_bytes(p.r_max, universe)
         n_caches = 1 if self._handle is not None else len(self._shards)
+        self.blocks = BlockStore(cache_bytes=cfg.cache_bytes)
         self._caches = [
-            LRUCache(cfg.cache_bytes // max(1, entry_bytes), entry_bytes)
-            for _ in range(n_caches)]
+            self.blocks.register_cache(f"shard{i}", entry_bytes)
+            for i in range(n_caches)]
 
     # ------------------------------------------------------------- serving
     def search(self, queries: np.ndarray):
@@ -187,10 +206,10 @@ class BatchedSearcher:
                 # modeled LRU to the new worst-case entry bound (§3.4).
                 self.p = self.p._replace(universe=store.universe,
                                          r_max=store.r)
-                entry_bytes = (ef.worst_case_bits(store.r, store.universe)
-                               + 7) // 8
-                self._caches = [LRUCache(
-                    self.cfg.cache_bytes // max(1, entry_bytes), entry_bytes)]
+                entry_bytes = ef.worst_case_record_bytes(store.r,
+                                                         store.universe)
+                self._caches = [self.blocks.register_cache("shard0",
+                                                           entry_bytes)]
             shards = [snap.device]
             self.shard_size = int(snap.device.pq_codes.shape[0])
         else:
@@ -220,7 +239,8 @@ class BatchedSearcher:
                 out_d[si, start:start + count] = np.asarray(dists)[:count]
                 if self.cfg.account_io:
                     lat[si, start:start + count] = self._account(
-                        report, stats, count, self._caches[si])
+                        report, stats, count, self._caches[si],
+                        component=f"shard{si}")
         if snap is not None:
             # Memtable side-scan: buffered inserts are one more "shard" in
             # the global merge (ids are globally unique fresh dense ids).
@@ -234,15 +254,29 @@ class BatchedSearcher:
             per_q = lat.max(axis=0)     # shards fan out in parallel
             report.modeled_latency_us = float(per_q.mean())
             report.modeled_p99_us = float(np.percentile(per_q, 99))
+            # Per-component engine metrics: cumulative BlockStore stats
+            # (per-shard partitions; the updater's own components when a
+            # live snapshot's stores share an engine are reported there).
+            report.component_io = {n: s.snapshot() for n, s in
+                                   self.blocks.components.items()}
+            report.component_cache = self.blocks.cache_stats()["partitions"]
+        if snap is not None:
+            report.storage_bytes = dict(
+                adjacency=snap.index_store.physical_bytes,
+                adjacency_sparse_index=snap.index_store.sparse_index_bytes,
+                vector_chunks=snap.vector_store.physical_bytes,
+                vector_metadata=snap.vector_store.metadata_bytes)
         return ids, dists, report
 
     # ------------------------------------------------------ I/O accounting
     def _account(self, report: BatchReport, stats, count: int,
-                 cache: LRUCache) -> np.ndarray:
+                 cache: LRUCache, component: str = "shard0") -> np.ndarray:
         """Replay one bucket's fetch traces (arrival order) through the
-        fixed-entry LRU; price counters with the engine.py latency model
-        (latency_aware arm: vector reads off the traversal critical path).
-        Returns per-query modeled latency [count] in µs."""
+        fixed-entry LRU partition; price counters with the engine.py
+        latency model (latency_aware arm: vector reads off the traversal
+        critical path). Uncached fetches are accounted as block reads on
+        the shard's BlockStore component. Returns per-query modeled
+        latency [count] in µs."""
         trace = np.asarray(stats.fetch_trace)[:count]       # [c, iters, W]
         pq_ops = np.asarray(stats.pq_dists)[:count]
         exact = np.asarray(stats.exact_dists)[:count]
@@ -259,6 +293,7 @@ class BatchedSearcher:
                         hits += 1
                     else:
                         cache.put(int(vid), True)
+                        self.blocks.read(component)    # one 4 KiB block
                         misses += 1
                         round_miss += 1
                 if round_miss:

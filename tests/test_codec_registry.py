@@ -1,0 +1,428 @@
+"""Codec-registry + BlockStore tier: property round-trips for every codec x
+component dtype (ragged/degenerate inputs), planner decisions, manifest
+persistence, and the shared storage engine's cache invariants.
+
+Property tests run under ``hypothesis`` when installed; where it is absent
+(this container) the same property functions are driven by seeded
+``numpy.random`` draws (the ``hypothesize`` pattern of
+``test_kernel_conformance.py``), so the tier never silently skips.
+"""
+import json
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.codec import registry as codecs
+from repro.core.storage.blockstore import (BlockStore, IOStats, LRUCache,
+                                           SharedBudget)
+from repro.core.storage.colocated import ColocatedStore
+from repro.core.storage.index_store import CompressedIndexStore
+from repro.core.storage.layout import StorageManifest
+from repro.core.storage.vector_store import DecoupledVectorStore, StoreConfig
+from repro.data.synthetic import make_vector_dataset
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def hypothesize(n_fallback=10, **bounds):
+    """@given(**integer strategies) when hypothesis is available; otherwise
+    a deterministic seeded-numpy parametrization of the same bounds."""
+    if HAVE_HYPOTHESIS:
+        strats = {k: st.integers(lo, hi) for k, (lo, hi) in bounds.items()}
+
+        def deco(fn):
+            return settings(max_examples=20, deadline=None)(
+                given(**strats)(fn))
+        return deco
+
+    def deco(fn):
+        rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+        cases = [tuple(int(rng.integers(lo, hi + 1))
+                       for lo, hi in bounds.values())
+                 for _ in range(n_fallback)]
+        return pytest.mark.parametrize(",".join(bounds), cases)(fn)
+    return deco
+
+
+# ------------------------------------------------------------- round trips
+@hypothesize(n=(0, 120), universe=(2, 1 << 20), seed=(0, 2**31))
+@pytest.mark.parametrize("codec", ["raw", "bitpack", "elias_fano"])
+def test_adjacency_codec_roundtrip(codec, n, universe, seed):
+    """Every adjacency-capable codec is lossless on sorted id lists,
+    including the empty and single-id degenerate cases."""
+    rng = np.random.default_rng(seed)
+    n = min(n, universe)
+    vals = np.sort(rng.choice(universe, size=n, replace=False)
+                   .astype(np.uint64))
+    c = codecs.get(codec)
+    enc = c.encode(vals, universe=universe)
+    assert enc.dtype == np.uint8
+    out = c.decode(enc, universe=universe)
+    np.testing.assert_array_equal(out.astype(np.uint64), vals)
+
+
+@hypothesize(v=(1, 96), seed=(0, 2**31))
+@pytest.mark.parametrize("codec", ["raw", "huffman", "xor_delta_huffman"])
+@pytest.mark.parametrize("dist", ["uniform", "skewed", "constant"])
+def test_byte_row_codec_roundtrip(codec, dist, v, seed):
+    """Byte-row codecs (pq codes / vector chunks) are lossless across
+    uniform, skewed, and constant distributions."""
+    rng = np.random.default_rng(seed)
+    if dist == "uniform":
+        row = rng.integers(0, 256, size=v, dtype=np.uint8)
+    elif dist == "skewed":
+        row = (rng.gamma(0.7, 6.0, size=v) % 256).astype(np.uint8)
+    else:
+        row = np.full(v, 9, np.uint8)
+    c = codecs.get(codec)
+    out = c.decode(c.encode(row))
+    np.testing.assert_array_equal(out.astype(np.uint8), row)
+
+
+@hypothesize(dim=(1, 64), seed=(0, 2**31))
+@pytest.mark.parametrize("dtype", [np.float32, np.int16])
+def test_plane_huffman_roundtrip(dtype, dim, seed):
+    """Per-plane Huffman is lossless on multi-byte element rows."""
+    rng = np.random.default_rng(seed)
+    row = rng.normal(size=dim).astype(dtype)
+    b = np.ascontiguousarray(row).view(np.uint8)
+    c = codecs.get("plane_huffman")
+    itemsize = np.dtype(dtype).itemsize
+    out = c.decode(c.encode(b, itemsize=itemsize), itemsize=itemsize)
+    np.testing.assert_array_equal(out.astype(np.uint8), b)
+
+
+def test_estimate_tracks_segment_amortized_size():
+    """estimate_bytes models the per-segment-amortized form: for raw /
+    bitpack / elias_fano it equals the sum of actual record encodings."""
+    rng = np.random.default_rng(0)
+    universe = 4000
+    recs = [np.sort(rng.choice(universe, size=int(n), replace=False)
+                    .astype(np.uint64))
+            for n in rng.integers(1, 33, size=50)]
+    for name in ("raw", "bitpack", "elias_fano"):
+        c = codecs.get(name)
+        est = c.estimate_bytes(recs, universe=universe)
+        actual = sum(len(c.encode(r, universe=universe)) for r in recs)
+        assert est == actual, name
+
+
+def test_u16_record_header_guard():
+    """Records past the u16 header bound raise loudly instead of silently
+    wrapping into a truncated decode."""
+    big = np.zeros(70_000, np.uint8)
+    for name in ("huffman", "plane_huffman", "xor_delta_huffman"):
+        with pytest.raises(ValueError, match="u16"):
+            codecs.get(name).encode(big, itemsize=4)
+    with pytest.raises(ValueError, match="u16"):
+        codecs.get("bitpack").encode(big.astype(np.uint64))
+
+
+# ----------------------------------------------------------------- planner
+def test_planner_picks_ef_for_sparse_sorted_lists():
+    rng = np.random.default_rng(1)
+    adj = [np.sort(rng.choice(100_000, size=24, replace=False))
+           for _ in range(200)]
+    m = codecs.plan_components(dict(adjacency=adj), universe=100_000)
+    plan = m.components["adjacency"]
+    assert plan.codec == "elias_fano"
+    assert plan.est_bytes < plan.candidates["raw"]
+    assert plan.ratio < 0.5                  # EF well under 4(R+1) raw form
+
+
+def test_planner_picks_raw_for_incompressible_bytes():
+    rng = np.random.default_rng(2)
+    rows = [rng.integers(0, 256, size=64, dtype=np.uint8)
+            for _ in range(200)]
+    m = codecs.plan_components(dict(pq_codes=rows))
+    assert m.codec_for("pq_codes") == "raw"
+
+
+def test_planner_picks_plane_huffman_for_fp32_embeddings():
+    vecs = make_vector_dataset("prop-like", 2000, 32, seed=0)
+    rows = [np.ascontiguousarray(v).view(np.uint8) for v in vecs]
+    m = codecs.plan_components(dict(vector_chunks=rows), itemsize=4)
+    plan = m.components["vector_chunks"]
+    assert plan.codec == "plane_huffman"
+    assert plan.candidates["plane_huffman"] < plan.candidates["huffman"]
+
+
+def test_planner_universe_does_not_inflate_byte_components():
+    """The universe bounds id-valued components only: a declared id space
+    must not widen uint8 rows to u32 in the raw baseline/candidate."""
+    rng = np.random.default_rng(9)
+    rows = [rng.integers(0, 256, size=64, dtype=np.uint8)
+            for _ in range(100)]
+    m = codecs.plan_components(dict(pq_codes=rows, vector_chunks=rows),
+                               universe=100_000)
+    for comp in ("pq_codes", "vector_chunks"):
+        plan = m.components[comp]
+        assert plan.codec == "raw"
+        assert plan.candidates["raw"] == 100 * (1 + 64)   # u8, not u32
+
+
+def test_planner_excludes_bitpack_beyond_pack_width():
+    """Ids needing > 33-bit widths: bitpack must drop out of the candidate
+    set (estimate raises like encode would), not win and then crash the
+    store build."""
+    rng = np.random.default_rng(10)
+    universe = 1 << 40
+    adj = [np.sort(rng.integers(0, universe, size=8, dtype=np.uint64))
+           for _ in range(20)]
+    m = codecs.plan_components(dict(adjacency=adj), universe=universe)
+    assert "bitpack" not in m.components["adjacency"].candidates
+    assert m.codec_for("adjacency") in ("elias_fano", "raw")
+
+
+def test_manifest_json_roundtrip(tmp_path):
+    rng = np.random.default_rng(3)
+    adj = [np.sort(rng.choice(5000, size=16, replace=False))
+           for _ in range(100)]
+    m = codecs.plan_components(dict(adjacency=adj), universe=5000)
+    path = tmp_path / "manifest.json"
+    m.save(path)
+    m2 = StorageManifest.load(path)
+    assert m2.codec_for("adjacency") == m.codec_for("adjacency")
+    assert m2.components["adjacency"].candidates == \
+        m.components["adjacency"].candidates
+    assert m2.params_for("adjacency")["universe"] == 5000
+    # plain-JSON stability (the persisted form is tool-readable)
+    json.loads(json.dumps(m.to_json()))
+
+
+# ------------------------------------------------- stores x planner codecs
+@pytest.mark.parametrize("codec", ["elias_fano", "bitpack", "raw"])
+def test_index_store_lossless_under_any_adjacency_codec(codec):
+    rng = np.random.default_rng(4)
+    n, r = 600, 12
+    adj = [np.sort(rng.choice(n, size=int(rng.integers(2, r + 1)),
+                              replace=False)).astype(np.int64)
+           for _ in range(n)]
+    s = CompressedIndexStore.from_graph(adj, medoid=0, r=r, codec=codec)
+    assert s.codec == codec
+    for vid in (0, 1, 299, 599):
+        np.testing.assert_array_equal(np.sort(s.get_neighbors(vid)),
+                                      np.sort(adj[vid]))
+
+
+def test_index_store_rewrite_blocks_preserves_codec():
+    rng = np.random.default_rng(5)
+    n, r = 500, 8
+    adj = [np.sort(rng.choice(n, size=r, replace=False)).astype(np.int64)
+           for _ in range(n)]
+    s = CompressedIndexStore.from_graph(adj, 0, r, codec="bitpack",
+                                        fill_factor=0.8)
+    adj2 = [a.copy() for a in adj]
+    adj2[3] = np.sort(rng.choice(n, size=r, replace=False)).astype(np.int64)
+    inc, rep = s.rewrite_blocks(adj2, [3])
+    assert inc.codec == "bitpack"
+    np.testing.assert_array_equal(np.sort(inc.get_neighbors(3)),
+                                  np.sort(adj2[3]))
+
+
+@pytest.mark.parametrize("mode", ["auto", "huffman", "xor_delta_huffman",
+                                  "plane_huffman", "raw"])
+def test_vector_store_lossless_under_every_codec_mode(mode):
+    vecs = make_vector_dataset("prop-like", 1500, 24, seed=1)
+    s = DecoupledVectorStore(StoreConfig(dim=24, dtype=vecs.dtype,
+                                         segment_capacity=700,
+                                         vector_codec=mode))
+    s.append(np.arange(len(vecs)), vecs)
+    s.seal_active()
+    ids = np.array([0, 3, 699, 700, 1499])
+    np.testing.assert_array_equal(s.get(ids), vecs[ids])
+
+
+def test_vector_store_from_manifest_selects_plane_tables():
+    vecs = make_vector_dataset("prop-like", 2000, 32, seed=0)
+    rows = [np.ascontiguousarray(v).view(np.uint8) for v in vecs[:512]]
+    manifest = codecs.plan_components(dict(vector_chunks=rows), itemsize=4)
+    base = StoreConfig(dim=32, dtype=vecs.dtype, segment_capacity=1000)
+    cfg = base.from_manifest(manifest)
+    assert cfg.resolved_codec == "plane_huffman"
+    planned = DecoupledVectorStore(cfg)
+    planned.append(np.arange(len(vecs)), vecs)
+    planned.seal_active()
+    fixed = DecoupledVectorStore(base)
+    fixed.append(np.arange(len(vecs)), vecs)
+    fixed.seal_active()
+    assert planned.physical_bytes < fixed.physical_bytes
+    np.testing.assert_array_equal(planned.get(np.arange(50)), vecs[:50])
+
+
+# --------------------------------------------------- manifest-priced T_DEC
+def test_engine_prices_t_dec_from_manifest_codecs():
+    from repro.core.search.engine import (CODEC_DEC_US, EngineConfig,
+                                          QueryStats, _cpu_us,
+                                          manifest_dec_costs, t_dec_for)
+
+    rng = np.random.default_rng(8)
+    adj = [np.sort(rng.choice(4000, size=16, replace=False))
+           for _ in range(100)]
+    rows = [rng.integers(0, 256, size=64, dtype=np.uint8)
+            for _ in range(100)]
+    m = codecs.plan_components(dict(adjacency=adj, vector_chunks=rows),
+                               universe=4000)
+    t_ix, t_vec = manifest_dec_costs(m)
+    assert t_ix == CODEC_DEC_US[m.codec_for("adjacency")]
+    assert t_vec == CODEC_DEC_US[m.codec_for("vector_chunks")]
+    # raw decode is free; a typo'd codec raises instead of lying.
+    assert t_dec_for("raw") == 0.0
+    with pytest.raises(ValueError):
+        t_dec_for("zstd")
+    # The latency model splits per tier when a manifest is present.
+    st = QueryStats(graph_decs=10, vector_decs=5, decompressions=15)
+    flat = _cpu_us(st, EngineConfig())
+    priced = _cpu_us(st, EngineConfig(manifest=m))
+    assert priced == 10 * t_ix + 5 * t_vec
+    assert priced != flat or (t_ix == t_vec == 0.20)
+
+
+# ------------------------------------------------------- BlockStore engine
+def test_no_iostats_or_lrucache_definitions_outside_blockstore():
+    """ACCEPTANCE: blockstore.py is the single definition site."""
+    import pathlib
+
+    import repro.core.storage.blockstore as bsmod
+    root = pathlib.Path(bsmod.__file__).resolve().parents[2]  # src/repro
+    offenders = []
+    for path in root.rglob("*.py"):
+        if path.name == "blockstore.py":
+            continue
+        text = path.read_text()
+        if "class IOStats" in text or "class LRUCache" in text:
+            offenders.append(str(path))
+    assert not offenders, offenders
+
+
+def test_component_io_chains_to_engine_total():
+    bs = BlockStore()
+    a = bs.component_io("adjacency")
+    v = bs.component_io("vector_chunks")
+    a.read(4096)
+    v.read(8192, n=2)
+    v.write(4096)
+    assert bs.io.reads == 3 and bs.io.read_bytes == 12288
+    assert bs.io.writes == 1 and bs.io.write_bytes == 4096
+    assert bs.stats()["components"]["adjacency"]["reads"] == 1
+
+
+def test_fresh_io_resets_component_not_total():
+    bs = BlockStore()
+    io1 = bs.fresh_io("adjacency")
+    io1.write(4096)
+    io2 = bs.fresh_io("adjacency")
+    io2.write(8192, n=2)
+    assert io2.write_bytes == 8192          # fresh per publish
+    assert bs.io.write_bytes == 12288       # engine total accumulates
+
+
+def test_shared_budget_hit_miss_totals_equal_sum_of_partitions():
+    """ACCEPTANCE: shared-budget hit+miss totals == sum per partition."""
+    bs = BlockStore(cache_bytes=10 * 64, shared_budget=True)
+    c1 = bs.register_cache("adjacency", 64)
+    c2 = bs.register_cache("vector_chunks", 64)
+    rng = np.random.default_rng(6)
+    for i in rng.integers(0, 30, size=200):
+        part = c1 if i % 2 == 0 else c2
+        if part.get(int(i)) is None:
+            part.put(int(i), i)
+    stats = bs.cache_stats()
+    assert stats["hits"] + stats["misses"] == sum(
+        p["hits"] + p["misses"] for p in stats["partitions"].values())
+    assert stats["hits"] == c1.hits + c2.hits
+    assert stats["misses"] == c1.misses + c2.misses
+    # The pooled budget is a hard bound across partitions.
+    assert stats["memory_bytes"] <= 10 * 64
+    assert bs.budget.used_bytes == stats["memory_bytes"]
+
+
+def test_shared_budget_evicts_globally_least_recent():
+    bs = BlockStore(cache_bytes=3 * 100, shared_budget=True)
+    hot = bs.register_cache("hot", 100)
+    cold = bs.register_cache("cold", 100)
+    cold.put(1, "c1")
+    hot.put(1, "h1")
+    hot.put(2, "h2")
+    hot.put(3, "h3")        # over budget -> evicts cold's oldest entry
+    assert cold.get(1) is None
+    assert hot.get(1) == "h1" and hot.get(3) == "h3"
+
+
+def test_lru_clone_and_invalidate_preserved():
+    """Clone keeps recency + stats independence; invalidate drops only the
+    named keys (the §3.5 incremental-merge contract, now in blockstore)."""
+    c = LRUCache(capacity=4, entry_bytes=10)
+    for k in (1, 2, 3, 4):
+        c.put(k, k * 10)
+    c.get(1)                 # 1 becomes most recent
+    cl = c.clone()
+    assert list(cl._d) == list(c._d)
+    assert cl.invalidate([2, 99]) == 1
+    assert cl.get(2) is None and c.get(2) == 20   # original untouched
+    cl.put(5, 50)
+    cl.put(6, 60)            # evicts oldest (3), never the recent 1
+    assert cl.get(1) == 10 and cl.get(3) is None
+
+
+def test_colocated_block_granular_cache_and_writes():
+    """§2.2 arm on the block ruler: records in one cached page hit; a full
+    rewrite writes exactly n_blocks pages."""
+    vecs = make_vector_dataset("sift-like", 400, 32, seed=2)
+    adj = [np.sort(np.arange(1, 9)) for _ in range(400)]
+    s = ColocatedStore.build(vecs, adj, medoid=0, r=8,
+                             cache_bytes=1 << 20)
+    per_block = s.records_per_block
+    assert per_block > 1
+    s.get_record(0)
+    r0 = s.io.reads
+    s.get_record(1)          # same page -> cache hit, no new read
+    assert s.io.reads == r0 and s.cache.hits == 1
+    s.get_record(per_block)  # next page -> one more block read
+    assert s.io.reads == r0 + 1
+    w0 = s.io.writes
+    s.rewrite_all()
+    assert s.io.writes - w0 == s.n_blocks
+    assert s.io.write_bytes >= s.n_blocks * 4096
+
+
+def test_streaming_stores_share_one_engine():
+    """fresh.py routes the index-store merge and the vector tier through
+    ONE BlockStore: engine totals see both components."""
+    from repro.core.graph.pq import encode_pq, train_pq
+    from repro.core.graph.vamana import build_vamana
+    from repro.core.update.fresh import StreamingIndex, UpdateConfig
+
+    vecs = make_vector_dataset("prop-like", 250, 16, seed=3) \
+        .astype(np.float32)
+    graph = build_vamana(vecs, r=8, l_build=16, seed=0)
+    cb = train_pq(vecs, m=4, seed=0)
+    codes = encode_pq(vecs, cb)
+    vs = DecoupledVectorStore(StoreConfig(dim=16, dtype=np.float32,
+                                          segment_capacity=128))
+    vs.append(np.arange(len(vecs)), vecs)
+    vs.seal_active()
+    idx = StreamingIndex(graph.adjacency, graph.medoid, vs, codes, cb,
+                         UpdateConfig(r=8, l_build=16, merge_threshold=10**9))
+    assert "adjacency" in idx.blocks.components
+    store = idx.handle.current().index_store
+    assert store.blocks is idx.blocks
+    rng = np.random.default_rng(7)
+    idx.insert(np.arange(250, 260),
+               rng.normal(size=(10, 16)).astype(np.float32))
+    t0 = idx.blocks.io.write_bytes
+    st = idx.merge()
+    # The published store's fresh stats hold only this merge's writes...
+    published = idx.handle.current().index_store
+    assert published.io.write_bytes == st.write_bytes
+    # ...the engine total saw index-store + vector-tier traffic...
+    assert idx.blocks.io.write_bytes >= t0 + st.write_bytes
+    # ...and the engine's live partition IS the published store's cache
+    # (an incremental merge re-registers the clone, so per-component cache
+    # metrics keep moving after the merge).
+    assert idx.blocks.partitions["adjacency"] is published.cache
