@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-kernels bench-smoke bench bench-kernels bench-update bench-storage quickstart
+.PHONY: test test-fast test-kernels bench-smoke bench bench-kernels bench-update bench-storage bench-summary quickstart
 
 test:            ## tier-1: full test suite, stop at first failure (~2.5 min)
 	$(PY) -m pytest -x -q
@@ -14,8 +14,11 @@ test-fast:       ## tier-1 minus the slow interpret-mode sweeps
 test-kernels:    ## kernel conformance + backend-equivalence tier
 	$(PY) -m pytest -x -q tests/test_kernel_conformance.py tests/test_kernels.py tests/test_search.py
 
-bench-kernels:   ## ref-vs-pallas per op + e2e -> BENCH_kernels.json
+bench-kernels:   ## ref-vs-pallas-vs-auto-tuned per op + e2e -> BENCH_kernels.json (+ autotune cache)
 	$(PY) -m benchmarks.bench_kernels
+
+bench-summary:   ## fold all BENCH_*.json into a BENCH_summary.json trajectory row
+	$(PY) -m benchmarks.run --summary
 
 bench-update:    ## streaming-update arms (inc/full/colocated) -> BENCH_update.json
 	$(PY) -m benchmarks.bench_update

@@ -12,11 +12,84 @@ JSON artifacts (written in-harness, one per experiment family):
   bench_storage     -> BENCH_storage.json     (planner vs fixed vs colocated)
   bench_compression -> BENCH_compression.json (codec sizes + decision table)
   bench_update      -> BENCH_update.json      (merge/write-amp arms)
-  bench_kernels     -> BENCH_kernels.json     (ref vs pallas per op)
+  bench_kernels     -> BENCH_kernels.json     (ref vs pallas vs auto-tuned)
+
+``python -m benchmarks.run --summary`` folds every BENCH_*.json in the
+working directory into one trajectory row appended to ``BENCH_summary.json``
+(git rev + per-family headline numbers), so successive runs accumulate a
+perf history instead of overwriting each other.
 """
+import glob
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
+
+SUMMARY_OUT = "BENCH_summary.json"
+MAX_ROWS = 50          # trajectory depth kept in the summary file
+
+
+def _digest(name: str, doc: dict):
+    """One family's headline numbers — small enough to diff by eye."""
+    if name == "BENCH_kernels.json":
+        auto = doc.get("auto_tuned", {})
+        return dict(
+            platform=doc.get("platform"),
+            pallas_resolved_as=doc.get("pallas_resolved_as"),
+            auto_tuned_never_loses=auto.get("never_loses"),
+            auto_tuned_picks={f"{r['op']}|{r['size']}": r["resolved"]
+                              for r in auto.get("rows", [])},
+            e2e_qps={r["backend"]: r.get("qps")
+                     for r in doc.get("e2e", [])},
+            rerank_regression_us={
+                f"{r['backend']}": r["us"] for r in doc.get("ops", [])
+                if r["op"] == "rerank_l2" and "c=130" in r["size"]})
+    if name == "BENCH_storage.json":
+        return dict(suite=doc.get("suite"))
+    # Generic family: keep the scalar top-level fields only.
+    return {k: v for k, v in doc.items()
+            if isinstance(v, (int, float, str, bool))}
+
+
+def summarize(out: str = SUMMARY_OUT) -> dict:
+    """Fold all BENCH_*.json into one trajectory row in ``out``."""
+    files = {}
+    for path in sorted(glob.glob("BENCH_*.json")):
+        base = os.path.basename(path)
+        if base == os.path.basename(out):
+            continue
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except ValueError:
+            files[base] = {"error": "unreadable"}
+            continue
+        files[base] = _digest(base, doc)
+    try:
+        rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or None
+    except OSError:
+        rev = None
+    row = dict(ts=round(time.time()), git=rev, files=files)
+    try:
+        with open(out) as f:
+            summary = json.load(f)
+        rows = summary.get("rows", [])
+    except (OSError, ValueError):
+        rows = []
+    rows.append(row)
+    summary = dict(
+        note=("one row per `benchmarks.run --summary` invocation; newest "
+              "last; headline digests of every BENCH_*.json present"),
+        rows=rows[-MAX_ROWS:])
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"# wrote {out} ({len(files)} families, "
+          f"{len(summary['rows'])} trajectory rows)")
+    return summary
 
 
 def main() -> None:
@@ -37,7 +110,11 @@ def main() -> None:
         print(f"# {mod.__name__} done in {time.time()-t0:.1f}s",
               file=sys.stderr)
     print(f"# total {time.time()-t00:.1f}s", file=sys.stderr)
+    summarize()
 
 
 if __name__ == '__main__':
-    main()
+    if "--summary" in sys.argv[1:]:
+        summarize()
+    else:
+        main()

@@ -103,22 +103,25 @@ class SearchStats(NamedTuple):
                                    # (-1 = none; empty unless trace_fetches)
 
 
-def resolve_kernels(p: SearchParams,
-                    platform: str | None = None) -> SearchParams:
+def resolve_kernels(p: SearchParams, platform: str | None = None,
+                    shapes: dict | None = None) -> SearchParams:
     """Fill ``p.kernels`` with a concrete per-op backend config.
 
     This is the single config-time resolution point: ``None`` takes the
     ``REPRO_KERNELS`` env default, ``auto`` entries resolve for
-    ``platform`` (default: the process backend), and a raw ``pallas``
-    request degrades to the interpreter off-TPU. Public entry points call
-    it before jit, so no backend checks survive into (or run during)
-    tracing; a caller composing ``search_batched`` inside its own
-    jit/shard_map (e.g. ``make_sharded_search``) should call it when the
-    program is built, passing the mesh's platform.
+    ``platform`` (default: the process backend), ``auto-tuned`` entries
+    resolve per (op, shape-bucket) from the persisted autotune cache
+    (pass ``shapes`` — op name -> dims dict — when the caller knows the
+    serving shapes; without it the op's majority-winner bucket decides),
+    and a raw ``pallas`` request degrades to the interpreter off-TPU.
+    Public entry points call it before jit, so no backend checks survive
+    into (or run during) tracing; a caller composing ``search_batched``
+    inside its own jit/shard_map (e.g. ``make_sharded_search``) should
+    call it when the program is built, passing the mesh's platform.
     """
     k = p.kernels
     k = (dispatch.from_env(platform=platform) if k is None
-         else k.resolve(platform))
+         else k.resolve(platform, shapes))
     return p if k == p.kernels else p._replace(kernels=k)
 
 
@@ -257,14 +260,23 @@ def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
                 True, mode="drop")
         new_ids = jnp.where(ok, uniq, -1)
         codes = index.pq_codes[jnp.clip(new_ids, 0, n - 1)]
-        new_d = jnp.where(ok, _adc_batch(codes, luts, p.kernels), jnp.inf)
         pq_ct = pq_ct + jnp.sum(ok, 1).astype(jnp.int32)
 
-        merged_ids = jnp.concatenate([cand_ids, new_ids], 1)
-        merged_d = jnp.concatenate([cand_d, new_d], 1)
-        top_d, top_i = jax.lax.top_k(-merged_d, L)
-        cand_ids = jnp.take_along_axis(merged_ids, top_i, 1)
-        cand_d = -top_d
+        if p.kernels is not None and p.kernels.beam_step != "off":
+            # Fused hop tail (kernels/beam_step): ADC + top-L merge in one
+            # launch, per-query LUT resident in VMEM. The ref backend is
+            # op-for-op the same jnp as the unfused branch below, so this
+            # is a call-structure change, not a semantics change.
+            cand_ids, cand_d, top_i = dispatch.beam_step(
+                codes, luts, cand_ids, cand_d, new_ids, p.kernels)
+        else:
+            new_d = jnp.where(ok, _adc_batch(codes, luts, p.kernels),
+                              jnp.inf)
+            merged_ids = jnp.concatenate([cand_ids, new_ids], 1)
+            merged_d = jnp.concatenate([cand_d, new_d], 1)
+            top_d, top_i = jax.lax.top_k(-merged_d, L)
+            cand_ids = jnp.take_along_axis(merged_ids, top_i, 1)
+            cand_d = -top_d
         if use_hash:
             merged_exp = jnp.concatenate(
                 [expanded, jnp.zeros_like(new_ids, jnp.bool_)], 1)

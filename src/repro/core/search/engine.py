@@ -46,10 +46,36 @@ KERNEL_COST_US = {
     "pallas":           {"pq": 0.005, "ex": 0.01, "dec": 0.02},
     "pallas-interpret": {"pq": 0.05, "ex": 0.10, "dec": 0.20},
 }
+# "auto-tuned" prices the autotune-cache resolution (kernels/autotune.py):
+# per op it picks the backend with the lowest measured time, so its cost is
+# the per-kind minimum over the concrete backends — by construction it can
+# never price (or run) worse than the best of {ref, pallas}.
+KERNEL_COST_US["auto-tuned"] = {
+    kind: min(row[kind] for row in KERNEL_COST_US.values())
+    for kind in ("pq", "ex", "dec")}
 
 T_PQ = KERNEL_COST_US["ref"]["pq"]
 T_EX = KERNEL_COST_US["ref"]["ex"]
 T_DEC = KERNEL_COST_US["ref"]["dec"]
+
+# Fused beam-step discount (kernels/beam_step): one launch per hop instead
+# of three, LUT + candidate intermediates stay in VMEM instead of
+# round-tripping HBM between the ADC, gather and merge programs. Modeled as
+# a multiplier on the per-op pq/ex terms when the resolved config runs the
+# COMPILED fused kernel ("pallas"); ref is the same jnp either way and the
+# interpreter is a correctness mode, so neither earns the discount.
+FUSED_BEAM_DISCOUNT = 0.5
+
+
+def beam_compute_costs(kernels) -> tuple[float, float]:
+    """(t_pq, t_ex) in µs from a resolved ``KernelConfig``, including the
+    fused beam-step discount — the serving tier's pricing entry point, so
+    ``BatchedSearcher`` latency models see the fusion win."""
+    t_pq, t_ex, _ = compute_costs(kernels.pq_adc, kernels.rerank_l2)
+    if getattr(kernels, "beam_step", "off") == "pallas":
+        t_pq *= FUSED_BEAM_DISCOUNT
+        t_ex *= FUSED_BEAM_DISCOUNT
+    return t_pq, t_ex
 
 # Per-codec decode cost (µs/record, ref backend) — the manifest-resolved
 # replacement for the single hard-coded T_DEC: once the compression planner

@@ -1,0 +1,3 @@
+from .beam_step import beam_step_pallas  # noqa: F401
+from .ops import beam_step  # noqa: F401
+from .ref import beam_step_ref  # noqa: F401

@@ -1,0 +1,112 @@
+"""Fused beam-step kernel: ADC LUT lookup + candidate top-L merge in VMEM.
+
+The unfused traversal loop launches three device programs per beam hop
+(batched ADC, neighbor gather glue, top-L merge) and round-trips every
+intermediate — the [nq, E] distance block, the [nq, L+E] merged lists —
+through HBM between them; BENCH_kernels.json measured that sequence losing
+to the jnp oracle (pq_adc 1.5-8x, e2e 597 vs 2791 QPS). This kernel fuses
+the hop's compute tail into ONE ``pallas_call``: per grid step a single
+query's LUT, its gathered codes, and its candidate list are loaded to VMEM
+once, the ADC one-hot x LUT matmul runs on the MXU, and the merged top-L is
+selected in-register before only the [L] results are written back. Per-query
+LUT tiling is the grid itself: step ``i`` holds query ``i``'s LUT resident —
+nothing is re-fetched across the E neighbors it scores.
+
+Top-L selection is a *stable rank* select, not a sort: with T = L + E
+candidates, ``rank[i] = #{j : d[j] < d[i] or (d[j] == d[i] and j < i)}`` is
+a [T, T] compare + row-sum (VPU work), and output slot p takes the element
+with rank p via a one-hot [L, T] mask. This reproduces ``jax.lax.top_k``
+tie-breaking exactly (equal distances -> lower merged index first), which is
+what makes the fused path bit-identical to the unfused ref program — the
+conformance gate in tests/test_kernel_conformance.py.
+
+Per-step VMEM (f32 words unless noted): one-hot [E, M*K] is the budget
+setter — 1 MiB at E=128, M=8, K=256 — plus LUT [M, K], codes [E, M] i32,
+the [T, T] compare mask (~150 KiB at T=192) and three [L] outputs; all
+well under the 8 MiB tile budget (launch/roofline.py) for every shipped
+search configuration (E = W * r_max <= 256, M <= 16).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+E_ALIGN = 128   # neighbor axis padded to the VPU lane width
+
+
+def _kernel(codes_ref, lut_ref, ci_ref, cd_ref, ni_ref,
+            oi_ref, od_ref, ox_ref):
+    codes = codes_ref[0].astype(jnp.int32)            # [E, M]
+    lut = lut_ref[0]                                  # [M, K]
+    e, m = codes.shape
+    k = lut.shape[1]
+    # ---- ADC: one-hot x LUT matmul (same MXU formulation as pq_adc)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (e, m, k), 2)
+    onehot = (iota == codes[:, :, None]).astype(lut.dtype)
+    d_new = jax.lax.dot_general(
+        onehot.reshape(e, m * k), lut.reshape(m * k),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # [E]
+    ni = ni_ref[0]                                    # [E] (-1 = masked)
+    d_new = jnp.where(ni >= 0, d_new, jnp.inf)
+    # ---- merge: stable-rank top-L over [cand | new], all in VMEM
+    md = jnp.concatenate([cd_ref[0], d_new])          # [T]
+    mi = jnp.concatenate([ci_ref[0], ni])             # [T]
+    t = md.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    before = (md[None, :] < md[:, None]) \
+        | ((md[None, :] == md[:, None]) & (jj < ii))
+    rank = jnp.sum(before.astype(jnp.int32), axis=1)  # [T], a permutation
+    l_size = oi_ref.shape[1]
+    pp = jax.lax.broadcasted_iota(jnp.int32, (l_size, t), 0)
+    hit = rank[None, :] == pp                         # [L, T] one-hot rows
+    od_ref[0, :] = jnp.sum(jnp.where(hit, md[None, :], 0.0), axis=1)
+    oi_ref[0, :] = jnp.sum(jnp.where(hit, mi[None, :], 0), axis=1)
+    jt = jax.lax.broadcasted_iota(jnp.int32, (l_size, t), 1)
+    ox_ref[0, :] = jnp.sum(jnp.where(hit, jt, 0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def beam_step_pallas(codes: jnp.ndarray, luts: jnp.ndarray,
+                     cand_ids: jnp.ndarray, cand_d: jnp.ndarray,
+                     new_ids: jnp.ndarray, interpret: bool = True):
+    """Fused hop tail: see ``ref.beam_step_ref`` for the contract.
+
+    Grid is (nq,): one query per step, its LUT + candidate state resident.
+    The neighbor axis is padded to E_ALIGN with masked (-1) entries; padded
+    slots carry +inf at merged indices >= L + E, so the stable rank places
+    every real entry (there are always >= L of them: the candidate list
+    itself) ahead of them — ``top_idx`` therefore always indexes the
+    UNPADDED concatenation, exactly like the oracle.
+    """
+    nq, e, m = codes.shape
+    nq2, m2, k = luts.shape
+    nq3, l_size = cand_ids.shape
+    assert nq == nq2 == nq3 and m == m2
+    assert new_ids.shape == (nq, e) and cand_d.shape == (nq, l_size)
+    ep = (-e) % E_ALIGN
+    codes_p = jnp.pad(codes.astype(jnp.int32), ((0, 0), (0, ep), (0, 0)))
+    new_p = jnp.pad(new_ids, ((0, 0), (0, ep)), constant_values=-1)
+    e_pad = e + ep
+    out_ids, out_d, out_idx = pl.pallas_call(
+        _kernel,
+        grid=(nq,),
+        in_specs=[
+            pl.BlockSpec((1, e_pad, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l_size), lambda i: (i, 0)),
+            pl.BlockSpec((1, l_size), lambda i: (i, 0)),
+            pl.BlockSpec((1, e_pad), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, l_size), lambda i: (i, 0)),
+                   pl.BlockSpec((1, l_size), lambda i: (i, 0)),
+                   pl.BlockSpec((1, l_size), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nq, l_size), jnp.int32),
+                   jax.ShapeDtypeStruct((nq, l_size), jnp.float32),
+                   jax.ShapeDtypeStruct((nq, l_size), jnp.int32)],
+        interpret=interpret,
+    )(codes_p, luts.astype(jnp.float32), cand_ids.astype(jnp.int32),
+      cand_d.astype(jnp.float32), new_p.astype(jnp.int32))
+    return out_ids, out_d, out_idx

@@ -1,0 +1,15 @@
+"""Public fused beam-step op, routed through the dispatch registry.
+
+``cfg.beam_step == "off"`` means "run the unfused composition" — that
+branch lives in the hot path (``core/search/beam.py``), before dispatch;
+this wrapper only serves concrete fused backends.
+"""
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelConfig
+
+
+def beam_step(codes, luts, cand_ids, cand_d, new_ids, *,
+              cfg: KernelConfig | None = None):
+    """[nq, E, M] codes x [nq, M, K] LUTs merged into ([nq, L] ids/dists)
+    -> (cand_ids', cand_d', top_idx)."""
+    return dispatch.beam_step(codes, luts, cand_ids, cand_d, new_ids, cfg)

@@ -8,8 +8,13 @@ for gathers but have a systolic MXU, so we re-express the lookup as
 Tiling: grid over row-blocks of BN codes. Per step the kernel holds in VMEM:
   codes block [BN, M] int32          (BN*M*4 B)
   lut         [M, K]  f32            (M*K*4 B; K=256, M<=64 -> <=64 KiB)
-  one-hot     [BN, M*K] f32          (BN=128, M=32 -> 4 MiB, the VMEM budget)
+  one-hot     [BN, M*K] f32          (the dominant term)
   out block   [BN]    f32
+
+BN is CHOSEN PER SHAPE by the roofline tile planner (launch/roofline.py):
+fewest grid steps subject to the one-hot tile fitting VMEM_TILE_BUDGET.
+A fixed BN=128 spent 32 launches on n=4096, m=8 where BN=512 needs 8 —
+launch overhead dominated the interpreted bench (6181 µs vs 765 ref).
 """
 import functools
 
@@ -17,7 +22,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BN = 128  # rows per grid step — sized so the one-hot tile fits VMEM
+from repro.launch import roofline
+
+BN = 128  # row-block floor (the planner's smallest candidate)
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_bn(n: int, m: int, k: int) -> int:
+    """Rows per grid step for an [n, M] x [M, K] ADC. Static per shape."""
+    return roofline.choose_tile(
+        n, (BN, 256, 512, 1024),
+        lambda bn: (bn * m + m * k + bn * m * k + bn) * 4)
 
 
 def _kernel(codes_ref, lut_ref, out_ref):
@@ -40,16 +55,17 @@ def pq_adc_pallas(codes: jnp.ndarray, lut: jnp.ndarray,
     n, m = codes.shape
     mk, k = lut.shape
     assert mk == m
-    pad = (-n) % BN
+    bn = _plan_bn(n, m, k)
+    pad = (-n) % bn
     codes_p = jnp.pad(codes.astype(jnp.int32), ((0, pad), (0, 0)))
     out = pl.pallas_call(
         _kernel,
-        grid=((n + pad) // BN,),
+        grid=((n + pad) // bn,),
         in_specs=[
-            pl.BlockSpec((BN, m), lambda i: (i, 0)),
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
             pl.BlockSpec((m, k), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((BN,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct(((n + pad),), jnp.float32),
         interpret=interpret,
     )(codes_p, lut.astype(jnp.float32))
@@ -80,16 +96,17 @@ def pq_adc_batched_pallas(codes: jnp.ndarray, luts: jnp.ndarray,
     nq, n, m = codes.shape
     nq2, m2, k = luts.shape
     assert nq == nq2 and m == m2
-    pad = (-n) % BN
+    bn = _plan_bn(n, m, k)
+    pad = (-n) % bn
     codes_p = jnp.pad(codes.astype(jnp.int32), ((0, 0), (0, pad), (0, 0)))
     out = pl.pallas_call(
         _kernel_batched,
-        grid=(nq, (n + pad) // BN),
+        grid=(nq, (n + pad) // bn),
         in_specs=[
-            pl.BlockSpec((1, BN, m), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bn, m), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, m, k), lambda i, j: (i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, BN), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((1, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nq, n + pad), jnp.float32),
         interpret=interpret,
     )(codes_p, luts.astype(jnp.float32))

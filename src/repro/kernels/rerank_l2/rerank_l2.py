@@ -3,9 +3,14 @@
 ||q - x||^2 = ||q||^2 + ||x||^2 - 2 q.x : the cross term is a matmul, so the
 re-ranking phase (§3.4 phase 2) rides the systolic array instead of the VPU.
 
-Tiling: grid (Q-blocks, C-blocks); D is padded to a 128 multiple in ops so
-tiles are MXU-aligned. Per step VMEM holds q [BQ, D], x [BC, D], out [BQ, BC]
-(BQ=8, BC=128, D<=4096 -> ~2.2 MiB f32).
+Tiling: grid (Q-blocks, C-blocks); D is padded to a 128 multiple so tiles
+are MXU-aligned. Block sizes are CHOSEN PER SHAPE by the roofline tile
+planner (launch/roofline.py): the old fixed (BQ=8, BC=128) paid a measured
+cliff on non-tile-aligned candidate counts — q=32;c=130;d=64 padded 130 ->
+256 across 8 grid steps (1748 µs vs 308 ref, BENCH_kernels.json) — where
+the planner covers the same problem in ONE step (bq=32, bc=256) well under
+the VMEM budget. Per step VMEM holds q [bq, D], x [bq, bc, D], out
+[bq, bc]; the planner caps the working set at VMEM_TILE_BUDGET (8 MiB).
 """
 import functools
 
@@ -13,8 +18,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BQ = 8
+from repro.launch import roofline
+
+BQ = 8      # tile floors (the planner's smallest candidates)
 BC = 128
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_tiles(qn: int, c: int, d: int) -> tuple[int, int]:
+    """(bq, bc) for a [qn, c, d] rerank: fewest grid steps, then least
+    padded work, subject to the per-step VMEM budget (roofline.choose_tile
+    on the candidate axis first — it sets the padded-work floor — then the
+    query axis given that choice). Static per shape: runs at trace time."""
+    dp = d + (-d) % 128
+    def vmem(bq, bc):
+        return (bq * dp + bq * bc * dp + bq * bc) * 4
+    bc = roofline.choose_tile(c, (BC, 256, 512, 1024),
+                              lambda t: vmem(BQ, t))
+    bq = roofline.choose_tile(qn, (BQ, 16, 32, 64),
+                              lambda t: vmem(t, bc))
+    return bq, bc
 
 
 def _kernel(q_ref, x_ref, out_ref):
@@ -44,18 +67,19 @@ def rerank_l2_pallas(queries: jnp.ndarray, cands: jnp.ndarray,
     qn, d = queries.shape
     qn2, c, d2 = cands.shape
     assert qn == qn2 and d == d2
+    bq, bc = _plan_tiles(qn, c, d)
     dp = (-d) % 128
-    qp, cp = (-qn) % BQ, (-c) % BC
+    qp, cp = (-qn) % bq, (-c) % bc
     q_pad = jnp.pad(queries.astype(jnp.float32), ((0, qp), (0, dp)))
     x_pad = jnp.pad(cands.astype(jnp.float32), ((0, qp), (0, cp), (0, dp)))
     out = pl.pallas_call(
         _kernel_grouped,
-        grid=((qn + qp) // BQ, (c + cp) // BC),
+        grid=((qn + qp) // bq, (c + cp) // bc),
         in_specs=[
-            pl.BlockSpec((BQ, d + dp), lambda i, j: (i, 0)),
-            pl.BlockSpec((BQ, BC, d + dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bq, d + dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, bc, d + dp), lambda i, j: (i, j, 0)),
         ],
-        out_specs=pl.BlockSpec((BQ, BC), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qn + qp, c + cp), jnp.float32),
         interpret=interpret,
     )(q_pad, x_pad)

@@ -165,6 +165,98 @@ def combine(parts: list[tuple["RooflineTerms", float]]) -> RooflineTerms:
     return t
 
 
+# --------------------------------------------------------------------------
+# Kernel-tier roofline: per-op byte/FLOP tables + block-size selection.
+#
+# The search-path kernels (repro/kernels/*) are tiled by BlockSpec; the tile
+# sizes used to be hard-coded module constants (BN=128, BQ=8/BC=128), which
+# loses twice: non-tile-aligned shapes pay up to 2x padded work (the
+# rerank_l2 c=130 cliff in BENCH_kernels.json), and small problems pay one
+# grid-step launch per 128 rows when the whole problem fits VMEM. The
+# chooser below prices a candidate tiling with the same roofline terms used
+# for the training dry-runs — per-step time = max(compute, memory) plus a
+# per-step launch overhead — and picks the cheapest tiling whose per-step
+# working set fits the VMEM budget. Fewer grid steps = fewer HBM round
+# trips; that is the same lesson the fused beam_step kernel applies across
+# ops (docs/KERNELS.md).
+
+VMEM_BYTES = 16 * 2**20        # per-core VMEM (v5e-class)
+VMEM_TILE_BUDGET = 8 * 2**20   # per-step working-set cap (double-buffer headroom)
+KERNEL_LAUNCH_US = 1.0         # per-grid-step dispatch/orchestration overhead
+
+
+def _adc_terms(rows: float, m: float, k: float) -> tuple[float, float]:
+    # One-hot x LUT matmul formulation: 2*rows*M*K MAC FLOPs; bytes = codes
+    # (u8) + LUT (f32, read once per tile) + distances out (f32).
+    return 2.0 * rows * m * k, rows * m + m * k * 4 + rows * 4
+
+
+# op name -> dims dict -> (flops, hbm_bytes). These are the MEASURED-shape
+# tables the autotuner and the tile chooser price from; dims mirror the
+# size strings in BENCH_kernels.json.
+KERNEL_OP_TABLES = {
+    "pq_adc": lambda n, m, k=256, **_: _adc_terms(n, m, k),
+    "pq_adc_batched": lambda nq, n, m, k=256, **_: tuple(
+        nq * t for t in _adc_terms(n, m, k)),
+    # EF decode: [B, R, nbits] rank-compare dominates; nbits <= 3R+1 bits of
+    # high-part bitmap, slots are W=ceil(total/32) u32 words per list.
+    "ef_decode": lambda lists, r, w=0, **_: (
+        lists * r * (3 * r + 1) * 2.0,
+        lists * (w or (3 * r + 1 + 31) // 32) * 4 + lists * (r + 1) * 4),
+    "rerank_l2": lambda q, c, d, **_: (
+        2.0 * q * c * d + 3.0 * q * c,
+        q * d * 4 + q * c * d * 4 + q * c * 4),
+    "byteplane": lambda n, v, **_: (n * v * 1.0, 2 * n * v + v),
+    # Fused beam step: per query, ADC over E gathered codes + the stable
+    # rank merge of (L + E) candidates ((L+E)^2 compares, 2 passes).
+    "beam_step": lambda nq, e, l, m, k=256, **_: (
+        nq * (_adc_terms(e, m, k)[0] + 2.0 * (l + e) ** 2),
+        nq * (_adc_terms(e, m, k)[1] + (l + e) * 8 + l * 12)),
+}
+
+
+def op_roofline(op: str, **dims) -> RooflineTerms:
+    """Roofline terms for one kernel-tier op at the given shape (the
+    byte/FLOP tables above). Unknown ops raise — a silent zero would make
+    the autotuner's fallback pricing lie."""
+    if op not in KERNEL_OP_TABLES:
+        raise ValueError(f"no roofline table for kernel op {op!r}; "
+                         f"expected {tuple(KERNEL_OP_TABLES)}")
+    flops, nbytes = KERNEL_OP_TABLES[op](**dims)
+    return RooflineTerms(flops=float(flops), bytes_accessed=float(nbytes),
+                         coll_bytes=0.0)
+
+
+def op_time_us(op: str, steps: int = 1, **dims) -> float:
+    """Roofline lower-bound time (µs) for ``steps`` grid steps each doing
+    the per-tile work described by ``dims``: max(compute, memory) per step
+    plus the per-step launch overhead. This is the objective the tile
+    chooser minimises and the price the ``auto-tuned`` fallback uses when a
+    shape bucket has no measurement."""
+    t = op_roofline(op, **dims)
+    return steps * (max(t.compute_s, t.memory_s) * 1e6 + KERNEL_LAUNCH_US)
+
+
+def choose_tile(total: int, candidates, vmem_bytes_of,
+                budget: int = VMEM_TILE_BUDGET) -> int:
+    """Pick a 1-D block size covering ``total`` rows: cheapest by
+    (grid steps, padded rows) among candidates whose per-step working set
+    (``vmem_bytes_of(tile)``) fits the budget. Steps dominate the objective
+    because each grid step is an HBM round trip for its tile (and, in
+    interpret mode, a Python-level kernel invocation); padded rows break
+    ties toward less wasted work. Deterministic: ties resolve to the
+    smaller tile. Falls back to the smallest candidate when nothing fits
+    (the kernel still runs, just under-buffered)."""
+    fits = [int(t) for t in sorted(set(candidates))
+            if vmem_bytes_of(int(t)) <= budget]
+    if not fits:
+        return int(min(candidates))
+    def cost(t):
+        steps = -(-total // t)
+        return (steps, steps * t, t)
+    return min(fits, key=cost)
+
+
 def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
     """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference forward)."""
     per_tok = 6 if kind == "train" else 2

@@ -45,7 +45,8 @@ from repro.core.codec import elias_fano as ef
 from repro.core.distributed.sharded_index import ShardedIndex
 from repro.core.search.beam import (DeviceIndex, SearchParams,
                                     resolve_kernels, search)
-from repro.core.search.engine import (T_IO, compute_costs, manifest_dec_costs,
+from repro.core.search.engine import (T_IO, beam_compute_costs,
+                                      compute_costs, manifest_dec_costs,
                                       merge_topk)
 from repro.core.storage.blockstore import BlockStore, LRUCache
 from repro.core.update.consistency import SnapshotHandle, memtable_topk
@@ -151,8 +152,8 @@ class BatchedSearcher:
         # Decompressions split per tier: graph-list decode prices at the
         # ef_decode backend, vector-record decode at the byteplane backend —
         # and, with a planner manifest, at each tier's RESOLVED codec cost.
-        self._t_pq, self._t_ex, self._t_dec_ix = compute_costs(
-            p.kernels.pq_adc, p.kernels.rerank_l2, p.kernels.ef_decode)
+        self._t_pq, self._t_ex = beam_compute_costs(p.kernels)
+        *_, self._t_dec_ix = compute_costs(dec_backend=p.kernels.ef_decode)
         *_, self._t_dec_vec = compute_costs(dec_backend=p.kernels.byteplane)
         if cfg.manifest is not None:
             self._t_dec_ix, _ = manifest_dec_costs(cfg.manifest,

@@ -24,9 +24,10 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-REF = KernelConfig("ref", "ref", "ref", "ref")
+REF = KernelConfig("ref", "ref", "ref", "ref", "ref")
 PAL = KernelConfig("pallas-interpret", "pallas-interpret",
-                   "pallas-interpret", "pallas-interpret")
+                   "pallas-interpret", "pallas-interpret",
+                   "pallas-interpret")
 
 
 def hypothesize(n_fallback=8, **bounds):
@@ -217,6 +218,88 @@ def test_byteplane_in_vector_store_load():
     np.testing.assert_array_equal(got_pal, vecs[3:200])
 
 
+# --------------------------------------------------------------- beam_step
+# The fused hop kernel must be BIT-IDENTICAL on ids/top_idx to the unfused
+# composition (jax.lax.top_k tie-breaking included) — fusion is an execution
+# plan change, never an algorithm change.
+
+def _beam_step_case(nq, e, l_size, m, seed, mask_p=0.85, ties=False):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 256, (nq, e, m), dtype=np.uint8))
+    luts = rng.normal(size=(nq, m, 256)).astype(np.float32)
+    if ties:   # quantize hard so merged distances collide constantly
+        luts = np.round(luts)
+    luts = jnp.asarray(luts)
+    cand_d = np.sort(rng.normal(size=(nq, l_size)).astype(np.float32) ** 2, 1)
+    if ties:
+        cand_d = np.round(cand_d * 2) / 2
+    cand_ids = rng.integers(0, 10**6, (nq, l_size)).astype(np.int32)
+    new_ids = np.where(rng.random((nq, e)) < mask_p,
+                       rng.integers(0, 10**6, (nq, e)), -1).astype(np.int32)
+    return (codes, luts, jnp.asarray(cand_ids), jnp.asarray(cand_d),
+            jnp.asarray(new_ids))
+
+
+@pytest.mark.parametrize("nq,e,l_size,m",
+                         [(1, 1, 1, 1), (3, 5, 4, 8), (7, 130, 48, 4),
+                          (2, 17, 10, 16), (8, 64, 32, 8)])
+def test_beam_step_conformance(nq, e, l_size, m):
+    """Ragged (nq, E, L, M) off every tile boundary: ids and the top_idx
+    permutation exactly equal; distances to float tolerance."""
+    args = _beam_step_case(nq, e, l_size, m, seed=nq * 1000 + e)
+    ids_p, d_p, ix_p = dispatch.beam_step(*args, PAL)
+    ids_r, d_r, ix_r = dispatch.beam_step(*args, REF)
+    np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_r))
+    np.testing.assert_array_equal(np.asarray(ix_p), np.asarray(ix_r))
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_r),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_beam_step_ties_bit_identical():
+    """Massive distance collisions: the fused stable-rank select must
+    reproduce lax.top_k's lower-index-wins tie-break exactly."""
+    args = _beam_step_case(4, 40, 16, 4, seed=7, ties=True)
+    ids_p, _, ix_p = dispatch.beam_step(*args, PAL)
+    ids_r, _, ix_r = dispatch.beam_step(*args, REF)
+    np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_r))
+    np.testing.assert_array_equal(np.asarray(ix_p), np.asarray(ix_r))
+
+
+def test_beam_step_all_masked():
+    """Every new id masked (-1): the candidate list passes through
+    unchanged and top_idx is the identity permutation."""
+    args = _beam_step_case(3, 12, 8, 8, seed=11, mask_p=0.0)
+    for cfg in (REF, PAL):
+        ids, d, ix = dispatch.beam_step(*args, cfg)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(args[2]))
+        np.testing.assert_allclose(np.asarray(d), np.asarray(args[3]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(ix),
+                                      np.tile(np.arange(8), (3, 1)))
+
+
+def test_beam_step_matches_unfused_composition():
+    """The fused op == pq_adc_batched + mask + concat + top_k, bit-for-bit
+    on ids (the guarantee the hot path's beam_step branch relies on)."""
+    codes, luts, cand_ids, cand_d, new_ids = _beam_step_case(
+        5, 33, 20, 8, seed=23)
+    import jax
+    d = dispatch.pq_adc_batched(codes, luts, REF)
+    new_d = jnp.where(new_ids >= 0, d, jnp.inf)
+    merged_ids = jnp.concatenate([cand_ids, new_ids], 1)
+    merged_d = jnp.concatenate([cand_d, new_d], 1)
+    top_d, top_i = jax.lax.top_k(-merged_d, 20)
+    want_ids = jnp.take_along_axis(merged_ids, top_i, 1)
+    for cfg in (REF, PAL):
+        got_ids, got_d, got_ix = dispatch.beam_step(
+            codes, luts, cand_ids, cand_d, new_ids, cfg)
+        np.testing.assert_array_equal(np.asarray(got_ids),
+                                      np.asarray(want_ids))
+        np.testing.assert_array_equal(np.asarray(got_ix), np.asarray(top_i))
+        np.testing.assert_allclose(np.asarray(got_d), np.asarray(-top_d),
+                                   rtol=1e-5, atol=1e-4)
+
+
 # ---------------------------------------------------------- dispatch layer
 def test_resolution_rules():
     assert resolve_backend("auto", "tpu") == "pallas"
@@ -227,16 +310,39 @@ def test_resolution_rules():
     assert resolve_backend("pallas-interpret", "tpu") == "pallas-interpret"
     with pytest.raises(ValueError):
         resolve_backend("mxu", "tpu")
-    cfg = KernelConfig("pallas", "auto", "ref", "auto").resolve("cpu")
-    assert cfg == KernelConfig("pallas-interpret", "ref", "ref", "ref")
+    cfg = KernelConfig("pallas", "auto", "ref", "auto", "off").resolve("cpu")
+    assert cfg == KernelConfig("pallas-interpret", "ref", "ref", "ref",
+                               "off")
     assert cfg.resolve("cpu") == cfg                   # idempotent
+
+
+def test_auto_gating_rules():
+    """byteplane pallas loses its own bench (452 vs 117 µs): plain 'auto'
+    must resolve it to ref on EVERY platform, while ungated ops keep the
+    platform rule. 'off' is a fixed point for beam_step and an error
+    elsewhere."""
+    assert resolve_backend("auto", "tpu", op="byteplane") == "ref"
+    assert resolve_backend("auto", "cpu", op="byteplane") == "ref"
+    assert resolve_backend("auto", "tpu", op="pq_adc") == "pallas"
+    assert resolve_backend("auto", "tpu", op="beam_step") == "pallas"
+    assert resolve_backend("off", "tpu", op="beam_step") == "off"
+    assert resolve_backend("off", "cpu", op="beam_step") == "off"
+    with pytest.raises(ValueError, match="beam_step"):
+        resolve_backend("off", "cpu", op="pq_adc")
+    auto = KernelConfig().resolve("tpu")
+    assert auto.byteplane == "ref" and auto.pq_adc == "pallas"
 
 
 def test_unresolved_auto_raises():
     """'auto' leaking past config time is the bug this layer exists to
-    prevent — dispatch must refuse it loudly."""
+    prevent — dispatch must refuse it loudly. 'off' reaching dispatch means
+    the hot path forgot to branch before calling it."""
     with pytest.raises(RuntimeError, match="config time"):
         get_impl("pq_adc", "auto")
+    with pytest.raises(RuntimeError, match="config time"):
+        get_impl("beam_step", "auto-tuned")
+    with pytest.raises(RuntimeError, match="branch"):
+        get_impl("beam_step", "off")
     with pytest.raises(KeyError):
         get_impl("pq_adc", "nonsense")
 

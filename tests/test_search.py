@@ -10,9 +10,13 @@ from repro.core.search.beam import SearchParams, search
 from repro.kernels.dispatch import KernelConfig
 from repro.data.synthetic import ground_truth, make_queries, make_vector_dataset
 
-CFG_REF = KernelConfig("ref", "ref", "ref", "ref")
+# The unfused jnp baseline: beam_step="off" keeps the pre-fusion hot path.
+CFG_REF = KernelConfig("ref", "ref", "ref", "ref", "off")
+# The fused hop under the jnp backend: identical math, one call per hop.
+CFG_FUSED = KernelConfig("ref", "ref", "ref", "ref", "ref")
 # Config-time resolution: on CPU this degrades to pallas-interpret.
-CFG_PALLAS = KernelConfig("pallas", "pallas", "pallas", "pallas").resolve()
+CFG_PALLAS = KernelConfig("pallas", "pallas", "pallas", "pallas",
+                          "pallas").resolve()
 
 
 @pytest.fixture(scope="module")
@@ -129,10 +133,32 @@ def test_golden_recall_regression(small_index):
             f"recall@10 = {rec} < golden {GOLDEN_RECALL_AT_10} under {cfg}"
 
 
+@pytest.mark.parametrize("nq", [1, 7, 32])
+def test_fused_beam_step_identical_to_unfused(small_index, nq):
+    """The TENTPOLE contract at the search level: the fused beam-step hop
+    (beam_step='ref'/'pallas-interpret') returns BIT-IDENTICAL ids,
+    distances and traversal stats to the unfused composition
+    (beam_step='off') at B in {1, 7, 32} — ragged batch buckets included.
+    Fusion changes the execution plan, never the result."""
+    vecs, index, graph, queries, gt = small_index
+    ids_off, d_off, st_off = search(index, queries[:nq],
+                                    _params(index, kernels=CFG_REF))
+    for cfg in (CFG_FUSED, CFG_PALLAS):
+        ids_f, d_f, st_f = search(index, queries[:nq],
+                                  _params(index, kernels=cfg))
+        np.testing.assert_array_equal(np.asarray(ids_off), np.asarray(ids_f))
+        np.testing.assert_allclose(np.asarray(d_off), np.asarray(d_f),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(st_off.iters),
+                                      np.asarray(st_f.iters))
+
+
 def test_unresolved_pallas_config_degrades_off_tpu(small_index):
     """A caller passing a RAW KernelConfig('pallas', ...) without calling
     .resolve() must still work on CPU: resolve_kernels always resolves, so
-    the request degrades to the interpreter instead of crashing."""
+    the request degrades to the interpreter instead of crashing. The
+    beam_step field defaults to 'auto' here -> 'ref' on CPU, i.e. the
+    FUSED jnp hop — ids must still match the unfused baseline exactly."""
     vecs, index, graph, queries, gt = small_index
     raw = KernelConfig("pallas", "pallas", "pallas", "pallas")
     ids, _, _ = search(index, queries[:2], _params(index, kernels=raw))

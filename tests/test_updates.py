@@ -287,9 +287,10 @@ def test_live_snapshot_backend_equivalence(streaming):
     base = SearchParams(l_size=32, k=5, r_max=16,
                         universe=snap.index_store.universe,
                         benefit_threshold=0.0, filter_tombstones=True)
-    ref = KernelConfig("ref", "ref", "ref", "ref")
+    ref = KernelConfig("ref", "ref", "ref", "ref", "off")
     pal = KernelConfig("pallas-interpret", "pallas-interpret",
-                       "pallas-interpret", "pallas-interpret")
+                       "pallas-interpret", "pallas-interpret",
+                       "pallas-interpret")
     ids_r, d_r = snapshot_search(snap, queries, base._replace(kernels=ref))
     ids_p, d_p = snapshot_search(snap, queries, base._replace(kernels=pal))
     assert np.array_equal(ids_r, ids_p)
