@@ -1,8 +1,11 @@
 """Exp#3/#4 (Fig. 7/8): search throughput & latency vs recall frontier.
 
-Sweeps the candidate list size L for DiskANN, PipeANN and DecoupleVS and
-reports (recall@10, modeled QPS, modeled mean latency) per point — the
-paper's accuracy/throughput frontier, in I/O-model units.
+Sweeps the candidate list size L for DiskANN, PipeANN, DecoupleVS and
+DecoupleVS over a minla-reordered index store, and reports (recall@10,
+modeled QPS, modeled mean latency, blocks/hop) per point — the paper's
+accuracy/throughput frontier, in I/O-model units. The reorder arm must sit
+ON the DecoupleVS frontier (permutation invariance: same ids, same recall)
+while touching fewer distinct 4 KiB index blocks per beam hop.
 
 The ``--batch`` axis (also swept by ``main``) pushes the same query set
 through the batched device serving path (`repro.serve.ann.BatchedSearcher`)
@@ -18,18 +21,37 @@ from repro.core.index import device_index_from_artifacts, recall_at_k
 from repro.core.search.beam import SearchParams
 from repro.core.search.engine import (EngineConfig, search_colocated,
                                       search_decoupled)
+from repro.core.storage.index_store import CompressedIndexStore
 from repro.serve.ann import BatchedSearcher, ServeConfig
 
-from .common import csv, reset_io, world
+from .common import CACHE_BYTES, R, csv, reset_io, world
 
 L_SWEEP = (24, 48, 96, 160)
 BATCH_SWEEP = (1, 8, 32)
+
+_ORDERED_IX = {}
+
+
+def _ordered_ix(w):
+    """The minla-relabeled index store for a world, built once (the seal
+    path computes the ordering; the engine un-maps at the API boundary)."""
+    if w["kind"] not in _ORDERED_IX:
+        g = w["graph"]
+        _ORDERED_IX[w["kind"]] = CompressedIndexStore.from_graph(
+            g.adjacency, g.medoid, R, cache_bytes=CACHE_BYTES,
+            order="minla")
+    return _ORDERED_IX[w["kind"]]
 
 
 def _frontier(w, system: str):
     pts = []
     for l in L_SWEEP:
         reset_io(w)
+        if system == "decouplevs_reorder":
+            ix = _ordered_ix(w)
+            ix.io.reads = ix.io.read_bytes = 0
+            ix.cache.reset_stats()
+            ix.cache._d.clear()
         ids_all, stats = [], []
         for q in w["queries"]:
             if system in ("diskann", "pipeann"):
@@ -39,7 +61,9 @@ def _frontier(w, system: str):
             else:
                 cfg = EngineConfig(l_size=l, latency_aware=True,
                                    compressed=True)
-                ids, st = search_decoupled(w["comp_ix"], w["vs"], w["codes"],
+                ix = _ordered_ix(w) if system == "decouplevs_reorder" \
+                    else w["comp_ix"]
+                ids, st = search_decoupled(ix, w["vs"], w["codes"],
                                            w["cb"], q, cfg)
             ids_all.append(np.pad(ids, (0, 10 - len(ids)),
                                   constant_values=-1))
@@ -48,7 +72,9 @@ def _frontier(w, system: str):
         p99 = float(np.percentile([s.latency_us for s in stats], 99))
         rec = recall_at_k(np.stack(ids_all), w["gt"], 10)
         pts.append(dict(l=l, recall=rec, latency_us=lat, p99_us=p99,
-                        qps=1e6 / lat))
+                        qps=1e6 / lat,
+                        blocks_per_hop=float(
+                            np.mean([s.blocks_per_hop for s in stats]))))
     return pts
 
 
@@ -80,15 +106,29 @@ def _batched_serving(w, batches):
 def main(quiet=False, batches=BATCH_SWEEP):
     w = world("sift-like")
     out = {}
-    for system in ("diskann", "pipeann", "decouplevs"):
+    for system in ("diskann", "pipeann", "decouplevs",
+                   "decouplevs_reorder"):
         t0 = time.time()
         pts = _frontier(w, system)
         us = (time.time() - t0) * 1e6 / (len(L_SWEEP) * len(w["queries"]))
         frontier = ";".join(f"L{p['l']}:r={p['recall']:.3f}:"
-                            f"qps={p['qps']:.0f}:p99={p['p99_us']:.0f}"
+                            f"qps={p['qps']:.0f}:p99={p['p99_us']:.0f}:"
+                            f"bph={p['blocks_per_hop']:.2f}"
                             for p in pts)
         csv(f"exp3/{system}", us, frontier)
         out[system] = pts
+    # The reorder arm's contract: equal recall at every L (permutation
+    # invariance through the engine) with fewer index blocks per hop.
+    for base, re_ in zip(out["decouplevs"], out["decouplevs_reorder"]):
+        assert re_["recall"] == base["recall"], \
+            (re_["l"], re_["recall"], base["recall"])
+    mean_base = float(np.mean([p["blocks_per_hop"]
+                               for p in out["decouplevs"]]))
+    mean_re = float(np.mean([p["blocks_per_hop"]
+                             for p in out["decouplevs_reorder"]]))
+    csv("exp3/reorder_locality", 0.0,
+        f"blocks_per_hop={mean_base:.2f}->{mean_re:.2f};"
+        f"equal_recall_at_all_L=true")
     # Exp#9 (appendix): P99 tail latency at the mid-recall operating point
     for system, pts in out.items():
         mid = pts[len(pts) // 2]

@@ -15,6 +15,14 @@ the SAME BlockStore/codec-registry stack:
                        chunks), selects the winning codec per component
                        (``codec.registry.plan_components``), and the stores
                        are built from the persisted ``StorageManifest``;
+- ``planner_reorder``— the planner over a locality-relabeled graph
+                       (``core/graph/reorder.py``, the ``minla`` ordering:
+                       BFS seeded + median-sweep refinement against actual
+                       record bytes): per-list spans collapse, the
+                       per-record-optimal Elias-Fano split and the gap
+                       codecs (delta_varint / ans_id) both get cheaper, and
+                       the permutation itself is planned and charged to the
+                       metadata budget (§3.3 beta) next to the sparse index;
 - ``spann_like``     — modeled 8x posting-list replication baseline.
 
 Paper claims to match: up to 58.7% total saving vs DiskANN; delta helps
@@ -32,6 +40,7 @@ import numpy as np
 
 from repro.core.codec import elias_fano as ef
 from repro.core.codec import registry as codecs
+from repro.core.graph import reorder as reorderlib
 from repro.core.search.engine import (EngineConfig, manifest_dec_costs,
                                       search_decoupled)
 from repro.core.storage.index_store import CompressedIndexStore
@@ -81,12 +90,12 @@ def fixed_manifest(ix_codec: str, vec_codec: str) -> StorageManifest:
 
 
 def build_decoupled(w, *, ix_codec: str, store_cfg: StoreConfig,
-                    manifest=None):
+                    manifest=None, order=None):
     """One decoupled arm: vector store + index store under the given codecs
     -> per-component byte breakdown + manifest-priced modeled latency
     (engine.py T_DEC comes from each tier's RESOLVED codec, not a flat
     per-arm constant; fixed arms get a degenerate manifest of their own
-    codecs)."""
+    codecs). ``order`` seals the index store under a locality relabel."""
     if manifest is None:
         manifest = fixed_manifest(ix_codec, store_cfg.resolved_codec)
     vecs, graph = w["vecs"], w["graph"]
@@ -95,11 +104,11 @@ def build_decoupled(w, *, ix_codec: str, store_cfg: StoreConfig,
     vs.seal_active()
     ix = CompressedIndexStore.from_graph(graph.adjacency, graph.medoid, R,
                                          codec=ix_codec,
-                                         cache_bytes=64 << 10)
+                                         cache_bytes=64 << 10, order=order)
     cfg = EngineConfig(l_size=48, latency_aware=True, compressed=True,
                        manifest=manifest)
-    lat = [search_decoupled(ix, vs, w["codes"], w["cb"], q, cfg)[1].latency_us
-           for q in w["queries"][:N_LAT_QUERIES]]
+    stats = [search_decoupled(ix, vs, w["codes"], w["cb"], q, cfg)[1]
+             for q in w["queries"][:N_LAT_QUERIES]]
     t_dec_ix, t_dec_vec = manifest_dec_costs(manifest)
     return dict(
         vector_chunks=vs.physical_bytes,
@@ -107,7 +116,8 @@ def build_decoupled(w, *, ix_codec: str, store_cfg: StoreConfig,
         total=vs.physical_bytes + ix.physical_bytes,
         metadata=vs.metadata_bytes + ix.sparse_index_bytes,
         ix_codec=ix_codec, vector_codec=store_cfg.resolved_codec,
-        modeled_latency_us=float(np.mean(lat)),
+        modeled_latency_us=float(np.mean([s.latency_us for s in stats])),
+        blocks_per_hop=float(np.mean([s.blocks_per_hop for s in stats])),
         t_dec_index_us=t_dec_ix, t_dec_vector_us=t_dec_vec)
 
 
@@ -134,6 +144,36 @@ def run_kind(kind: str, rng) -> dict:
         w, ix_codec=manifest.codec_for("adjacency", "elias_fano"),
         store_cfg=base_cfg.from_manifest(manifest), manifest=manifest)
 
+    # Planner over the locality-relabeled graph: sample in INTERNAL id
+    # space (what the sealed records actually hold). The permutation is a
+    # planned component too, charged to the METADATA budget: like the
+    # sparse block index it is a per-store in-memory mapping table (§3.3's
+    # beta term), not block-resident payload.
+    graph = w["graph"]
+    order = reorderlib.compute_order(graph.adjacency, graph.medoid,
+                                     kind="minla")
+    relabeled = reorderlib.apply_order(graph.adjacency, order)
+    samples_re = component_samples(w, rng)
+    sel = rng.choice(len(relabeled), size=min(len(relabeled), 1024),
+                     replace=False)
+    samples_re["adjacency"] = [relabeled[int(i)] for i in sel]
+    samples_re["permutation"] = [order.perm.astype(np.uint64)]
+    manifest_re = codecs.plan_components(samples_re,
+                                         universe=len(w["vecs"]),
+                                         itemsize=dtype.itemsize,
+                                         sample_limit=1024, reorder="minla")
+    arms["planner_reorder"] = build_decoupled(
+        w, ix_codec=manifest_re.codec_for("adjacency", "elias_fano"),
+        store_cfg=base_cfg.from_manifest(manifest_re), manifest=manifest_re,
+        order=order)
+    perm_bytes = manifest_re.components["permutation"].est_bytes
+    arms["planner_reorder"]["permutation"] = int(perm_bytes)
+    arms["planner_reorder"]["metadata"] += int(perm_bytes)
+    arms["planner_reorder"]["gap_bits_before"] = float(
+        reorderlib.gap_bits(graph.adjacency))
+    arms["planner_reorder"]["gap_bits_after"] = float(
+        reorderlib.gap_bits(relabeled))
+
     spann = spann_like_bytes(w)
     for arm in arms.values():
         arm["saving_vs_colocated"] = 1 - arm["total"] / colo
@@ -143,7 +183,8 @@ def run_kind(kind: str, rng) -> dict:
         block_size=BLOCK_SIZE,
         colocated_bytes=colo, spann_like_bytes=spann,
         arms=arms,
-        manifest=manifest.to_json())
+        manifest=manifest.to_json(),
+        manifest_reorder=manifest_re.to_json())
 
 
 def main(quiet=False):
@@ -166,21 +207,37 @@ def main(quiet=False):
             f"{100*a['planner']['saving_vs_colocated']:.1f}%;"
             f"planner_ix_codec={a['planner']['ix_codec']};"
             f"planner_vec_codec={a['planner']['vector_codec']};"
+            f"reorder_ix_codec={a['planner_reorder']['ix_codec']};"
+            f"reorder_saving_vs_diskann="
+            f"{100*a['planner_reorder']['saving_vs_colocated']:.1f}%;"
+            f"gap_bits={a['planner_reorder']['gap_bits_before']:.2f}"
+            f"->{a['planner_reorder']['gap_bits_after']:.2f};"
+            f"blocks_per_hop={a['planner']['blocks_per_hop']:.2f}"
+            f"->{a['planner_reorder']['blocks_per_hop']:.2f};"
             f"meta_bytes={a['planner']['metadata']}")
     savings = [out[k]["arms"]["planner"]["saving_vs_colocated"] for k in out]
+    re_savings = [out[k]["arms"]["planner_reorder"]["saving_vs_colocated"]
+                  for k in out]
     doc = dict(
         kinds=out,
         suite=dict(
             min_planner_saving=float(np.min(savings)),
             mean_planner_saving=float(np.mean(savings)),
             acceptance_planner_saving_ge=0.40,
-            passed=bool(np.min(savings) >= 0.40)),
+            min_planner_reorder_saving=float(np.min(re_savings)),
+            mean_planner_reorder_saving=float(np.mean(re_savings)),
+            acceptance_reorder_saving_gt=0.405,
+            passed=bool(np.min(savings) >= 0.40
+                        and np.min(re_savings) > 0.405)),
         note=("Per-arm 'total' is vector_chunks + adjacency physical block "
               "bytes; 'metadata' is the in-memory chunk metadata + sparse "
-              "index (the beta budget of section 3.3). The planner arm is "
-              "built from the persisted StorageManifest; its 'candidates' "
-              "tables record every codec estimate per component (the "
-              "planner decision table in docs/STORAGE.md)."))
+              "index (the beta budget of section 3.3), and for the reorder "
+              "arm also the planned permutation table (an in-memory id "
+              "mapping like the sparse index, reported separately under "
+              "'permutation'). The planner arm is built from the persisted "
+              "StorageManifest; its 'candidates' tables record every codec "
+              "estimate per component (the planner decision table in "
+              "docs/STORAGE.md)."))
     path = os.environ.get("REPRO_BENCH_STORAGE_OUT", "BENCH_storage.json")
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)

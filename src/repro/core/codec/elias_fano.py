@@ -63,14 +63,19 @@ class EFList:
         return 32 * (len(self.low_words) + len(self.high_words))
 
 
-def encode(values: np.ndarray, universe: int) -> EFList:
+def encode(values: np.ndarray, universe: int,
+           low_width: int | None = None) -> EFList:
+    """Encode; ``low_width`` overrides the canonical split (the record
+    header stores the width per record, so any 0..32 split decodes)."""
     values = np.asarray(values, dtype=np.uint64)
     n = len(values)
     if n and (np.any(np.diff(values.astype(np.int64)) < 0)):
         raise ValueError("Elias-Fano requires a non-decreasing sequence")
     if n and int(values[-1]) >= universe:
         raise ValueError("value out of universe")
-    l = low_bits_width(n, universe)
+    l = low_bits_width(n, universe) if low_width is None else int(low_width)
+    if not 0 <= l <= 32:
+        raise ValueError(f"low_width {l} outside [0, 32]")
     low = values & np.uint64((1 << l) - 1) if l else np.zeros(n, np.uint64)
     high = (values >> np.uint64(l)).astype(np.int64)
     low_words = pack_fixed(low, l) if l else np.zeros(0, np.uint32)
@@ -99,7 +104,31 @@ def decode(ef: EFList) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # Record: u8 count | u8 low_width | low bytes (ceil(count*lw/8)) | high bytes.
 # Trailing zero bits of the high bitmap are trimmed (decode re-pads), so the
-# record size tracks the true encoded size, not word-rounded slack.
+# record size tracks the true encoded size, not word-rounded slack. The
+# low/high split is chosen PER RECORD: the header already carries the width,
+# so instead of the canonical ``ceil(log2(U/n))`` (a universe-level rule that
+# assumes uniform gaps) each record takes the width minimizing its own byte
+# count. After a locality reorder the per-list spans collapse far below the
+# universe, and the per-record optimum tracks the span — this is where the
+# relabeling actually turns into adjacency-tier bytes.
+
+
+def record_bytes_for_width(n: int, last: int, low_width: int) -> int:
+    """Exact record size (header + low + high) for an n-list whose maximum
+    value is ``last`` under a given split. The high bitmap needs exactly
+    ``n + (last >> low_width)`` bits: the final set bit sits at position
+    ``(n - 1) + (last >> low_width)``."""
+    if n == 0:
+        return 2
+    return (2 + (n * low_width + 7) // 8
+            + (n + (last >> low_width) + 7) // 8)
+
+
+def optimal_low_width(n: int, last: int, universe: int) -> int:
+    """Smallest-record split for one list (ties -> smaller width)."""
+    hi = max(1, min(32, int(max(universe - 1, 1)).bit_length()))
+    return min(range(hi + 1),
+               key=lambda lw: (record_bytes_for_width(n, last, lw), lw))
 
 
 def encode_record(values: np.ndarray, universe: int) -> np.ndarray:
@@ -107,12 +136,16 @@ def encode_record(values: np.ndarray, universe: int) -> np.ndarray:
     n = len(values)
     if n > 255:
         raise ValueError("record format supports <= 255 neighbors")
-    e = encode(values, universe)
-    low_bytes = e.low_words.view(np.uint8)[: (n * e.low_width + 7) // 8]
-    hb_bits = n + (int(values[-1]) >> e.low_width if n else 0) + 1
+    if n == 0:
+        return np.asarray([0, 0], dtype=np.uint8)
+    last = int(values[-1])
+    lw = optimal_low_width(n, last, universe)
+    e = encode(values, universe, low_width=lw)
+    low_bytes = e.low_words.view(np.uint8)[: (n * lw + 7) // 8]
+    hb_bits = n + (last >> lw)
     high_bytes = e.high_words.view(np.uint8)[: (hb_bits + 7) // 8]
     return np.concatenate([
-        np.asarray([n, e.low_width], dtype=np.uint8), low_bytes, high_bytes])
+        np.asarray([n, lw], dtype=np.uint8), low_bytes, high_bytes])
 
 
 def decode_record(rec: np.ndarray, universe: int) -> np.ndarray:

@@ -14,7 +14,9 @@ place that choice is made:
   ``core/storage/blockstore.py``): ``adjacency`` (sorted neighbor-id
   lists), ``ef_slots`` (fixed-size device slot word streams),
   ``pq_codes`` (PQ code rows), ``vector_chunks`` (vector payload byte
-  rows).
+  rows), ``permutation`` (the seal-time reorder tables of
+  ``core/graph/reorder.py`` — NOT monotone, so only order-agnostic
+  codecs apply).
 - :func:`plan_components` — the compression planner: sample each
   component, estimate every applicable codec, select the winner, and emit
   a persisted :class:`~repro.core.storage.layout.StorageManifest` that the
@@ -30,13 +32,15 @@ from __future__ import annotations
 
 import numpy as np
 
+from . import ans
 from . import elias_fano as ef
 from . import huffman, xor_delta
 from .bitpack import pack_fixed, unpack_fixed_np
 
 from ..storage.layout import ComponentPlan, StorageManifest
 
-COMPONENTS = ("adjacency", "ef_slots", "pq_codes", "vector_chunks")
+COMPONENTS = ("adjacency", "ef_slots", "pq_codes", "vector_chunks",
+              "permutation")
 
 _DTYPE_BY_ITEMSIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
 
@@ -118,7 +122,8 @@ class BitpackCodec:
     store cannot implement would silently diverge from the latency model's
     manifest pricing (byte rows rarely pack below 8 bits anyway)."""
     name = "bitpack"
-    components = frozenset({"adjacency", "ef_slots", "pq_codes"})
+    components = frozenset({"adjacency", "ef_slots", "pq_codes",
+                            "permutation"})
 
     def encode(self, values: np.ndarray, *, universe: int | None = None,
                itemsize: int | None = None) -> np.ndarray:
@@ -195,6 +200,103 @@ class EliasFanoCodec:
     def record_bound(r: int, universe: int) -> int:
         """Worst-case record bytes for an R-list (cache entry sizing §3.4)."""
         return ef.worst_case_record_bytes(r, universe)
+
+
+class DeltaVarintCodec:
+    """Gap coding for *dense* sorted id lists: ``u16 n | LEB128 first |
+    LEB128 gaps``. After a locality reorder (``core/graph/reorder.py``)
+    within-list gaps collapse to a few bits, so most gaps fit one varint
+    byte (~n bytes/list) where Elias-Fano still pays its universe-derived
+    low bits + unary high bits. On scattered ids (gap ~ U/R, multi-byte
+    varints) it loses to EF and the planner keeps EF — the arbitration the
+    reorder flips. Encode requires sorted input (like EF, callers sort);
+    ``estimate_bytes`` sorts for the planner's shuffled samples."""
+    name = "delta_varint"
+    components = frozenset({"adjacency"})
+
+    @staticmethod
+    def _leb128_len(x: int) -> int:
+        return max(1, (int(x).bit_length() + 6) // 7)
+
+    def encode(self, values: np.ndarray, *, universe: int | None = None,
+               itemsize: int | None = None) -> np.ndarray:
+        v = _as_uint(values)
+        if len(v) > 1 and bool(np.any(v[1:] < v[:-1])):
+            raise ValueError("delta_varint requires nondecreasing ids")
+        out = list(_u16_header(len(v), "value count"))
+        prev = 0
+        for x in v.tolist():
+            gap = int(x) - prev
+            prev = int(x)
+            while True:
+                byte, gap = gap & 0x7F, gap >> 7
+                out.append(byte | (0x80 if gap else 0))
+                if not gap:
+                    break
+        return np.asarray(out, np.uint8)
+
+    def decode(self, payload: np.ndarray, *, universe: int | None = None,
+               itemsize: int | None = None) -> np.ndarray:
+        payload = np.asarray(payload, np.uint8)
+        n = int(payload[0:2].copy().view(np.uint16)[0])
+        out = np.empty(n, np.uint64)
+        pos, acc = 2, 0
+        for i in range(n):
+            gap, shift = 0, 0
+            while True:
+                byte = int(payload[pos])
+                pos += 1
+                gap |= (byte & 0x7F) << shift
+                shift += 7
+                if not byte & 0x80:
+                    break
+            acc += gap
+            out[i] = acc
+        return out
+
+    def estimate_bytes(self, sample: list, *, universe: int | None = None,
+                       itemsize: int | None = None) -> int:
+        total = 0
+        for rec in sample:
+            v = np.sort(_as_uint(rec))
+            gaps = ([int(v[0])] + np.diff(v).tolist()) if len(v) else []
+            total += 2 + sum(self._leb128_len(g) for g in gaps)
+        return total
+
+    @staticmethod
+    def record_bound(r: int, universe: int) -> int:
+        """Worst-case record bytes for an R-list (cache entry sizing §3.4):
+        every gap at the universe's full varint width."""
+        max_bits = max(1, int(max(universe, 2) - 1).bit_length())
+        return 2 + r * ((max_bits + 6) // 7)
+
+
+class AnsIdCodec:
+    """rANS-entropy-coded gap stream (Severo et al.) — see
+    ``codec/ans.py``. Codes each gap's *bit length* through a parametric
+    12-bit rANS model plus raw extra bits, so on reordered graphs where
+    the gap distribution concentrates it beats both Elias-Fano (pays
+    ceil-log2 universe geometry) and byte-aligned varints (8-bit floor).
+    Sorted-input contract identical to ``delta_varint``."""
+    name = "ans_id"
+    components = frozenset({"adjacency"})
+
+    def encode(self, values: np.ndarray, *, universe: int | None = None,
+               itemsize: int | None = None) -> np.ndarray:
+        return ans.encode_gaps(_as_uint(values))
+
+    def decode(self, payload: np.ndarray, *, universe: int | None = None,
+               itemsize: int | None = None) -> np.ndarray:
+        return ans.decode_gaps(payload)
+
+    def estimate_bytes(self, sample: list, *, universe: int | None = None,
+                       itemsize: int | None = None) -> int:
+        return sum(len(ans.encode_gaps(np.sort(_as_uint(r))))
+                   for r in sample)
+
+    @staticmethod
+    def record_bound(r: int, universe: int) -> int:
+        return ans.record_bound(r, universe)
 
 
 class HuffmanCodec:
@@ -390,7 +492,8 @@ def codecs_for(component: str) -> list:
             if component in c.components]
 
 
-for _codec in (RawCodec(), BitpackCodec(), EliasFanoCodec(), HuffmanCodec(),
+for _codec in (RawCodec(), BitpackCodec(), EliasFanoCodec(),
+               DeltaVarintCodec(), AnsIdCodec(), HuffmanCodec(),
                XorDeltaHuffmanCodec(), PlaneHuffmanCodec()):
     register(_codec)
 
@@ -401,25 +504,39 @@ for _codec in (RawCodec(), BitpackCodec(), EliasFanoCodec(), HuffmanCodec(),
 
 def plan_components(samples: dict, *, universe: int | None = None,
                     itemsize: int | None = None,
-                    sample_limit: int = 512) -> StorageManifest:
+                    sample_limit: int = 512,
+                    reorder: str | None = None) -> StorageManifest:
     """Sample each component, estimate every applicable codec, pick the
     winner -> persisted :class:`StorageManifest`.
 
     ``samples`` maps component name -> list of records (1-D arrays: sorted
     id lists for ``adjacency``, uint32 word streams for ``ef_slots``, uint8
-    rows for ``pq_codes``/``vector_chunks``). ``universe`` bounds id-valued
-    components (required for Elias-Fano to be considered); ``itemsize`` is
-    the vector element width in bytes (enables plane-keyed tables on
-    multi-byte elements). Ties break toward the simpler codec (strictly
+    rows for ``pq_codes``/``vector_chunks``, reorder-table slices for
+    ``permutation``). ``universe`` bounds id-valued components (required
+    for Elias-Fano to be considered); ``itemsize`` is the vector element
+    width in bytes (enables plane-keyed tables on multi-byte elements).
+    ``reorder`` records which seal-time ordering the adjacency samples were
+    relabeled by (``None`` = external-id layout); it is persisted on the
+    manifest so stores built ``from_manifest`` reproduce the layout the
+    plan was priced against. Ties break toward the simpler codec (strictly
     smaller wins; equal sizes keep the alphabetically first).
     """
     plans = {}
     for comp, recs in samples.items():
-        recs = [np.asarray(r) for r in list(recs)[:sample_limit]]
+        recs = list(recs)
+        if len(recs) > sample_limit:
+            # Evenly strided subsample, never a prefix: after a locality
+            # reorder the layout concentrates the densest lists at the low
+            # positions, so a prefix sample is systematically biased toward
+            # whichever codec wins the dense region.
+            keep = np.unique(np.linspace(0, len(recs) - 1, sample_limit)
+                             .round().astype(np.int64))
+            recs = [recs[int(i)] for i in keep]
+        recs = [np.asarray(r) for r in recs]
         # The universe bounds ID-VALUED components only; leaking it into
         # byte components would make RawCodec widen uint8 rows to u32 and
         # inflate the raw baseline the decision table is judged against.
-        uni = universe if comp == "adjacency" else None
+        uni = universe if comp in ("adjacency", "permutation") else None
         candidates = {}
         for codec in codecs_for(comp):
             try:
@@ -433,7 +550,7 @@ def plan_components(samples: dict, *, universe: int | None = None,
             "raw", int(sum(np.asarray(r).nbytes for r in recs)))
         winner = min(sorted(candidates), key=candidates.get)
         params = {}
-        if universe is not None and comp == "adjacency":
+        if universe is not None and comp in ("adjacency", "permutation"):
             params["universe"] = int(universe)
         if itemsize is not None and comp == "vector_chunks":
             params["itemsize"] = int(itemsize)
@@ -441,4 +558,4 @@ def plan_components(samples: dict, *, universe: int | None = None,
             component=comp, codec=winner, raw_bytes=raw_bytes,
             est_bytes=candidates[winner], candidates=candidates,
             params=params)
-    return StorageManifest(components=plans)
+    return StorageManifest(components=plans, reorder=reorder)

@@ -1,1 +1,1 @@
-from . import pq, vamana  # noqa: F401
+from . import pq, reorder, vamana  # noqa: F401

@@ -90,6 +90,8 @@ CODEC_DEC_US = {
     "huffman": 0.20,             # table-driven byte decode (paper Table 3)
     "xor_delta_huffman": 0.25,   # huffman + the XOR un-delta pass
     "plane_huffman": 0.20,       # same LUT decode, table keyed by plane
+    "delta_varint": 0.10,        # byte-aligned LEB128 prefix sums
+    "ans_id": 0.30,              # rANS state walk + extra-bit unpack
 }
 
 
@@ -182,6 +184,8 @@ class QueryStats:
     io_rounds: int = 0              # rounds with >=1 uncached block read
     rerank_batches: int = 0
     latency_us: float = 0.0
+    blocks_per_hop: float = 0.0     # graph block reads / traversal round —
+                                    # the locality metric reordering shrinks
 
 
 @dataclass
@@ -239,7 +243,14 @@ class _CandidateList:
 def _traverse(store_get_neighbors, pq_codes: np.ndarray, lut: np.ndarray,
               medoid: int, cfg: EngineConfig, st: QueryStats,
               colocated_vectors: dict | None = None,
-              store_get_record=None, io=None) -> _CandidateList:
+              store_get_record=None, io=None, store=None) -> _CandidateList:
+    # Stores exposing get_neighbors_batch (CompressedIndexStore) serve each
+    # beam round as ONE batched fetch with block dedup: frontier lists that
+    # share a 4 KiB block cost one read — after locality reordering that is
+    # the common case (blocks-per-hop < beam width). Decode + expansion
+    # accounting per vertex is unchanged either way.
+    batch_fetch = getattr(store, "get_neighbors_batch", None) \
+        if store_get_record is None else None
     cl = _CandidateList(cfg.l_size)
     d0 = float(adc_lookup_np(pq_codes[medoid][None, :], lut)[0])
     st.pq_ops += 1
@@ -253,13 +264,16 @@ def _traverse(store_get_neighbors, pq_codes: np.ndarray, lut: np.ndarray,
             break
         st.traversal_rounds += 1
         reads_before = io.reads if io is not None else 0
+        fetched_lists = batch_fetch(frontier) if batch_fetch is not None \
+            else None
         for vid in frontier:
             cl.expanded.add(vid)
             if store_get_record is not None:             # co-located read
                 vec, nbrs = store_get_record(vid)
                 colocated_vectors[vid] = vec
             else:
-                nbrs = store_get_neighbors(vid)
+                nbrs = fetched_lists[vid] if fetched_lists is not None \
+                    else store_get_neighbors(vid)
                 if cfg.compressed:
                     st.decompressions += 1
                     st.graph_decs += 1
@@ -293,7 +307,8 @@ def search_decoupled(index_store, vector_store, pq_codes: np.ndarray,
     h0 = index_store.cache.hits
     lut = build_lut(query, cb)
     cl = _traverse(index_store.get_neighbors, pq_codes, lut,
-                   index_store.medoid, cfg, st, io=index_store.io)
+                   index_store.medoid, cfg, st, io=index_store.io,
+                   store=index_store)
     K, B = cfg.k, cfg.rerank_batch
     cand = cl.top_ids(cfg.l_size)
 
@@ -340,6 +355,7 @@ def search_decoupled(index_store, vector_store, pq_codes: np.ndarray,
     st.graph_ios = io1["reads"] - io0["reads"]
     st.vector_ios = vio1["reads"] - vio0["reads"]
     st.cache_hits = index_store.cache.hits - h0
+    st.blocks_per_hop = st.graph_ios / max(1, st.traversal_rounds)
     st.latency_us = _latency_decoupled(st, cfg)
     return np.asarray([vid for _, vid in heap], np.int64), st
 
@@ -365,6 +381,7 @@ def search_colocated(store, pq_codes: np.ndarray, cb: PQCodebook,
     io1 = store.io.snapshot()
     st.graph_ios = io1["reads"] - io0["reads"]
     st.cache_hits = store.cache.hits - h0
+    st.blocks_per_hop = st.graph_ios / max(1, st.traversal_rounds)
     st.latency_us = _latency_colocated(st, cfg)
     return np.asarray([vid for _, vid in heap], np.int64), st
 

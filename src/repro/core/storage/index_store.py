@@ -69,12 +69,20 @@ class CompressedIndexStore:
     rec_len: np.ndarray          # [n] record byte length
     universe: int
     r: int
-    medoid: int
+    medoid: int                  # EXTERNAL id (like every id at this API)
     io: IOStats = None
     cache: LRUCache = None
     fill_factor: float = 1.0     # build-time block fill cap (rewrite headroom)
     codec: str = "elias_fano"    # adjacency record codec (registry name)
     blocks: BlockStore = None    # owning engine (None for direct construction)
+    #: Seal-time locality ordering (``core/graph/reorder.GraphOrder``) or
+    #: None for external-id layout. When set, records live at internal
+    #: positions and hold internal ids; the API stays external-id: reads
+    #: un-map on the way out, so callers (engine, StreamingIndex) never see
+    #: the relabeling — only its locality: dense within-list gaps (gap
+    #: codecs win the planner) and frontier lists co-resident in few blocks
+    #: (``get_neighbors_batch`` dedupes the reads).
+    order: object = None
 
     @classmethod
     def from_graph(cls, adjacency: list, medoid: int, r: int,
@@ -82,12 +90,29 @@ class CompressedIndexStore:
                    cache_bytes: int = 0,
                    fill_factor: float = 1.0,
                    codec: str = "elias_fano",
-                   block_store: BlockStore = None) -> "CompressedIndexStore":
+                   block_store: BlockStore = None,
+                   order=None) -> "CompressedIndexStore":
+        """``order`` may be a :class:`~repro.core.graph.reorder.GraphOrder`
+        or an ordering-kind string (``"bfs"``/``"bisection"``/``"identity"``,
+        computed here from the graph + medoid). The permutation is applied
+        at THIS seal point; everything above keeps speaking external ids."""
         n = len(adjacency)
         universe = universe or n
+        if isinstance(order, str):
+            from ..graph import reorder as _reorder
+            order = _reorder.compute_order(adjacency, medoid, kind=order)
         cdc = codecs.get(codec)
-        records = [cdc.encode(np.sort(np.asarray(adj, np.uint64)),
-                              universe=universe) for adj in adjacency]
+        if order is not None:
+            if order.n != n:
+                raise ValueError(f"order covers {order.n} vertices, "
+                                 f"graph has {n}")
+            records = [cdc.encode(
+                np.sort(order.perm[np.asarray(adjacency[int(ext)],
+                                              np.int64)]).astype(np.uint64),
+                universe=universe) for ext in order.inv]
+        else:
+            records = [cdc.encode(np.sort(np.asarray(adj, np.uint64)),
+                                  universe=universe) for adj in adjacency]
         pk = pack_blocks(np.arange(n), records, implicit_ids=True,
                          fill_factor=fill_factor)
         bs = block_store or BlockStore()
@@ -99,7 +124,8 @@ class CompressedIndexStore:
                    io=bs.fresh_io(COMPONENT),
                    cache=bs.register_cache(COMPONENT, entry_bytes,
                                            cache_bytes),
-                   fill_factor=fill_factor, codec=codec, blocks=bs)
+                   fill_factor=fill_factor, codec=codec, blocks=bs,
+                   order=order)
 
     # ------------------------------------------------------ incremental merge
     def rewrite_blocks(self, adjacency: list, dirty_ids,
@@ -116,14 +142,23 @@ class CompressedIndexStore:
         with only the dirty lists invalidated (§3.4 entries stay warm).
 
         Returns ``None`` when the incremental path is infeasible — a dirty
-        block overflows 4 KiB after re-encoding, or a new neighbor id falls
-        outside the store's EF universe — in which case the caller must do
-        a full rebuild (``from_graph``). Build stores with
-        ``fill_factor < 1`` to leave in-place growth headroom.
+        block overflows 4 KiB after re-encoding, a new neighbor id falls
+        outside the store's EF universe, or (ordered stores) an insert
+        would break the sealed ordering's density assumption — in which
+        case the caller must do a full rebuild (``from_graph``). Build
+        stores with ``fill_factor < 1`` to leave in-place growth headroom.
         """
         n_old = len(self.rec_start)
         n_new = len(adjacency)
         if n_new < n_old:
+            return None
+        if self.order is not None and n_new > n_old:
+            # A sealed locality ordering is a dense bijection over [0, n):
+            # appended vertices have no internal position, and tail-packing
+            # them in external-id space would silently interleave two id
+            # spaces in one store — gap statistics (and the codec the
+            # planner chose from them) would quietly rot. Reject; the
+            # full-rebuild fallback computes a fresh ordering over n_new.
             return None
         dirty_list = list(dirty_ids)
         dirty = np.unique(np.asarray(dirty_list, np.int64)) \
@@ -132,13 +167,22 @@ class CompressedIndexStore:
         dirty_old = dirty[(dirty >= 0) & (dirty < n_old)]
         # Re-encode every dirty list under the store's FIXED universe; a
         # neighbor id beyond it cannot be represented -> full rebuild.
+        # Ordered stores work in POSITION space: records live at internal
+        # positions and hold internal ids, so dirty external ids map
+        # through ``perm`` and lists are relabeled before encoding.
+        perm = self.order.perm if self.order is not None else None
+        dirty_pos = perm[dirty_old] if perm is not None else dirty_old
         cdc = codecs.get(self.codec)
-        recs: dict[int, np.ndarray] = {}
-        for vid in np.concatenate([dirty_old, appended]):
-            adj = np.sort(np.asarray(adjacency[int(vid)], np.uint64))
+        recs: dict[int, np.ndarray] = {}          # keyed by POSITION
+        for ext, pos in zip(np.concatenate([dirty_old, appended]),
+                            np.concatenate([dirty_pos, appended])):
+            adj = np.asarray(adjacency[int(ext)], np.int64)
+            if perm is not None:
+                adj = perm[adj]
+            adj = np.sort(adj.astype(np.uint64))
             if len(adj) and int(adj[-1]) >= self.universe:
                 return None
-            recs[int(vid)] = cdc.encode(adj, universe=self.universe)
+            recs[int(pos)] = cdc.encode(adj, universe=self.universe)
 
         data = self.data.copy()
         rec_block = np.concatenate([self.rec_block,
@@ -147,11 +191,12 @@ class CompressedIndexStore:
                                     np.zeros(len(appended), np.int64)])
         rec_len = np.concatenate([self.rec_len,
                                   np.zeros(len(appended), np.int32)])
-        touched = np.unique(self.rec_block[dirty_old]) \
-            if len(dirty_old) else np.zeros(0, np.int32)
+        touched = np.unique(self.rec_block[dirty_pos]) \
+            if len(dirty_pos) else np.zeros(0, np.int32)
         for b in touched:
-            # ids are dense-ascending and packed in order, so rec_block is
-            # non-decreasing: block b's members are one contiguous range.
+            # positions are dense-ascending and packed in order, so
+            # rec_block is non-decreasing: block b's members are one
+            # contiguous position range.
             members = np.arange(
                 np.searchsorted(self.rec_block, b, side="left"),
                 np.searchsorted(self.rec_block, b, side="right"))
@@ -211,15 +256,31 @@ class CompressedIndexStore:
             universe=self.universe, r=self.r,
             medoid=self.medoid if medoid is None else medoid,
             io=io, cache=cache, fill_factor=self.fill_factor,
-            codec=self.codec, blocks=self.blocks)
+            codec=self.codec, blocks=self.blocks, order=self.order)
         return store, report
 
     # ------------------------------------------------------------- reads
+    def _pos(self, vid: int) -> int:
+        """External id -> internal record position (identity when no
+        seal-time ordering is set)."""
+        if self.order is not None:
+            return int(self.order.perm[int(vid)])
+        return int(vid)
+
+    def block_of(self, vid: int) -> int:
+        """Block index holding ``vid``'s record — the unit a beam hop pays
+        T_IO for (blocks-per-hop accounting in engine.py)."""
+        return int(self.rec_block[self._pos(vid)])
+
     def _decode_record(self, vid: int) -> np.ndarray:
-        s = int(self.rec_start[vid])
-        rec = self.data[s:s + int(self.rec_len[vid])]
-        return codecs.get(self.codec).decode(
+        pos = self._pos(vid)
+        s = int(self.rec_start[pos])
+        rec = self.data[s:s + int(self.rec_len[pos])]
+        vals = codecs.get(self.codec).decode(
             rec, universe=self.universe).astype(np.int64)
+        if self.order is not None:
+            vals = np.sort(self.order.inv[vals])
+        return vals
 
     def get_neighbors(self, vid: int) -> np.ndarray:
         cached = self.cache.get(vid)
@@ -228,6 +289,31 @@ class CompressedIndexStore:
         self.io.read(BLOCK_SIZE)                 # one block read
         out = self._decode_record(int(vid))
         self.cache.put(int(vid), out)
+        return out
+
+    def get_neighbors_batch(self, ids) -> dict:
+        """One beam hop's frontier reads with block dedup: cache misses
+        that share a 4 KiB block cost ONE read — the round-trip win
+        locality reordering exists for (co-resident frontiers). Returns
+        {external id -> sorted external neighbor ids}; per-list decode
+        accounting is unchanged (each miss still decompresses its own
+        record)."""
+        out: dict[int, np.ndarray] = {}
+        misses: list[int] = []
+        for vid in ids:
+            vid = int(vid)
+            cached = self.cache.get(vid)
+            if cached is not None:
+                out[vid] = cached
+            else:
+                misses.append(vid)
+        if misses:
+            for _ in np.unique([self.block_of(v) for v in misses]):
+                self.io.read(BLOCK_SIZE)
+            for vid in misses:
+                rec = self._decode_record(vid)
+                self.cache.put(vid, rec)
+                out[vid] = rec
         return out
 
     # ------------------------------------------------------------- sizes

@@ -220,6 +220,11 @@ class StorageManifest:
     components: dict            # component name -> ComponentPlan
     block_size: int = BLOCK_SIZE
     version: int = MANIFEST_VERSION
+    #: Seal-time graph ordering the adjacency component was planned under
+    #: ("bfs" / "bisection" / None = external-id layout). Stores built
+    #: from_manifest must reproduce it or the plan's gap statistics (and
+    #: the codec choice priced from them) no longer describe the data.
+    reorder: str | None = None
 
     def codec_for(self, component: str, default: str = "raw") -> str:
         plan = self.components.get(component)
@@ -237,6 +242,7 @@ class StorageManifest:
 
     def to_json(self) -> dict:
         return dict(version=self.version, block_size=self.block_size,
+                    reorder=self.reorder,
                     components={k: p.to_json()
                                 for k, p in self.components.items()})
 
@@ -245,7 +251,8 @@ class StorageManifest:
         return cls(components={k: ComponentPlan.from_json(p)
                                for k, p in d.get("components", {}).items()},
                    block_size=int(d.get("block_size", BLOCK_SIZE)),
-                   version=int(d.get("version", MANIFEST_VERSION)))
+                   version=int(d.get("version", MANIFEST_VERSION)),
+                   reorder=d.get("reorder"))
 
     def save(self, path) -> None:
         import json

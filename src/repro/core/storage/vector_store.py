@@ -180,6 +180,15 @@ class StoreConfig:
     kernels: object = None              # resolved KernelConfig: route the
                                         # XOR-delta inverse through the
                                         # byteplane kernel on loads
+    reorder: str | None = None          # declares the seal-time graph
+                                        # ordering this store's rows were
+                                        # relabeled by ("bfs"/"bisection",
+                                        # None = external-id layout) — the
+                                        # manifest-tied contract that a
+                                        # consistently relabeled pipeline
+                                        # (vecs[inv], codes[inv], relabeled
+                                        # graph) asserts against; the store
+                                        # itself stays id-transparent
 
     @property
     def v_bytes(self) -> int:
@@ -206,7 +215,9 @@ class StoreConfig:
                 f"manifest selected vector codec {name!r} but the vector "
                 f"store implements only {sorted(_CODEC_MODES)} (+ 'auto')")
         mode = _CODEC_MODES.get(name, "auto")
-        return replace(self, vector_codec=mode, compress=mode != "raw")
+        return replace(self, vector_codec=mode, compress=mode != "raw",
+                       reorder=getattr(manifest, "reorder", None)
+                       or self.reorder)
 
     @property
     def chunk_vectors(self) -> int:

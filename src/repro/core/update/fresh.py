@@ -77,6 +77,13 @@ class UpdateConfig:
                                       # exact re-rank of the whole cand list
     kernels: object = None            # KernelConfig for the device path
                                       # (None -> REPRO_KERNELS env default)
+    reorder: str | None = None        # seal-time locality ordering of the
+                                      # index store ("bfs"/"bisection");
+                                      # merges that INSERT under an ordered
+                                      # store take the full-rebuild path
+                                      # (rewrite_blocks rejects appends:
+                                      # density assumption) and recompute a
+                                      # fresh ordering over the grown graph
 
 
 @dataclass
@@ -144,7 +151,8 @@ class StreamingIndex:
             self.adjacency, self.medoid, self.cfg.r, universe=universe,
             cache_bytes=self.cfg.cache_bytes,
             fill_factor=self.cfg.fill_factor,
-            block_store=self.blocks)
+            block_store=self.blocks,
+            order=self.cfg.reorder)
 
     def _max_id(self) -> int:
         return max(self.vector_store.loc.keys(), default=len(self.adjacency) - 1)

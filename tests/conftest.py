@@ -1,0 +1,64 @@
+"""Shared seeded fixtures for the test suite.
+
+The seeded-RNG graph/index factories were copy-pasted across
+test_search.py / test_updates.py / test_incremental_store.py (and now
+test_reorder.py); they live here once so every tier builds literally the
+same worlds. Plain functions (not fixtures) so callers control scope and
+parameters; module-scoped fixtures in each file wrap them where caching
+matters.
+"""
+import numpy as np
+
+
+def random_graph(n, r, seed=0):
+    """Seeded ragged adjacency (each list: sorted unique ids, degree in
+    [r//2, r]) + the generator, for store/merge tests that need raw graph
+    structure without a Vamana build."""
+    rng = np.random.default_rng(seed)
+    return [np.sort(rng.choice(n, size=int(rng.integers(max(2, r // 2),
+                                                        r + 1)),
+                               replace=False)).astype(np.int64)
+            for _ in range(n)], rng
+
+
+def build_search_world(n=1200, dim=32, r=24, l_build=48, pq_m=8, seed=0,
+                       n_queries=32, k=10):
+    """The device-search test world: seeded vectors -> DeviceIndex + Vamana
+    graph + PQ codebook + queries + brute-force ground truth.
+
+    Returns ``(vecs, index, graph, cb, queries, gt)``.
+    """
+    from repro.core.index import build_device_index
+    from repro.data.synthetic import (ground_truth, make_queries,
+                                      make_vector_dataset)
+    vecs = make_vector_dataset("prop-like", n=n, dim=dim,
+                               seed=seed).astype(np.float32)
+    index, graph, cb = build_device_index(vecs, r=r, l_build=l_build,
+                                          pq_m=pq_m, seed=seed)
+    queries = make_queries("prop-like", n_queries, dim).astype(np.float32)
+    gt = ground_truth(vecs, queries, k=k)
+    return vecs, index, graph, cb, queries, gt
+
+
+def make_streaming_index(vecs, r=16, m=4, seg_cap=256, **cfg_kw):
+    """A StreamingIndex over a freshly built Vamana graph + sealed vector
+    store (the §3.5 update-path test entry point). ``cfg_kw`` forwards to
+    UpdateConfig (merge_threshold defaults high: merges fire only when a
+    test asks)."""
+    from repro.core.graph.pq import encode_pq, train_pq
+    from repro.core.graph.vamana import build_vamana
+    from repro.core.storage.vector_store import (DecoupledVectorStore,
+                                                 StoreConfig)
+    from repro.core.update.fresh import StreamingIndex, UpdateConfig
+    graph = build_vamana(vecs, r=r, l_build=32, seed=0)
+    cb = train_pq(vecs, m=m, seed=0)
+    codes = encode_pq(vecs, cb)
+    vs = DecoupledVectorStore(StoreConfig(dim=vecs.shape[1],
+                                          dtype=np.float32,
+                                          segment_capacity=seg_cap,
+                                          chunk_bytes=4096))
+    vs.append(np.arange(len(vecs)), vecs)
+    vs.seal_active()
+    cfg_kw.setdefault("merge_threshold", 10**9)
+    cfg = UpdateConfig(r=r, l_build=32, **cfg_kw)
+    return StreamingIndex(graph.adjacency, graph.medoid, vs, codes, cb, cfg)

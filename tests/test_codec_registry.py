@@ -51,7 +51,8 @@ def hypothesize(n_fallback=10, **bounds):
 
 # ------------------------------------------------------------- round trips
 @hypothesize(n=(0, 120), universe=(2, 1 << 20), seed=(0, 2**31))
-@pytest.mark.parametrize("codec", ["raw", "bitpack", "elias_fano"])
+@pytest.mark.parametrize("codec", ["raw", "bitpack", "elias_fano",
+                                   "delta_varint", "ans_id"])
 def test_adjacency_codec_roundtrip(codec, n, universe, seed):
     """Every adjacency-capable codec is lossless on sorted id lists,
     including the empty and single-id degenerate cases."""
@@ -105,7 +106,7 @@ def test_estimate_tracks_segment_amortized_size():
     recs = [np.sort(rng.choice(universe, size=int(n), replace=False)
                     .astype(np.uint64))
             for n in rng.integers(1, 33, size=50)]
-    for name in ("raw", "bitpack", "elias_fano"):
+    for name in ("raw", "bitpack", "elias_fano", "delta_varint", "ans_id"):
         c = codecs.get(name)
         est = c.estimate_bytes(recs, universe=universe)
         actual = sum(len(c.encode(r, universe=universe)) for r in recs)
@@ -121,6 +122,76 @@ def test_u16_record_header_guard():
             codecs.get(name).encode(big, itemsize=4)
     with pytest.raises(ValueError, match="u16"):
         codecs.get("bitpack").encode(big.astype(np.uint64))
+    for name in ("delta_varint", "ans_id"):
+        with pytest.raises(ValueError, match="u16"):
+            codecs.get(name).encode(big.astype(np.uint64))
+
+
+# ------------------------------------------------- gap codecs (new tier)
+@pytest.mark.parametrize("codec", ["delta_varint", "ans_id"])
+def test_gap_codec_u32_universe_boundary(codec):
+    """Round trip survives ids at the top of the u32 universe — the widest
+    id space the block layout addresses."""
+    universe = 1 << 32
+    vals = np.asarray([0, 1, (1 << 31) - 1, (1 << 32) - 2, (1 << 32) - 1],
+                      np.uint64)
+    c = codecs.get(codec)
+    out = c.decode(c.encode(vals, universe=universe), universe=universe)
+    np.testing.assert_array_equal(out.astype(np.uint64), vals)
+
+
+@pytest.mark.parametrize("codec", ["delta_varint", "ans_id"])
+def test_gap_codec_degenerate_shapes(codec):
+    """Empty and single-id records round-trip (block packing produces both
+    at segment boundaries)."""
+    c = codecs.get(codec)
+    for vals in (np.zeros(0, np.uint64), np.asarray([0], np.uint64),
+                 np.asarray([123_456], np.uint64)):
+        out = c.decode(c.encode(vals, universe=1 << 20), universe=1 << 20)
+        np.testing.assert_array_equal(out.astype(np.uint64), vals)
+
+
+@pytest.mark.parametrize("codec", ["delta_varint", "ans_id"])
+def test_gap_codec_rejects_shuffled_but_estimate_sorts(codec):
+    """Adversarially shuffled input: encode is strict (gap coding needs the
+    sealed sorted order) while estimate_bytes sorts a copy so the planner
+    can still price unsorted candidate lists."""
+    rng = np.random.default_rng(11)
+    vals = rng.choice(50_000, size=40, replace=False).astype(np.uint64)
+    assert not np.all(np.diff(vals.astype(np.int64)) >= 0)
+    c = codecs.get(codec)
+    with pytest.raises(ValueError, match="nondecreasing"):
+        c.encode(vals, universe=50_000)
+    est = c.estimate_bytes([vals], universe=50_000)
+    assert est == len(c.encode(np.sort(vals), universe=50_000))
+
+
+def test_every_adjacency_codec_has_record_bound_and_dec_cost():
+    """Contract closure: any codec the planner may pick for adjacency must
+    expose a static record_bound (index_store packing needs it, and it must
+    upper-bound real encodings) and a CODEC_DEC_US entry (engine pricing)."""
+    from repro.core.search.engine import CODEC_DEC_US, t_dec_for
+
+    rng = np.random.default_rng(12)
+    universe = 1 << 20
+    for name in codecs.names():
+        c = codecs.get(name)
+        if "adjacency" not in c.components:
+            continue
+        bound = getattr(type(c), "record_bound", None)
+        assert callable(bound), f"{name} lacks static record_bound"
+        assert name in CODEC_DEC_US, f"{name} missing decode cost"
+        assert t_dec_for(name) >= 0.0
+        if name not in ("delta_varint", "ans_id"):
+            continue
+        # The gap codecs' bounds are STRICT encode upper bounds (the
+        # ordered-store rewrite feasibility check relies on that; the older
+        # codecs' bounds are §3.4 cache-sizing approximations only).
+        for r in (0, 1, 16, 64):
+            vals = np.sort(rng.choice(universe, size=r, replace=False)
+                           .astype(np.uint64))
+            enc = c.encode(vals, universe=universe)
+            assert len(enc) <= bound(r, universe), (name, r)
 
 
 # ----------------------------------------------------------------- planner
@@ -176,7 +247,56 @@ def test_planner_excludes_bitpack_beyond_pack_width():
            for _ in range(20)]
     m = codecs.plan_components(dict(adjacency=adj), universe=universe)
     assert "bitpack" not in m.components["adjacency"].candidates
-    assert m.codec_for("adjacency") in ("elias_fano", "raw")
+    # ans_id is alphabet-limited (33-bit gaps) and must drop out too;
+    # delta_varint's LEB128 handles any width, so it stays a candidate.
+    assert "ans_id" not in m.components["adjacency"].candidates
+    assert m.codec_for("adjacency") in ("elias_fano", "raw", "delta_varint")
+
+
+def test_reordered_inputs_flip_planner_winner():
+    """The decision the reordering tier exists to move: on SCATTERED id
+    lists Elias–Fano wins; after a locality-aware relabel densifies the
+    lists the gap codecs (ans_id / delta_varint) overtake it."""
+    from repro.core.graph.reorder import apply_order, compute_order
+
+    rng = np.random.default_rng(13)
+    n, r = 2000, 16
+    # A locality-rich graph under a scrambling relabel: neighbours are close
+    # in some latent order, but the stored ids are scattered.
+    latent = [np.unique(np.clip(i + rng.integers(-12, 13, size=r), 0, n - 1))
+              for i in range(n)]
+    scramble = rng.permutation(n)
+    scattered = [None] * n
+    for i in range(n):
+        scattered[int(scramble[i])] = np.sort(scramble[latent[i]]) \
+            .astype(np.int64)
+    m_scat = codecs.plan_components(dict(adjacency=scattered), universe=n)
+    assert m_scat.codec_for("adjacency") == "elias_fano"
+    order = compute_order(scattered, medoid=0, kind="bfs")
+    dense = apply_order(scattered, order)
+    m_dense = codecs.plan_components(dict(adjacency=dense), universe=n,
+                                     reorder="bfs")
+    win = m_dense.codec_for("adjacency")
+    assert win in ("ans_id", "delta_varint"), win
+    cand = m_dense.components["adjacency"].candidates
+    assert cand[win] < cand["elias_fano"]
+
+
+def test_plan_components_records_reorder_in_manifest(tmp_path):
+    rng = np.random.default_rng(14)
+    adj = [np.sort(rng.choice(3000, size=12, replace=False))
+           for _ in range(80)]
+    m = codecs.plan_components(dict(adjacency=adj), universe=3000,
+                               reorder="bfs")
+    assert m.reorder == "bfs"
+    path = tmp_path / "m.json"
+    m.save(path)
+    assert StorageManifest.load(path).reorder == "bfs"
+    # Back-compat: older manifests without the key load as reorder=None.
+    d = m.to_json()
+    d.pop("reorder")
+    (tmp_path / "old.json").write_text(json.dumps(d))
+    assert StorageManifest.load(tmp_path / "old.json").reorder is None
 
 
 def test_manifest_json_roundtrip(tmp_path):

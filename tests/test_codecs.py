@@ -65,6 +65,43 @@ def test_ef_paper_examples():
     assert abs(blocks * 4 / 2**20 - 24.6) < 1.5
 
 
+@given(st.integers(0, 255), st.integers(2, 2**30), st.integers(0, 2**32 - 1))
+@settings(max_examples=80, deadline=None)
+def test_ef_record_roundtrip_exact_size(n, universe, seed):
+    """Records round-trip at the per-record optimal split, and their length
+    matches the closed form ``record_bytes_for_width`` exactly (what the
+    reorder refinement and pack_blocks both count)."""
+    rng = np.random.default_rng(seed)
+    n = min(n, universe)
+    vals = np.sort(rng.integers(0, universe, size=n, dtype=np.uint64))
+    rec = ef.encode_record(vals, universe)
+    np.testing.assert_array_equal(ef.decode_record(rec, universe), vals)
+    if n:
+        lw = int(rec[1])
+        last = int(vals[-1])
+        assert lw == ef.optimal_low_width(n, last, universe)
+        assert len(rec) == ef.record_bytes_for_width(n, last, lw)
+    else:
+        assert len(rec) == 2
+
+
+def test_ef_record_width_adapts_to_span():
+    """A dense list inside a huge universe: the canonical universe-level
+    split wastes low bits on a span the list never uses; the self-describing
+    record header lets each record take its own optimum instead."""
+    universe = 1 << 20
+    vals = np.arange(100, 160, dtype=np.uint64)          # span 60 in 2^20
+    rec = ef.encode_record(vals, universe)
+    canon = ef.low_bits_width(len(vals), universe)
+    assert int(rec[1]) < canon
+    assert len(rec) < ef.record_bytes_for_width(len(vals), int(vals[-1]),
+                                                canon)
+    np.testing.assert_array_equal(ef.decode_record(rec, universe), vals)
+    # A non-canonical split is still a valid EFList for the word-level API.
+    e = ef.encode(vals, universe, low_width=3)
+    np.testing.assert_array_equal(ef.decode(e), vals)
+
+
 @given(st.integers(0, 96), st.integers(0, 2**32 - 1))
 @settings(max_examples=60, deadline=None)
 def test_ef_slot_roundtrip_np_and_jnp(n, seed):

@@ -10,12 +10,11 @@ import pytest
 from repro.core.storage.index_store import CompressedIndexStore
 from repro.core.storage.layout import BLOCK_SIZE, pack_blocks
 
+from conftest import random_graph
+
 
 def _random_graph(n, r, universe, seed=0):
-    rng = np.random.default_rng(seed)
-    return [np.sort(rng.choice(n, size=int(rng.integers(max(2, r // 2), r + 1)),
-                               replace=False)).astype(np.int64)
-            for _ in range(n)], rng
+    return random_graph(n, r, seed=seed)
 
 
 def _assert_lossless(store, adjacency):

@@ -1,0 +1,381 @@
+"""Locality-reorder tier: permutation-invariance property tests.
+
+The contract under test (core/graph/reorder.py + the ordered stores): a
+seal-time relabeling of the whole pipeline — graph, PQ codes, vector tier,
+tombstones — changes WHERE things live, never WHAT a search returns. Any
+permutation of a random world must yield bit-identical result ids after
+un-mapping at the API boundary, across rerank batch sizes B∈{1,7,32}, ref
+and pallas kernel backends, with and without tombstones and the memtable
+merge. Alongside: the locality claims (gap bits shrink, blocks-per-hop
+drops at equal results) and the §3.5 interaction (an ordered store rejects
+append rewrites; StreamingIndex falls back to a full rebuild that
+recomputes the ordering).
+
+Property tests run under ``hypothesis`` when installed; otherwise the same
+properties are driven by seeded numpy draws (the ``hypothesize`` pattern of
+test_codec_registry.py), so the tier never silently skips.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.graph import reorder
+from repro.core.index import device_index_from_artifacts
+from repro.core.search.beam import SearchParams, search
+from repro.core.search.engine import EngineConfig, merge_topk, \
+    search_decoupled
+from repro.core.storage.index_store import CompressedIndexStore
+from repro.core.storage.vector_store import DecoupledVectorStore, StoreConfig
+from repro.kernels.dispatch import KernelConfig
+
+from conftest import build_search_world, make_streaming_index, random_graph
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def hypothesize(n_fallback=10, **bounds):
+    """@given(**integer strategies) when hypothesis is available; otherwise
+    a deterministic seeded-numpy parametrization of the same bounds."""
+    if HAVE_HYPOTHESIS:
+        strats = {k: st.integers(lo, hi) for k, (lo, hi) in bounds.items()}
+
+        def deco(fn):
+            return settings(max_examples=20, deadline=None)(
+                given(**strats)(fn))
+        return deco
+
+    def deco(fn):
+        rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+        cases = [tuple(int(rng.integers(lo, hi + 1))
+                       for lo, hi in bounds.values())
+                 for _ in range(n_fallback)]
+        return pytest.mark.parametrize(",".join(bounds), cases)(fn)
+    return deco
+
+
+BACKENDS = {
+    "ref": KernelConfig("ref", "ref", "ref", "ref", "off"),
+    "pallas": KernelConfig("pallas", "pallas", "pallas", "pallas",
+                           "pallas").resolve(),
+}
+
+
+# --------------------------------------------------------- GraphOrder math
+@hypothesize(n=(1, 400), seed=(0, 2**31))
+def test_random_order_is_involutive(n, seed):
+    """perm/inv are mutual inverses; to_internal∘to_external == id; -1
+    sentinel rows (device padding) pass through un-mapping untouched."""
+    rng = np.random.default_rng(seed)
+    order = reorder.GraphOrder.from_inv(rng.permutation(n), kind="random")
+    order.validate()
+    ids = rng.integers(0, n, size=37)
+    np.testing.assert_array_equal(
+        order.to_external(order.to_internal(ids)), ids)
+    np.testing.assert_array_equal(
+        order.to_internal(order.to_external(ids)), ids)
+    padded = np.where(rng.random(37) < 0.3, -1, ids)
+    out = order.to_external(padded)
+    assert np.all(out[padded < 0] == -1)
+    np.testing.assert_array_equal(out[padded >= 0],
+                                  order.to_external(padded[padded >= 0]))
+
+
+@hypothesize(n=(4, 250), r=(2, 12), seed=(0, 2**31))
+def test_computed_orders_are_permutations(n, r, seed):
+    """BFS and bisection orders of a random ragged graph are valid
+    permutations, and relabel->un-map round-trips every adjacency list."""
+    adj, rng = random_graph(n, min(r, n - 1), seed=seed)
+    medoid = int(rng.integers(0, n))
+    for kind in reorder.KINDS:
+        order = reorder.compute_order(adj, medoid, kind)
+        order.validate()
+        assert order.kind == kind
+        relabeled = reorder.apply_order(adj, order)
+        for pos, internal in enumerate(relabeled):
+            ext = int(order.inv[pos])
+            np.testing.assert_array_equal(
+                np.sort(order.to_external(internal)), np.sort(adj[ext]))
+
+
+def test_unknown_order_kind_raises():
+    with pytest.raises(ValueError, match="unknown ordering kind"):
+        reorder.compute_order([np.zeros(0, np.int64)], 0, "zcurve")
+
+
+def test_bfs_order_starts_at_medoid():
+    adj, _ = random_graph(60, 6, seed=3)
+    order = reorder.bfs_order(adj, medoid=41)
+    assert int(order.inv[0]) == 41 and int(order.perm[41]) == 0
+
+
+def test_minla_never_worse_than_its_bfs_seed():
+    """minla refines a BFS seed against the real objective (total per-record
+    optimal EF bytes) and keeps the best sweep, so it can never lose to the
+    seed it started from — on a locality-rich graph it strictly wins."""
+    from repro.core.codec import elias_fano as ef
+
+    rng = np.random.default_rng(21)
+    n, r = 1200, 12
+    latent = [np.unique(np.clip(i + rng.integers(-20, 21, size=r), 0, n - 1))
+              for i in range(n)]
+    scramble = rng.permutation(n)
+    adj = [None] * n
+    for i in range(n):
+        adj[int(scramble[i])] = np.sort(scramble[latent[i]]).astype(np.int64)
+
+    def ef_bytes(order):
+        rel = reorder.apply_order(adj, order)
+        return sum(len(ef.encode_record(np.asarray(a, np.uint64), n))
+                   for a in rel)
+
+    bfs_b = ef_bytes(reorder.bfs_order(adj, 0))
+    minla_b = ef_bytes(reorder.minla_order(adj, 0))
+    assert minla_b <= bfs_b
+
+
+# -------------------------------------------------------- the search world
+@pytest.fixture(scope="module")
+def world():
+    vecs, index, graph, cb, queries, gt = build_search_world(
+        n=800, dim=24, r=16, l_build=32, pq_m=8, seed=0, n_queries=24)
+    return dict(vecs=vecs, index=index, graph=graph, cb=cb,
+                queries=queries, codes=np.asarray(index.pq_codes))
+
+
+def _order_for(w, kind, seed=7):
+    if kind == "random":
+        rng = np.random.default_rng(seed)
+        return reorder.GraphOrder.from_inv(rng.permutation(len(w["vecs"])),
+                                           kind="random")
+    return reorder.compute_order(w["graph"].adjacency, w["graph"].medoid,
+                                 kind)
+
+
+def _relabeled_index(w, order):
+    """The consistently relabeled pipeline: vectors, PQ codes, tombstone
+    mask (if any) move to internal positions; the graph is relabeled; the
+    medoid follows the permutation."""
+    g = reorder.relabel_graph(w["graph"], order)
+    inv = order.inv
+    return device_index_from_artifacts(w["vecs"][inv], g, w["cb"],
+                                       w["codes"][inv])
+
+
+def _params(w, B, backend, **kw):
+    defaults = dict(l_size=32, beam_width=4, k=10, rerank_batch=B,
+                    r_max=w["graph"].r, universe=len(w["vecs"]),
+                    max_iters=96, use_ef=True, kernels=BACKENDS[backend])
+    defaults.update(kw)
+    return SearchParams(**defaults)
+
+
+def _check_invariance(w, kind, B, backend):
+    order = _order_for(w, kind)
+    base_ids, base_d, _ = search(w["index"], w["queries"],
+                                 _params(w, B, backend))
+    re_ids, re_d, _ = search(_relabeled_index(w, order), w["queries"],
+                             _params(w, B, backend))
+    np.testing.assert_array_equal(order.to_external(np.asarray(re_ids)),
+                                  np.asarray(base_ids))
+    np.testing.assert_allclose(np.asarray(re_d), np.asarray(base_d),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("kind", ["bfs", "bisection", "minla", "random"])
+def test_permutation_invariance(world, kind, backend):
+    """ANY relabeling (locality orders or an adversarial random shuffle)
+    returns bit-identical ids after un-mapping — both kernel backends."""
+    _check_invariance(world, kind, B=7, backend=backend)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("B", [1, 32])
+@pytest.mark.parametrize("kind", ["bfs", "bisection", "minla", "random"])
+def test_permutation_invariance_batch_sweep(world, kind, B, backend):
+    """The full B∈{1,7,32} sweep (7 runs in the fast tier): rerank batch
+    size must not interact with the relabeling."""
+    _check_invariance(world, kind, B=B, backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_permutation_invariance_with_tombstones(world, backend):
+    """Tombstone masks relabel like every other per-vertex artifact
+    (mask[inv]); filtered (-1) rows un-map to -1 on both pipelines."""
+    w = world
+    n = len(w["vecs"])
+    rng = np.random.default_rng(11)
+    mask = np.zeros(n, bool)
+    mask[rng.choice(n, size=n // 12, replace=False)] = True
+    mask[w["graph"].medoid] = False
+    order = _order_for(w, "bfs")
+    import jax.numpy as jnp
+    base = w["index"]._replace(tombstone=jnp.asarray(mask))
+    rel = _relabeled_index(w, order)._replace(
+        tombstone=jnp.asarray(mask[order.inv]))
+    p = dict(B=7, backend=backend)
+    base_ids, base_d, _ = search(base, w["queries"],
+                                 _params(w, filter_tombstones=True, **p))
+    re_ids, re_d, _ = search(rel, w["queries"],
+                             _params(w, filter_tombstones=True, **p))
+    base_ids, re_ids = np.asarray(base_ids), np.asarray(re_ids)
+    assert np.all(~mask[base_ids[base_ids >= 0]])   # no deleted id surfaces
+    np.testing.assert_array_equal(order.to_external(re_ids), base_ids)
+    np.testing.assert_allclose(np.asarray(re_d), np.asarray(base_d),
+                               rtol=1e-6)
+
+
+def test_permutation_invariance_with_memtable_merge(world):
+    """§3.5 read path: graph results are un-mapped BEFORE the memtable
+    side-scan merge, so the merge runs in external-id space and buffered
+    (unordered, unsealed) inserts combine identically."""
+    w = world
+    n, nq, k = len(w["vecs"]), len(w["queries"]), 10
+    order = _order_for(w, "bisection")
+    base_ids, base_d, _ = search(w["index"], w["queries"],
+                                 _params(w, 7, "ref"))
+    re_ids, re_d, _ = search(_relabeled_index(w, order), w["queries"],
+                             _params(w, 7, "ref"))
+    ext_ids = order.to_external(np.asarray(re_ids))
+    # A fabricated memtable shard: fresh external ids (>= n, outside any
+    # sealed ordering), distances interleaving the graph results.
+    rng = np.random.default_rng(5)
+    mem_ids = rng.integers(n, n + 64, size=(nq, k)).astype(np.int64)
+    mem_d = np.quantile(np.asarray(base_d), 0.5) * rng.random((nq, k)) * 2
+    mem_d = mem_d.astype(np.float32)
+    got_a, d_a = merge_topk(np.stack([np.asarray(base_ids), mem_ids]),
+                            np.stack([np.asarray(base_d), mem_d]), k)
+    got_b, d_b = merge_topk(np.stack([ext_ids, mem_ids]),
+                            np.stack([np.asarray(re_d), mem_d]), k)
+    np.testing.assert_array_equal(got_a, got_b)
+    np.testing.assert_allclose(d_a, d_b, rtol=1e-6)
+
+
+# ----------------------------------------------- locality actually helps
+def test_reordering_shrinks_gap_bits(world):
+    """The codec-facing claim: locality orders shrink the mean per-gap bit
+    cost of the Vamana adjacency (what delta/ANS codecs pay per id)."""
+    adj = world["graph"].adjacency
+    before = reorder.gap_bits(adj)
+    for kind in ("bfs", "bisection", "minla"):
+        order = _order_for(world, kind)
+        after = reorder.gap_bits(reorder.apply_order(adj, order))
+        assert after < before, f"{kind}: {after:.2f} !< {before:.2f}"
+
+
+def test_ordered_store_same_results_fewer_blocks_per_hop(world):
+    """The I/O-model claim: an order=bfs CompressedIndexStore returns
+    byte-identical search results through the host engine while touching
+    fewer distinct 4 KiB blocks per beam hop (QueryStats.blocks_per_hop)."""
+    w = world
+    vs = DecoupledVectorStore(StoreConfig(dim=w["vecs"].shape[1],
+                                          dtype=np.float32,
+                                          segment_capacity=4096,
+                                          chunk_bytes=4096))
+    vs.append(np.arange(len(w["vecs"])), w["vecs"])
+    vs.seal_active()
+    cfg = EngineConfig(l_size=32, beam_width=4, k=10, latency_aware=True,
+                       compressed=True)
+
+    def run(order):
+        ix = CompressedIndexStore.from_graph(
+            w["graph"].adjacency, w["graph"].medoid, w["graph"].r,
+            universe=len(w["vecs"]), order=order)
+        ids, bph = [], []
+        for q in w["queries"]:
+            got, st = search_decoupled(ix, vs, w["codes"], w["cb"], q, cfg)
+            ids.append(got)
+            bph.append(st.blocks_per_hop)
+        return np.stack(ids), float(np.mean(bph))
+
+    plain_ids, plain_bph = run(None)
+    for kind in ("bfs", "bisection", "minla"):
+        ordered_ids, ordered_bph = run(kind)
+        np.testing.assert_array_equal(ordered_ids, plain_ids)
+        assert ordered_bph < plain_bph, \
+            f"{kind}: {ordered_bph:.2f} !< {plain_bph:.2f}"
+
+
+# -------------------------------------------- §3.5 merge density contract
+def test_ordered_store_rejects_append_rewrite():
+    """REGRESSION (density assumption): a sealed ordering is a bijection
+    over [0, n) — rewrite_blocks must refuse to tail-pack appended vertices
+    into an ordered store instead of silently interleaving id spaces."""
+    adj, rng = random_graph(300, 10, seed=2)
+    st = CompressedIndexStore.from_graph(adj, 0, 10, universe=600,
+                                         fill_factor=0.8, order="bfs")
+    grown = adj + [np.sort(rng.choice(300, 10, replace=False))]
+    assert st.rewrite_blocks(grown, [len(adj)]) is None
+    # The same append on an UNORDERED store stays incremental.
+    st_plain = CompressedIndexStore.from_graph(adj, 0, 10, universe=600,
+                                               fill_factor=0.8)
+    assert st_plain.rewrite_blocks(grown, [len(adj)]) is not None
+
+
+def test_ordered_store_dirty_rewrite_stays_incremental():
+    """Delete/repair-style dirty rewrites (no growth) keep the incremental
+    path under an ordering, rewrite in position space, and stay lossless."""
+    adj, rng = random_graph(300, 10, seed=4)
+    st = CompressedIndexStore.from_graph(adj, 0, 10, universe=600,
+                                         fill_factor=0.8, order="bisection")
+    adj2 = [a.copy() for a in adj]
+    dirty = [5, 77, 200, 213]
+    for d in dirty:
+        adj2[d] = np.sort(rng.choice(300, 10, replace=False)).astype(np.int64)
+    out = st.rewrite_blocks(adj2, dirty)
+    assert out is not None
+    st2, rep = out
+    assert not rep.full_rebuild and rep.blocks_appended == 0
+    assert rep.blocks_rewritten < st.n_blocks
+    for vid in range(len(adj2)):
+        np.testing.assert_array_equal(st2.get_neighbors(vid),
+                                      np.sort(adj2[vid]))
+
+
+@pytest.mark.slow
+def test_streaming_insert_under_reorder_forces_full_rebuild():
+    """End-to-end §3.5: a merge that INSERTS under UpdateConfig.reorder
+    takes the full-rebuild fallback (stats.full_rebuild), the rebuilt store
+    carries a fresh ordering over the grown graph, and search still finds
+    the new points."""
+    from repro.data.synthetic import make_vector_dataset
+    vecs = make_vector_dataset("prop-like", n=400, dim=16,
+                               seed=1).astype(np.float32)
+    idx = make_streaming_index(vecs, r=12, reorder="bfs")
+    assert idx.handle.current().index_store.order is not None
+    rng = np.random.default_rng(9)
+    fresh = {len(vecs) + i: (vecs[rng.integers(0, len(vecs))]
+                             + rng.normal(0, 0.01, 16).astype(np.float32))
+             for i in range(8)}
+    idx.insert(np.asarray(list(fresh), np.int64),
+               np.stack(list(fresh.values())))
+    stats = idx.merge()
+    assert stats.full_rebuild, \
+        "insert under a sealed ordering must reject the incremental path"
+    store = idx.handle.current().index_store
+    assert store.order is not None and store.order.n == len(vecs) + 8
+    for vid, v in list(fresh.items())[:3]:
+        assert vid in idx.search(v, k=5)
+
+
+@pytest.mark.slow
+def test_streaming_delete_under_reorder_stays_incremental():
+    """Delete-only merges keep the §3.5 incremental dirty-block path even
+    under an ordering (no growth, positions unchanged)."""
+    from repro.data.synthetic import make_vector_dataset
+    vecs = make_vector_dataset("prop-like", n=400, dim=16,
+                               seed=1).astype(np.float32)
+    idx = make_streaming_index(vecs, r=12, reorder="bfs")
+    idx.delete([3, 50, 200])
+    stats = idx.merge()
+    assert not stats.full_rebuild
+    assert stats.blocks_appended == 0
+    assert idx.handle.current().index_store.order is not None
+    got = idx.search(vecs[3], k=10)
+    assert 3 not in got

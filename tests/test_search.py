@@ -5,10 +5,11 @@ equivalence tier: the SAME search program under `ref` and `pallas`
 import numpy as np
 import pytest
 
-from repro.core.index import build_device_index, recall_at_k, verify_index_slots
+from repro.core.index import recall_at_k, verify_index_slots
 from repro.core.search.beam import SearchParams, search
 from repro.kernels.dispatch import KernelConfig
-from repro.data.synthetic import ground_truth, make_queries, make_vector_dataset
+
+from conftest import build_search_world
 
 # The unfused jnp baseline: beam_step="off" keeps the pre-fusion hot path.
 CFG_REF = KernelConfig("ref", "ref", "ref", "ref", "off")
@@ -21,10 +22,8 @@ CFG_PALLAS = KernelConfig("pallas", "pallas", "pallas", "pallas",
 
 @pytest.fixture(scope="module")
 def small_index():
-    vecs = make_vector_dataset("prop-like", n=1200, dim=32, seed=0).astype(np.float32)
-    index, graph, cb = build_device_index(vecs, r=24, l_build=48, pq_m=8, seed=0)
-    queries = make_queries("prop-like", 32, 32).astype(np.float32)
-    gt = ground_truth(vecs, queries, k=10)
+    vecs, index, graph, _cb, queries, gt = build_search_world(
+        n=1200, dim=32, r=24, l_build=48, pq_m=8, seed=0, n_queries=32, k=10)
     return vecs, index, graph, queries, gt
 
 

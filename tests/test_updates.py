@@ -7,27 +7,13 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core.graph.pq import encode_pq, train_pq
-from repro.core.graph.vamana import build_vamana
 from repro.core.search.beam import SearchParams
-from repro.core.storage.vector_store import DecoupledVectorStore, StoreConfig
 from repro.core.update.fresh import (StreamingIndex, UpdateConfig,
                                      snapshot_search)
 from repro.data.pipeline import StreamingVectorWorkload
 from repro.data.synthetic import make_vector_dataset
 
-
-def _make_index(vecs, r=16, m=4, seg_cap=256, **cfg_kw):
-    graph = build_vamana(vecs, r=r, l_build=32, seed=0)
-    cb = train_pq(vecs, m=m, seed=0)
-    codes = encode_pq(vecs, cb)
-    vs = DecoupledVectorStore(StoreConfig(dim=vecs.shape[1], dtype=np.float32,
-                                          segment_capacity=seg_cap,
-                                          chunk_bytes=4096))
-    vs.append(np.arange(len(vecs)), vecs)
-    vs.seal_active()
-    cfg = UpdateConfig(r=r, l_build=32, merge_threshold=10**9, **cfg_kw)
-    return StreamingIndex(graph.adjacency, graph.medoid, vs, codes, cb, cfg)
+from conftest import make_streaming_index as _make_index
 
 
 @pytest.fixture(scope="module")
