@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-reorder test-kernels bench-smoke bench bench-kernels bench-update bench-storage bench-summary quickstart
+.PHONY: test test-fast test-reorder test-kernels test-serve bench-smoke bench bench-kernels bench-update bench-storage bench-serve bench-summary quickstart
 
 test:            ## tier-1: full test suite, stop at first failure (~2.5 min)
 	$(PY) -m pytest -x -q
@@ -17,6 +17,9 @@ test-reorder:    ## permutation-invariance property tier (both kernel backends)
 test-kernels:    ## kernel conformance + backend-equivalence tier
 	$(PY) -m pytest -x -q tests/test_kernel_conformance.py tests/test_kernels.py tests/test_search.py
 
+test-serve:      ## admission/serving tier: simulated-clock properties + hot swap + quota floors
+	$(PY) -m pytest -x -q tests/test_admission.py tests/test_serve_ann.py tests/test_snapshot.py tests/test_codec_registry.py
+
 bench-kernels:   ## ref-vs-pallas-vs-auto-tuned per op + e2e -> BENCH_kernels.json (+ autotune cache)
 	$(PY) -m benchmarks.bench_kernels
 
@@ -28,6 +31,9 @@ bench-update:    ## streaming-update arms (inc/full/colocated) -> BENCH_update.j
 
 bench-storage:   ## planner vs fixed-codec vs colocated space savings -> BENCH_storage.json
 	$(PY) -m benchmarks.bench_storage
+
+bench-serve:     ## admission-tier SLO tails (Poisson vs bursty) -> BENCH_serve.json
+	$(PY) -m benchmarks.bench_serve
 
 bench-smoke:     ## ~30 s serving-path benchmark (QPS vs batch x shards)
 	$(PY) -m benchmarks.bench_serve_ann --smoke

@@ -7,12 +7,15 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
   bench_breakdown    Exp#6 (Tab 3)  bench_roofline     §Roofline (dry-run)
   bench_kernels      Pallas kernel oracles
   bench_serve_ann    Serving path: QPS vs batch size vs shard count
+  bench_serve        Admission tier: SLO tails under Poisson vs bursty load
 
 JSON artifacts (written in-harness, one per experiment family):
   bench_storage     -> BENCH_storage.json     (planner vs fixed vs colocated)
   bench_compression -> BENCH_compression.json (codec sizes + decision table)
   bench_update      -> BENCH_update.json      (merge/write-amp arms)
   bench_kernels     -> BENCH_kernels.json     (ref vs pallas vs auto-tuned)
+  bench_serve       -> BENCH_serve.json       (modeled p50/p95/p99 + QPS +
+                                               bursty-over-poisson p99 gate)
 
 ``python -m benchmarks.run --summary`` folds every BENCH_*.json in the
 working directory into one trajectory row appended to ``BENCH_summary.json``
@@ -48,6 +51,14 @@ def _digest(name: str, doc: dict):
                 if r["op"] == "rerank_l2" and "c=130" in r["size"]})
     if name == "BENCH_storage.json":
         return dict(suite=doc.get("suite"))
+    if name == "BENCH_serve.json":
+        return dict(
+            suite=doc.get("suite"),
+            qps={k: v.get("qps") for k, v in doc.get("traces", {}).items()},
+            p99_us={k: v.get("latency_us", {}).get("p99")
+                    for k, v in doc.get("traces", {}).items()},
+            miss_rate={k: v.get("miss_rate")
+                       for k, v in doc.get("traces", {}).items()})
     # Generic family: keep the scalar top-level fields only.
     return {k: v for k, v in doc.items()
             if isinstance(v, (int, float, str, bool))}
@@ -95,12 +106,13 @@ def summarize(out: str = SUMMARY_OUT) -> dict:
 def main() -> None:
     from . import (bench_breakdown, bench_components, bench_compression,
                    bench_entropy, bench_kernels, bench_roofline,
-                   bench_search, bench_serve_ann, bench_storage, bench_update)
+                   bench_search, bench_serve, bench_serve_ann, bench_storage,
+                   bench_update)
     print("name,us_per_call,derived")
     t00 = time.time()
     for mod in (bench_entropy, bench_storage, bench_components, bench_search,
                 bench_breakdown, bench_update, bench_compression,
-                bench_kernels, bench_roofline, bench_serve_ann):
+                bench_kernels, bench_roofline, bench_serve_ann, bench_serve):
         t0 = time.time()
         try:
             mod.main(quiet=True)

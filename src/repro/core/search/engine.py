@@ -141,6 +141,51 @@ def compute_costs(pq_backend: str = "ref", ex_backend: str | None = None,
             cost(dec_backend or pq_backend, "dec"))
 
 
+@dataclass(frozen=True)
+class ServiceModel:
+    """Linear modeled batch-service time — the admission tier's slack hook.
+
+    ``service_us(n) = base_us + per_query_us * n`` where ``per_query_us`` is
+    the I/O-model per-query latency (T_IO/T_PQ/T_EX/T_DEC pricing, typically
+    calibrated from a probe batch via :func:`service_model_from_report`) and
+    ``base_us`` is the per-cut overhead (dispatch + global merge, defaulting
+    to one NVMe round trip). The admission loop (``serve/admission.py``)
+    uses ``latest_cut_us`` to decide when the oldest queued request's slack
+    runs out: a batch of n must be cut no later than
+    ``deadline_us - service_us(n)`` to have any modeled chance of meeting
+    its deadline. Pure arithmetic on the simulated clock — no wall time.
+    """
+    per_query_us: float
+    base_us: float = T_IO
+
+    def service_us(self, n: int) -> float:
+        """Modeled service time for a batch of ``n`` queries, in µs."""
+        return self.base_us + self.per_query_us * max(0, int(n))
+
+    def latest_cut_us(self, deadline_us: float, n: int) -> float:
+        """Latest simulated time a batch of ``n`` containing a request with
+        this deadline can be cut and still be modeled to meet it."""
+        return deadline_us - self.service_us(max(1, int(n)))
+
+    def slack_us(self, deadline_us: float, now_us: float, n: int) -> float:
+        """Remaining slack (µs, may be negative) for a request with this
+        deadline if a batch of ``n`` were cut at ``now_us``."""
+        return self.latest_cut_us(deadline_us, n) - now_us
+
+
+def service_model_from_report(report, base_us: float = T_IO) -> ServiceModel:
+    """Calibrate a :class:`ServiceModel` from a probe batch's
+    ``BatchReport`` (serve/ann.py): the mean modeled per-query latency —
+    already priced at the searcher's resolved kernel backends and manifest
+    codecs — becomes the per-query coefficient. Deterministic: the modeled
+    latency is a pure function of the fetch trace, not of wall time."""
+    per_q = float(getattr(report, "modeled_latency_us", 0.0))
+    if per_q <= 0.0:
+        raise ValueError("probe report carries no modeled latency; run the "
+                         "probe with ServeConfig(account_io=True)")
+    return ServiceModel(per_query_us=per_q, base_us=float(base_us))
+
+
 def merge_cost_us(blocks_written: int, lists_reencoded: int,
                   backend: str = "ref") -> float:
     """Model one §3.5 merge's index-store cost from its DIRTY-BLOCK count.

@@ -58,7 +58,15 @@ class IOStats:
 class SharedBudget:
     """One byte budget pooled across several LRU partitions (§3.4 shared
     mode): eviction removes the *globally* least-recently-used entry, so a
-    hot component can grow into a cold component's share."""
+    hot component can grow into a cold component's share.
+
+    Per-partition **quota floors** (``LRUCache.floor_bytes``) bound that
+    growth for multi-tenant serving: a partition at or below its floor is
+    never an eviction victim, so one hot tenant driving misses cannot evict
+    a cold tenant's working set below its quota. As long as the floors sum
+    to at most the pooled capacity (enforced at registration), some
+    partition above its floor always exists whenever the pool is over
+    budget, so the byte bound stays hard."""
 
     def __init__(self, capacity_bytes: int):
         self.capacity_bytes = capacity_bytes
@@ -90,9 +98,17 @@ class SharedBudget:
     def misses(self) -> int:
         return sum(c.misses for c in self._members)
 
+    @property
+    def floor_bytes(self) -> int:
+        return sum(c.floor_bytes for c in self._members)
+
     def rebalance(self) -> None:
         while self.used_bytes > self.capacity_bytes:
-            victims = [c for c in self._members if c._d]
+            # Quota floors: a partition at/below its reserved share is not
+            # a victim (tenant isolation); floors sum <= capacity, so a
+            # victim exists whenever the pool is over budget.
+            victims = [c for c in self._members
+                       if c._d and c.memory_bytes > c.floor_bytes]
             if not victims:
                 break
             # Oldest entry of each partition is its OrderedDict head; the
@@ -108,9 +124,10 @@ class LRUCache:
     partitions (the per-entry recency tick enables global LRU eviction)."""
 
     def __init__(self, capacity: int, entry_bytes: int,
-                 budget: SharedBudget | None = None):
+                 budget: SharedBudget | None = None, floor_bytes: int = 0):
         self.capacity = capacity
         self.entry_bytes = entry_bytes
+        self.floor_bytes = floor_bytes   # shared-budget eviction floor
         self._d: OrderedDict[int, object] = OrderedDict()
         self._tick: dict[int, int] = {}
         self.budget = budget
@@ -160,7 +177,8 @@ class LRUCache:
         same recency order, independent mutation + stats. Under a shared
         budget the clone joins the same pool (retire the original with
         ``budget.release`` once its snapshot is unpinned)."""
-        c = LRUCache(self.capacity, self.entry_bytes, budget=self.budget)
+        c = LRUCache(self.capacity, self.entry_bytes, budget=self.budget,
+                     floor_bytes=self.floor_bytes)
         c._d = OrderedDict(self._d)
         c._tick = dict(self._tick)
         return c
@@ -214,21 +232,44 @@ class BlockStore:
         return io
 
     def register_cache(self, name: str, entry_bytes: int,
-                       cache_bytes: int | None = None) -> LRUCache:
+                       cache_bytes: int | None = None,
+                       floor_bytes: int = 0) -> LRUCache:
         """Create a component's cache partition. Always FRESH: a rebuilt
         store must never share a live partition with the store an in-flight
         snapshot still reads (clone() is the warm-handover path). The
         previous partition, if any, leaves the shared pool. Capacity is
         bounded by the pooled budget in shared mode, else by this
-        partition's own ``cache_bytes`` slice."""
+        partition's own ``cache_bytes`` slice.
+
+        ``floor_bytes`` (shared-budget mode) reserves a per-partition quota
+        floor: global-LRU eviction never shrinks this partition below it.
+        Floors must fit the pooled budget — over-committing would make the
+        byte bound soft, so it raises instead."""
         budget_bytes = self.cache_bytes if cache_bytes is None else cache_bytes
         cap = budget_bytes // max(1, entry_bytes)
         existing = self.partitions.get(name)
         if existing is not None and self.budget is not None:
             self.budget.release(existing)
-        c = LRUCache(cap, entry_bytes, budget=self.budget)
+        if floor_bytes and self.budget is not None:
+            reserved = self.budget.floor_bytes + floor_bytes
+            if reserved > self.budget.capacity_bytes:
+                raise ValueError(
+                    f"cache floors over-commit the shared budget: "
+                    f"{reserved} reserved > {self.budget.capacity_bytes} "
+                    f"pooled (registering {name!r})")
+        c = LRUCache(cap, entry_bytes, budget=self.budget,
+                     floor_bytes=floor_bytes if self.budget is not None else 0)
         self.partitions[name] = c
         return c
+
+    def register_tenant_cache(self, tenant: str, entry_bytes: int,
+                              floor_bytes: int = 0) -> LRUCache:
+        """A tenant's LRU partition under the canonical ``tenant:<name>``
+        component key (multi-tenant serving: one partition per tenant, all
+        drawing on the shared budget, eviction bounded by the tenant's
+        quota floor)."""
+        return self.register_cache(f"tenant:{tenant}", entry_bytes,
+                                   floor_bytes=floor_bytes)
 
     def replace_cache(self, name: str, cache: LRUCache) -> LRUCache:
         """Install an externally-built partition (e.g. the ``clone()`` an

@@ -1,4 +1,6 @@
-from . import ann, engine, rag  # noqa: F401
+from . import admission, ann, engine, rag  # noqa: F401
+from .admission import (AdmissionConfig, AdmissionQueue, Request,  # noqa: F401
+                        TenantConfig)
 from .ann import BatchedSearcher, BatchReport, ServeConfig  # noqa: F401
 from .engine import ServeEngine  # noqa: F401
 from .rag import RAGPipeline  # noqa: F401

@@ -64,6 +64,12 @@ class ServeConfig:
                                     # decode at its planner-resolved codec
                                     # (engine.CODEC_DEC_US) instead of the
                                     # flat per-backend T_DEC
+    shared_budget: bool = False     # pool cache_bytes across partitions
+                                    # (multi-tenant mode: per-tenant LRUs
+                                    # with quota floors, global-LRU eviction)
+    max_chunks: int = 0             # >0: cap the bucket plan's dispatch
+                                    # count per batch (overflow raises
+                                    # instead of silently growing the plan)
 
 
 @dataclass
@@ -94,15 +100,50 @@ class BatchReport:
     component_cache: dict = field(default_factory=dict)  # shard -> hit/miss
     storage_bytes: dict = field(default_factory=dict)    # live mode: bytes
                                     # per component of the pinned snapshot
+    # Admission-tier fields (serve/admission.py fills the queue ones after
+    # the cut; the searcher fills tenants/per-query latency when asked):
+    tenants: dict = field(default_factory=dict)   # tenant -> rows in batch
+    per_query_latency_us: list = field(default_factory=list)  # modeled, per
+                                    # row (arrival order) — the admission
+                                    # tier's service/latency raw material
+    cut_us: float = -1.0            # simulated clock at batch cut
+    cut_reason: str = ""            # "full" | "deadline" | "drain"
+    queue_wait_us_mean: float = 0.0  # arrival -> cut, averaged over rows
+    queue_wait_us_max: float = 0.0
+    slack_min_us: float = 0.0       # tightest modeled slack at the cut
 
 
-def plan_buckets(nq: int, buckets: tuple) -> list:
+def _peel_cost(remaining: int, buckets: list) -> tuple:
+    """(padding, chunks) of the greedy largest-fit decomposition of a tail
+    (peel the largest fitting bucket until the sliver, then pad the sliver
+    to the smallest bucket). The cost plan_buckets weighs padding against."""
+    padding = chunks = 0
+    while remaining > 0:
+        fit = next((b for b in reversed(buckets) if b <= remaining), None)
+        chunks += 1
+        if fit is None:                 # sliver below the smallest bucket
+            padding += buckets[0] - remaining
+            break
+        remaining -= fit
+    return padding, chunks
+
+
+def plan_buckets(nq: int, buckets: tuple, max_chunks: int = 0) -> list:
     """-> [(start, count, bucket)]: full largest buckets, then the ragged
-    tail. The tail is padded to its smallest covering bucket — unless that
-    wastes more rows than the tail itself (covering > 2*tail), in which
-    case the largest fitting bucket is peeled off first (fewer dispatches
-    beats zero padding for small tails; a 9-query tail with buckets
-    (1, 8, 32) runs as 8+1, not padded to 32)."""
+    tail. The tail is padded to its smallest covering bucket only when the
+    padding is worth the saved dispatches: pad iff
+    ``padding <= peel_padding + (peel_chunks - 1) * min_bucket`` — i.e. the
+    padded rows cost no more than the extra dispatches of the greedy
+    largest-fit decomposition, priced at one smallest-bucket each. A
+    9-query tail with buckets (1, 8, 32) runs as 8+1 (zero padding, one
+    extra dispatch); a 7-query tail pads to 8 (1 pad row beats 7
+    dispatches); a 17-query tail runs as 8+8+1, NOT padded to 32 (the old
+    rule silently padded 15 rows there).
+
+    ``max_chunks > 0`` makes the overflow path explicit: a plan needing
+    more dispatches (nq exceeding what ``max_chunks`` buckets can hold)
+    raises instead of silently growing — callers with a bounded queue
+    depth (the admission tier) chunk the stream deliberately."""
     buckets = sorted(buckets)
     if not buckets or buckets[0] <= 0:
         raise ValueError(f"bucket sizes must be positive, got {buckets}")
@@ -111,12 +152,22 @@ def plan_buckets(nq: int, buckets: tuple) -> list:
     while remaining > 0:
         cover = next((b for b in buckets if b >= remaining), None)
         fit = next((b for b in reversed(buckets) if b <= remaining), None)
-        if cover is not None and (fit is None or cover <= 2 * remaining):
-            out.append((start, remaining, cover))
-            break
+        if cover is not None:
+            if fit is None:             # nothing fits: pad is the only move
+                out.append((start, remaining, cover))
+                break
+            peel_pad, peel_chunks = _peel_cost(remaining, buckets)
+            if cover - remaining <= peel_pad + (peel_chunks - 1) * buckets[0]:
+                out.append((start, remaining, cover))
+                break
         out.append((start, fit, fit))
         start += fit
         remaining -= fit
+    if max_chunks and len(out) > max_chunks:
+        raise ValueError(
+            f"bucket plan for nq={nq} needs {len(out)} dispatches "
+            f"> max_chunks={max_chunks} (largest bucket {buckets[-1]}); "
+            f"chunk the stream before admission")
     return out
 
 
@@ -179,20 +230,57 @@ class BatchedSearcher:
         universe = p.universe or self.shard_size
         entry_bytes = ef.worst_case_record_bytes(p.r_max, universe)
         n_caches = 1 if self._handle is not None else len(self._shards)
-        self.blocks = BlockStore(cache_bytes=cfg.cache_bytes)
+        self.blocks = BlockStore(cache_bytes=cfg.cache_bytes,
+                                 shared_budget=cfg.shared_budget)
+        self._entry_bytes = entry_bytes
         self._caches = [
             self.blocks.register_cache(f"shard{i}", entry_bytes)
             for i in range(n_caches)]
+        # Multi-tenant mode (admission tier): per-tenant LRU partitions on
+        # the same BlockStore, registered up front (register_tenant) or
+        # lazily on first sight; floors recorded so a geometry change can
+        # re-register with the same quotas.
+        self._tenant_caches: dict = {}
+        self._tenant_floors: dict = {}
+
+    # ------------------------------------------------------------ tenants
+    def register_tenant(self, tenant: str, floor_bytes: int = 0) -> None:
+        """Create the tenant's LRU partition (quota floor in bytes; only
+        enforced under ``ServeConfig(shared_budget=True)``). Idempotent for
+        an unchanged floor; the admission tier calls this per configured
+        tenant so quota floors are reserved before traffic arrives."""
+        if tenant in self._tenant_caches \
+                and self._tenant_floors.get(tenant) == floor_bytes:
+            return
+        self._tenant_floors[tenant] = floor_bytes
+        self._tenant_caches[tenant] = self.blocks.register_tenant_cache(
+            tenant, self._entry_bytes, floor_bytes=floor_bytes)
+
+    def _tenant_cache(self, tenant: str) -> LRUCache:
+        if tenant not in self._tenant_caches:
+            self.register_tenant(tenant)
+        return self._tenant_caches[tenant]
 
     # ------------------------------------------------------------- serving
-    def search(self, queries: np.ndarray):
+    def search(self, queries: np.ndarray, tenants: list = None):
         """queries [nq, d] -> (ids [nq, K], dists [nq, K], BatchReport).
 
         ids are global (shard offset applied); rows are sorted by exact
         re-ranked distance, -1 = no result.
+
+        ``tenants`` (one label per row, arrival order) switches the I/O
+        accounting to per-tenant LRU partitions: row qi's fetch trace
+        replays through tenant qi's partition (keys are GLOBAL ids, so one
+        tenant partition spans shards) and its block reads are charged to
+        the ``tenant:<name>`` component. The ids/dists path is untouched —
+        tenancy changes what is *measured*, never what is *returned*
+        (bit-exactness is the admission tier's acceptance gate).
         """
         queries = np.asarray(queries, np.float32)
         nq = len(queries)
+        if tenants is not None and len(tenants) != nq:
+            raise ValueError(f"tenants ({len(tenants)}) must label every "
+                             f"query row ({nq})")
         # Live mode: pin ONE snapshot for the whole batch — every bucket and
         # shard below reads this snapshot's device view, so a merge that
         # publishes mid-batch is invisible until the next search() call
@@ -209,8 +297,15 @@ class BatchedSearcher:
                                          r_max=store.r)
                 entry_bytes = ef.worst_case_record_bytes(store.r,
                                                          store.universe)
+                self._entry_bytes = entry_bytes
                 self._caches = [self.blocks.register_cache("shard0",
                                                            entry_bytes)]
+                # Tenant partitions re-register at the new entry bound,
+                # keeping their quota floors (cold caches, same quotas).
+                self._tenant_caches = {
+                    t: self.blocks.register_tenant_cache(
+                        t, entry_bytes, floor_bytes=f)
+                    for t, f in self._tenant_floors.items()}
             shards = [snap.device]
             self.shard_size = int(snap.device.pq_codes.shape[0])
         else:
@@ -218,8 +313,11 @@ class BatchedSearcher:
         n_lanes = len(shards) + (1 if snap is not None else 0)
         report = BatchReport(n_queries=nq, n_shards=len(shards),
                              snapshot_version=snap.version if snap else -1)
+        if tenants is not None:
+            for t in tenants:
+                report.tenants[t] = report.tenants.get(t, 0) + 1
         t0 = time.perf_counter()
-        chunks = plan_buckets(nq, self.cfg.buckets)
+        chunks = plan_buckets(nq, self.cfg.buckets, self.cfg.max_chunks)
         out_ids = np.full((n_lanes, nq, self.p.k), -1, np.int64)
         out_d = np.full((n_lanes, nq, self.p.k), np.inf, np.float32)
         lat = np.zeros((n_lanes, nq), np.float64)
@@ -239,9 +337,17 @@ class BatchedSearcher:
                 out_ids[si, start:start + count] = gids
                 out_d[si, start:start + count] = np.asarray(dists)[:count]
                 if self.cfg.account_io:
+                    if tenants is not None:
+                        rows = tenants[start:start + count]
+                        caches = [self._tenant_cache(t) for t in rows]
+                        comps = [f"tenant:{t}" for t in rows]
+                        off = si * self.shard_size
+                    else:
+                        caches = [self._caches[si]] * count
+                        comps = [f"shard{si}"] * count
+                        off = 0
                     lat[si, start:start + count] = self._account(
-                        report, stats, count, self._caches[si],
-                        component=f"shard{si}")
+                        report, stats, count, caches, comps, key_offset=off)
         if snap is not None:
             # Memtable side-scan: buffered inserts are one more "shard" in
             # the global merge (ids are globally unique fresh dense ids).
@@ -255,6 +361,7 @@ class BatchedSearcher:
             per_q = lat.max(axis=0)     # shards fan out in parallel
             report.modeled_latency_us = float(per_q.mean())
             report.modeled_p99_us = float(np.percentile(per_q, 99))
+            report.per_query_latency_us = [float(v) for v in per_q]
             # Per-component engine metrics: cumulative BlockStore stats
             # (per-shard partitions; the updater's own components when a
             # live snapshot's stores share an engine are reported there).
@@ -271,29 +378,35 @@ class BatchedSearcher:
 
     # ------------------------------------------------------ I/O accounting
     def _account(self, report: BatchReport, stats, count: int,
-                 cache: LRUCache, component: str = "shard0") -> np.ndarray:
-        """Replay one bucket's fetch traces (arrival order) through the
-        fixed-entry LRU partition; price counters with the engine.py
-        latency model (latency_aware arm: vector reads off the traversal
-        critical path). Uncached fetches are accounted as block reads on
-        the shard's BlockStore component. Returns per-query modeled
-        latency [count] in µs."""
+                 caches: list, components: list,
+                 key_offset: int = 0) -> np.ndarray:
+        """Replay one bucket's fetch traces (arrival order) through each
+        row's fixed-entry LRU partition (per-shard in the classic path, per
+        TENANT in admission mode — one entry per row); price counters with
+        the engine.py latency model (latency_aware arm: vector reads off
+        the traversal critical path). Uncached fetches are accounted as
+        block reads on the row's BlockStore component; ``key_offset``
+        translates shard-local ids to global keys so one tenant partition
+        spans shards without collisions. Returns per-query modeled latency
+        [count] in µs."""
         trace = np.asarray(stats.fetch_trace)[:count]       # [c, iters, W]
         pq_ops = np.asarray(stats.pq_dists)[:count]
         exact = np.asarray(stats.exact_dists)[:count]
         batches = np.asarray(stats.rerank_batches)[:count]
         lat = np.zeros(count)
         for qi in range(count):
+            cache, component = caches[qi], components[qi]
             misses = hits = io_rounds = 0
             for round_ids in trace[qi]:
                 round_miss = 0
                 for vid in round_ids:
                     if vid < 0:
                         continue
-                    if cache.get(int(vid)) is not None:
+                    key = int(vid) + key_offset
+                    if cache.get(key) is not None:
                         hits += 1
                     else:
-                        cache.put(int(vid), True)
+                        cache.put(key, True)
                         self.blocks.read(component)    # one 4 KiB block
                         misses += 1
                         round_miss += 1

@@ -1,0 +1,421 @@
+"""SLO-aware admission tier (`repro.serve.admission`) — property suite.
+
+The three pinned contracts (ISSUE 8 satellites):
+
+1. **Token-bucket conservation**: for ANY schedule of acquire attempts, the
+   grants in any window obey ``granted <= rate * dt + burst``.
+2. **Deadline monotonicity**: a batch cut never fires later than the moment
+   its condition became true with the server free — no queued request with
+   exhausted slack is left waiting while the server idles; every request is
+   served exactly once.
+3. **Batch invisibility**: every request served through the admission tier
+   returns ids/dists bit-identical to a solo ``search_batched`` call on the
+   same snapshot, for max_batch in {1, 7, 32} and ragged cut sizes.
+
+All of it runs on the simulated clock: `serve/admission.py` performs no
+wall-clock reads (scanned below), so a pinned seed fixes every timestamp.
+
+Property tests run under ``hypothesis`` when installed; otherwise the same
+property functions are driven by deterministic seeded-numpy draws (the
+``hypothesize`` pattern of ``test_kernel_conformance.py``).
+"""
+import inspect
+import math
+import zlib
+
+import numpy as np
+import pytest
+
+import repro.serve.admission as admission_mod
+from repro.core.index import build_device_index
+from repro.core.search.beam import SearchParams
+from repro.core.search.engine import ServiceModel, service_model_from_report
+from repro.data.synthetic import make_queries, make_vector_dataset
+from repro.serve.admission import (AdmissionConfig, AdmissionQueue, Request,
+                                   TenantConfig, TokenBucket, bursty_trace,
+                                   calibrate_service_model,
+                                   latency_percentiles, poisson_trace)
+from repro.serve.ann import BatchedSearcher, ServeConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def hypothesize(n_fallback=8, **bounds):
+    """@given(**integer strategies) when hypothesis is available; otherwise
+    a deterministic seeded-numpy parametrization of the same bounds."""
+    if HAVE_HYPOTHESIS:
+        strats = {k: st.integers(lo, hi) for k, (lo, hi) in bounds.items()}
+
+        def deco(fn):
+            return settings(max_examples=16, deadline=None)(
+                given(**strats)(fn))
+        return deco
+
+    def deco(fn):
+        rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+        cases = [tuple(int(rng.integers(lo, hi + 1))
+                       for lo, hi in bounds.values())
+                 for _ in range(n_fallback)]
+        if len(bounds) == 1:
+            cases = [c[0] for c in cases]
+        return pytest.mark.parametrize(",".join(bounds), cases)(fn)
+    return deco
+
+
+# ---------------------------------------------------------------- fixtures
+N, DIM, R = 300, 16, 12
+
+
+@pytest.fixture(scope="module")
+def world():
+    vecs = make_vector_dataset("prop-like", n=N, dim=DIM,
+                               seed=0).astype(np.float32)
+    index, _, _ = build_device_index(vecs, r=R, l_build=24, pq_m=4, seed=0)
+    queries = make_queries("prop-like", 48, DIM).astype(np.float32)
+    return index, queries
+
+
+def _params():
+    return SearchParams(l_size=24, beam_width=4, k=5, rerank_batch=5,
+                        r_max=R, universe=N, max_iters=48)
+
+
+def _searcher(index, buckets=(1, 8), **cfg_kw):
+    return BatchedSearcher(index, _params(),
+                           ServeConfig(buckets=buckets, **cfg_kw))
+
+
+@pytest.fixture(scope="module")
+def model(world):
+    index, queries = world
+    return calibrate_service_model(_searcher(index, buckets=(8,)),
+                                   queries[:8])
+
+
+@pytest.fixture(scope="module")
+def solo(world):
+    """The reference: one request per call through the same device path."""
+    index, _ = world
+    return _searcher(index, buckets=(1,))
+
+
+# ------------------------------------------------- simulated-clock contract
+def test_no_wall_clock_in_admission():
+    """ACCEPTANCE: serve/admission.py never reads the wall clock — the
+    whole tier is a pure function of (trace, config, seed)."""
+    src = inspect.getsource(admission_mod)
+    for needle in ("import time", "perf_counter", "monotonic(",
+                   "time.time", "datetime"):
+        assert needle not in src, f"wall-clock read in admission.py: {needle}"
+
+
+# --------------------------------------------------------- token buckets
+@hypothesize(rate=(1, 5000), burst=(1, 12), seed=(0, 2**31))
+def test_token_bucket_conservation(rate, burst, seed):
+    """granted(t1, t2] <= rate * (t2 - t1) + burst for EVERY window of any
+    attempt schedule, counting window-opening grants conservatively."""
+    rng = np.random.default_rng(seed)
+    b = TokenBucket(rate_qps=float(rate), burst=float(burst))
+    t = 0.0
+    for _ in range(200):
+        t += float(rng.exponential(2e4 / rate))
+        b.try_acquire(t)
+    log = np.asarray(b.grant_log_us)
+    assert len(log) == b.granted
+    # windows from zero and between any two grant times
+    for j in range(len(log)):
+        assert j + 1 <= rate * log[j] / 1e6 + burst + 1e-3
+    for i in range(len(log)):
+        for j in range(i + 1, len(log)):
+            n_window = j - i           # grants strictly after log[i]
+            dt_us = log[j] - log[i]
+            assert n_window <= rate * dt_us / 1e6 + burst + 1e-3, \
+                (i, j, dt_us)
+
+
+@hypothesize(rate=(1, 2000), burst=(1, 6), seed=(0, 2**31))
+def test_token_bucket_peek_matches_acquire(rate, burst, seed):
+    """peek_grant_us is the exact earliest grant time: acquiring at it
+    succeeds, acquiring 1 µs earlier (when it is in the future) fails."""
+    rng = np.random.default_rng(seed)
+    b = TokenBucket(rate_qps=float(rate), burst=float(burst))
+    t = 0.0
+    for _ in range(40):
+        t += float(rng.exponential(1e4))
+        grant_at = b.peek_grant_us(t)
+        if grant_at > t + 1.0:
+            assert not b.try_acquire(t)
+            assert not b.try_acquire(grant_at - 1.0)
+            t = grant_at
+        assert b.try_acquire(t if grant_at <= t else grant_at)
+
+
+def test_token_bucket_validates_burst():
+    with pytest.raises(ValueError):
+        TokenBucket(rate_qps=10.0, burst=0.5)
+
+
+def test_unlimited_bucket_always_grants():
+    b = TokenBucket()
+    assert all(b.try_acquire(float(t)) for t in range(50))
+
+
+# ----------------------------------------------------------- service model
+def test_service_model_slack_formula():
+    m = ServiceModel(per_query_us=100.0, base_us=80.0)
+    assert m.service_us(4) == 80.0 + 400.0
+    assert m.latest_cut_us(10_000.0, 4) == 10_000.0 - 480.0
+    assert m.slack_us(10_000.0, 9_000.0, 4) == 10_000.0 - 480.0 - 9_000.0
+    # More queued -> longer service -> earlier latest cut (monotone).
+    cuts = [m.latest_cut_us(10_000.0, n) for n in range(1, 8)]
+    assert cuts == sorted(cuts, reverse=True)
+    # n=0 still prices at least one query's service.
+    assert m.latest_cut_us(10_000.0, 0) == m.latest_cut_us(10_000.0, 1)
+
+
+def test_service_model_from_report_requires_accounting():
+    class R:
+        modeled_latency_us = 0.0
+    with pytest.raises(ValueError):
+        service_model_from_report(R())
+
+    class R2:
+        modeled_latency_us = 123.0
+    m = service_model_from_report(R2())
+    assert m.per_query_us == 123.0
+
+
+# ------------------------------------------------------ deadline monotone
+def _run(index, queries, model, *, seed, rate=1500, n=40, max_batch=8,
+         deadline_us=20_000.0, tenants=None, buckets=(1, 8), **trace_kw):
+    searcher = _searcher(index, buckets=buckets, shared_budget=True)
+    trace = poisson_trace(queries, rate_qps=rate, n=n,
+                          tenants=tuple((tenants or {"t0": TenantConfig()})),
+                          deadline_us=deadline_us, seed=seed, **trace_kw)
+    q = AdmissionQueue(searcher, model, AdmissionConfig(max_batch=max_batch),
+                       tenants=tenants)
+    served, report = q.run(trace)
+    return searcher, trace, served, report
+
+
+@hypothesize(seed=(0, 2**31))
+def test_deadline_monotonicity(world, model, seed):
+    """ACCEPTANCE: (a) every request is served exactly once; (b) no cut
+    fires later than the moment its condition held with the server free —
+    cut_us <= max(busy horizon, last admit, tightest latest-cut) — so a
+    request whose slack ran out is never left queued while the server
+    idles; (c) the server is never preempted (cuts respect busy_until) and
+    departures are monotone."""
+    index, queries = world
+    _, trace, served, report = _run(index, queries, model, seed=seed)
+    assert sorted(s.rid for s in served) == sorted(r.rid for r in trace)
+    prev_depart = 0.0
+    for rec in report.batches:
+        assert rec.cut_us >= rec.was_busy_until_us - 1e-6
+        assert rec.cut_us <= max(rec.was_busy_until_us, rec.admit_us_max,
+                                 rec.latest_cut_min_us) + 1e-6, \
+            (rec.idx, rec.reason)
+        assert rec.depart_us == pytest.approx(
+            rec.cut_us + rec.service_us)
+        assert rec.depart_us >= prev_depart - 1e-6
+        prev_depart = rec.depart_us
+        if rec.reason == "deadline":
+            # the forcing request is in THIS batch, not left behind
+            rids = {s.rid for s in served if s.batch_idx == rec.idx}
+            assert rec.forced_rid in rids
+
+
+@hypothesize(seed=(0, 2**31))
+def test_conservation_under_throttle(world, model, seed):
+    """Quotas delay, they never drop: with a hot tenant rate-capped, every
+    request still departs, and per-tenant grants obey the bucket."""
+    index, queries = world
+    tenants = {"hot": TenantConfig(rate_qps=800, burst=3),
+               "cold": TenantConfig()}
+    searcher, trace, served, report = _run(
+        index, queries, model, seed=seed, n=30, tenants=tenants,
+        deadline_us=50_000.0)
+    assert len(served) == len(trace)
+    hot = [s for s in served if s.tenant == "hot"]
+    if hot:
+        assert report.tenant_stats["hot"]["granted"] == len(hot)
+        # admit never precedes arrival; throttle delay is non-negative
+        assert all(s.admit_us >= s.arrival_us - 1e-6 for s in served)
+
+
+# ------------------------------------------------------- batch invisibility
+@pytest.mark.parametrize("max_batch", [1, 7, 32])
+def test_batch_invisibility(world, model, solo, max_batch):
+    """ACCEPTANCE: ids/dists of every admission-served request are
+    bit-identical to a solo call on the same snapshot — for max_batch in
+    {1, 7, 32}, which exercises ragged cut sizes and padded buckets."""
+    index, queries = world
+    searcher = _searcher(index, buckets=(1, 8, 32), shared_budget=True)
+    trace = poisson_trace(queries, rate_qps=2500, n=36,
+                          tenants=("a", "b"), weights=(0.7, 0.3),
+                          deadline_us=30_000.0, seed=7)
+    q = AdmissionQueue(searcher, model,
+                       AdmissionConfig(max_batch=max_batch))
+    served, report = q.run(trace)
+    assert len(served) == len(trace)
+    if max_batch > 1:
+        assert any(rec.n > 1 for rec in report.batches)
+    if max_batch == 7:      # ragged: cuts of 7 pad to the 8-bucket
+        assert any(rec.n == 7 for rec in report.batches)
+    by_rid = {r.rid: r for r in trace}
+    for s in served:
+        i1, d1, _ = solo.search(np.asarray(by_rid[s.rid].query)[None])
+        np.testing.assert_array_equal(s.ids, np.asarray(i1)[0])
+        np.testing.assert_array_equal(s.dists, np.asarray(d1)[0])
+
+
+def test_deterministic_replay(world, model):
+    """Same trace + same config -> byte-identical schedule and results."""
+    index, queries = world
+    runs = []
+    for _ in range(2):
+        _, _, served, report = _run(index, queries, model, seed=3,
+                                    tenants={"hot": TenantConfig(
+                                        rate_qps=900, burst=2)})
+        runs.append((served, report))
+    a, b = runs
+    assert [(s.rid, s.admit_us, s.cut_us, s.depart_us) for s in a[0]] == \
+           [(s.rid, s.admit_us, s.cut_us, s.depart_us) for s in b[0]]
+    assert [(r.cut_us, r.reason, r.n) for r in a[1].batches] == \
+           [(r.cut_us, r.reason, r.n) for r in b[1].batches]
+    for sa, sb in zip(a[0], b[0]):
+        np.testing.assert_array_equal(sa.ids, sb.ids)
+
+
+# ----------------------------------------------------- cut-policy shapes
+def test_full_cuts_under_pressure(world, model):
+    """A dense burst cuts full batches; a sparse tail cuts on deadline or
+    drain — and the trace generators are themselves deterministic."""
+    index, queries = world
+    _, _, served, report = _run(index, queries, model, seed=11, rate=5000,
+                                n=40, max_batch=8, deadline_us=60_000.0)
+    reasons = [r.reason for r in report.batches]
+    assert "full" in reasons
+    assert reasons[-1] in ("drain", "deadline", "full")
+    t1 = poisson_trace(queries, rate_qps=1000, n=20, seed=5)
+    t2 = poisson_trace(queries, rate_qps=1000, n=20, seed=5)
+    assert [(r.arrival_us, r.tenant, r.deadline_us) for r in t1] == \
+           [(r.arrival_us, r.tenant, r.deadline_us) for r in t2]
+    b1 = bursty_trace(queries, rate_qps=1000, n=20, seed=5)
+    b2 = bursty_trace(queries, rate_qps=1000, n=20, seed=5)
+    assert [r.arrival_us for r in b1] == [r.arrival_us for r in b2]
+
+
+def test_tight_deadlines_force_early_cuts(world, model):
+    """Deadlines tighter than a full batch's fill time force partial
+    deadline cuts (the SLO path, not the throughput path)."""
+    index, queries = world
+    _, _, served, report = _run(index, queries, model, seed=2, rate=600,
+                                n=24, max_batch=16,
+                                deadline_us=model.service_us(4) + 2_000.0)
+    assert any(r.reason == "deadline" for r in report.batches)
+    assert all(r.n < 16 for r in report.batches)
+
+
+def test_bursty_tail_worse_than_poisson(world, model):
+    """The bursty trace at the same mean rate has a no-better p99 — the
+    regression the bench gate watches (here: same world, pinned seeds)."""
+    index, queries = world
+    kw = dict(rate_qps=1200, n=48, deadline_us=25_000.0, seed=4)
+    lat = {}
+    for name, maker in (("poisson", poisson_trace),
+                        ("bursty", lambda q, **k: bursty_trace(
+                            q, burst_factor=10.0, **k))):
+        searcher = _searcher(index, buckets=(1, 8), shared_budget=True)
+        q = AdmissionQueue(searcher, model, AdmissionConfig(max_batch=8))
+        served, report = q.run(maker(queries, **kw))
+        lat[name] = report.latency["p99"]
+    assert lat["bursty"] >= lat["poisson"] * 0.8   # not meaningfully better
+
+
+# -------------------------------------------------- tenant cache isolation
+def test_tenant_partitions_registered_and_accounted(world, model):
+    """Per-tenant LRU partitions ride the searcher's shared budget: the
+    run populates `tenant:<name>` partitions and components, the shared
+    hit+miss==sum invariant holds, and BatchReport carries tenant rows."""
+    index, queries = world
+    tenants = {"hot": TenantConfig(rate_qps=1200, burst=4,
+                                   cache_floor_bytes=2048),
+               "cold": TenantConfig(cache_floor_bytes=2048)}
+    searcher, trace, served, report = _run(
+        index, queries, model, seed=9, n=32, tenants=tenants,
+        deadline_us=40_000.0, weights=(0.8, 0.2))
+    stats = searcher.blocks.cache_stats()
+    assert {"tenant:hot", "tenant:cold"} <= set(stats["partitions"])
+    assert stats["hits"] + stats["misses"] == sum(
+        p["hits"] + p["misses"] for p in stats["partitions"].values())
+    assert stats["memory_bytes"] <= searcher.cfg.cache_bytes
+    comp = searcher.blocks.stats()["components"]
+    assert any(k.startswith("tenant:") and v["reads"] > 0
+               for k, v in comp.items())
+    for rec in report.batches:
+        assert sum(rec.tenants.values()) == rec.n
+        assert rec.report.cut_reason == rec.reason
+        assert rec.report.queue_wait_us_mean >= 0.0
+
+
+def test_tenancy_never_changes_results(world, solo):
+    """Tenancy is measurement, not routing: the same batch with and
+    without tenant labels returns bit-identical ids/dists."""
+    index, queries = world
+    plain = _searcher(index, buckets=(8,))
+    labelled = _searcher(index, buckets=(8,), shared_budget=True)
+    q = queries[:8]
+    ids_a, d_a, _ = plain.search(q)
+    ids_b, d_b, rep = labelled.search(q, tenants=["x", "y"] * 4)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(d_a, d_b)
+    assert rep.tenants == {"x": 4, "y": 4}
+    assert len(rep.per_query_latency_us) == 8
+    with pytest.raises(ValueError):
+        labelled.search(q, tenants=["x"])       # must label every row
+
+
+# ------------------------------------------------------------- guard rails
+def test_starvation_raises(world, model):
+    index, queries = world
+    searcher = _searcher(index)
+    trace = [Request(rid=0, tenant="stuck", arrival_us=10.0,
+                     deadline_us=1e6, query=queries[0]),
+             Request(rid=1, tenant="stuck", arrival_us=20.0,
+                     deadline_us=1e6, query=queries[1])]
+    q = AdmissionQueue(searcher, model, AdmissionConfig(max_batch=4),
+                       tenants={"stuck": TenantConfig(rate_qps=0.0,
+                                                      burst=1.0)})
+    with pytest.raises(RuntimeError, match="starved"):
+        q.run(trace)
+
+
+def test_duplicate_rid_rejected(world, model):
+    index, queries = world
+    r = Request(rid=0, tenant="t", arrival_us=0.0, deadline_us=1e6,
+                query=queries[0])
+    with pytest.raises(ValueError, match="unique"):
+        AdmissionQueue(_searcher(index), model).run([r, r])
+
+
+def test_bad_config_rejected(world, model):
+    index, _ = world
+    with pytest.raises(ValueError, match="max_batch"):
+        AdmissionQueue(_searcher(index), model,
+                       AdmissionConfig(max_batch=0))
+
+
+def test_latency_percentiles_empty():
+    out = latency_percentiles([])
+    assert out == dict(p50=0.0, p95=0.0, p99=0.0, mean=0.0, max=0.0)
+
+
+def test_bursty_trace_validates_duty(world):
+    _, queries = world
+    with pytest.raises(ValueError, match="duty"):
+        bursty_trace(queries, rate_qps=100, n=4, duty=1.5)

@@ -546,3 +546,74 @@ def test_streaming_stores_share_one_engine():
     # (an incremental merge re-registers the clone, so per-component cache
     # metrics keep moving after the merge).
     assert idx.blocks.partitions["adjacency"] is published.cache
+
+
+# --------------------------------------------------------------------------
+# Per-tenant quota floors on the shared budget (ISSUE 8 satellite): a hot
+# tenant's misses can never evict a cold tenant below its reserved share.
+# --------------------------------------------------------------------------
+
+def test_quota_floor_protects_cold_tenant():
+    """Without a floor, a flooding partition evicts the cold one to zero
+    (global LRU); with a floor, the cold tenant's working set survives at
+    its quota, the flood self-evicts, and the pooled byte bound stays
+    hard."""
+    for floor, survivors in ((0, 0), (4 * 64, 4)):
+        bs = BlockStore(cache_bytes=8 * 64, shared_budget=True)
+        cold = bs.register_tenant_cache("cold", 64, floor_bytes=floor)
+        hot = bs.register_tenant_cache("hot", 64)
+        for k in range(4):
+            cold.put(k, "c")
+        for k in range(100):                     # hot tenant floods
+            hot.put(k, "h")
+        assert cold.memory_bytes == survivors * 64
+        assert sum(1 for k in range(4) if cold.get(k) is not None) \
+            == survivors
+        assert bs.budget.used_bytes <= 8 * 64    # bound stays hard
+        assert {"tenant:cold", "tenant:hot"} <= set(bs.partitions)
+
+
+def test_quota_floor_hit_miss_invariant_per_partition():
+    """The shared-budget accounting invariant survives floors: engine
+    totals == sum over tenant partitions, partition by partition."""
+    bs = BlockStore(cache_bytes=6 * 32, shared_budget=True)
+    a = bs.register_tenant_cache("a", 32, floor_bytes=2 * 32)
+    b = bs.register_tenant_cache("b", 32)
+    rng = np.random.default_rng(11)
+    for i in rng.integers(0, 20, size=300):
+        part = a if i % 3 else b
+        if part.get(int(i)) is None:
+            part.put(int(i), i)
+    stats = bs.cache_stats()
+    assert stats["hits"] + stats["misses"] == sum(
+        p["hits"] + p["misses"] for p in stats["partitions"].values())
+    assert stats["partitions"]["tenant:a"]["hits"] == a.hits
+    assert stats["partitions"]["tenant:a"]["misses"] == a.misses
+    assert a.memory_bytes >= 0 and stats["memory_bytes"] <= 6 * 32
+
+
+def test_quota_floor_overcommit_raises():
+    """Floors summing past the pooled budget would make the byte bound
+    soft; registration refuses instead."""
+    bs = BlockStore(cache_bytes=8 * 64, shared_budget=True)
+    bs.register_tenant_cache("a", 64, floor_bytes=5 * 64)
+    with pytest.raises(ValueError, match="over-commit"):
+        bs.register_tenant_cache("b", 64, floor_bytes=4 * 64)
+    # Re-registering the SAME tenant releases its old floor first.
+    bs.register_tenant_cache("a", 64, floor_bytes=6 * 64)
+    bs.register_tenant_cache("b", 64, floor_bytes=2 * 64)
+
+
+def test_quota_floor_survives_clone():
+    """clone() (the snapshot warm-handover path) keeps the floor, so a
+    published store's cache retains its tenant's quota."""
+    budget = SharedBudget(capacity_bytes=10 * 16)
+    c = LRUCache(capacity=4, entry_bytes=16, budget=budget,
+                 floor_bytes=2 * 16)
+    c.put(1, "x")
+    d = c.clone()
+    assert d.floor_bytes == 2 * 16
+    assert d.get(1) == "x"
+    assert budget.floor_bytes == 2 * (2 * 16)   # both members count
+    budget.release(c)
+    assert budget.floor_bytes == 2 * 16

@@ -44,8 +44,24 @@ def test_plan_buckets():
     # decomposed into smaller full buckets instead of padded (9 -> 8 + 1).
     assert plan_buckets(9, (1, 8, 32)) == [(0, 8, 8), (8, 1, 1)]
     assert plan_buckets(3, (8, 32)) == [(0, 3, 8)]   # nothing fits: pad
+    # The old rule silently padded any tail to its covering bucket: a
+    # 17-query batch became 32 rows (15 wasted). Padding is now weighed
+    # against the dispatch cost of peeling: 17 -> 8 + 8 + 1, zero padding.
+    assert plan_buckets(17, (1, 8, 32)) == [(0, 8, 8), (8, 8, 8), (16, 1, 1)]
+    assert plan_buckets(33, (1, 8, 32)) == [(0, 32, 32), (32, 1, 1)]
     with pytest.raises(ValueError):
         plan_buckets(4, (0,))
+
+
+def test_plan_buckets_overflow_explicit():
+    """max_chunks makes the dispatch bound explicit: a plan needing more
+    chunks raises instead of silently growing."""
+    assert plan_buckets(71, (1, 8, 32), max_chunks=3) == [
+        (0, 32, 32), (32, 32, 32), (64, 7, 8)]
+    with pytest.raises(ValueError, match="max_chunks"):
+        plan_buckets(71, (1, 8, 32), max_chunks=2)
+    with pytest.raises(ValueError, match="max_chunks"):
+        plan_buckets(17, (1, 8, 32), max_chunks=2)   # 8+8+1 needs 3
 
 
 @pytest.mark.parametrize("nq", [1, 7, 32])

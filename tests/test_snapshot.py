@@ -128,3 +128,135 @@ def test_inflight_snapshot_isolation_threaded(n_publishes):
         t.join()
     assert not errors, errors
     assert h.current().version == n_publishes
+
+
+# --------------------------------------------------------------------------
+# Hot swap under queued load: the admission tier over a live SnapshotHandle
+# (ISSUE 8 satellite). Each cut batch pins exactly ONE snapshot version —
+# a publish mid-queue lands between cuts, never inside one.
+# --------------------------------------------------------------------------
+
+def _live_world(seed=3, n=250):
+    from conftest import make_streaming_index
+    from repro.data.synthetic import make_vector_dataset
+    vecs = make_vector_dataset("prop-like", n=n, dim=16,
+                               seed=seed).astype(np.float32)
+    return vecs, make_streaming_index(vecs, r=12, m=4)
+
+
+def _live_params():
+    from repro.core.search.beam import SearchParams
+    return SearchParams(l_size=32, k=5, rerank_batch=5, max_iters=64,
+                        benefit_threshold=0.0)
+
+
+def _model():
+    from repro.core.search.engine import ServiceModel
+    return ServiceModel(per_query_us=150.0, base_us=80.0)
+
+
+def test_publish_mid_queue_single_version_per_batch():
+    """Deterministic hot swap mid-queue: the on_batch hook publishes a
+    merge between cuts. Per-batch versions are monotone, no batch splits
+    across versions, and every served request is bit-identical to a solo
+    re-search on the ARCHIVED snapshot of its pinned version — the swap
+    changed later batches, never the one in flight."""
+    from repro.core.update.consistency import SnapshotHandle
+    from repro.serve.admission import (AdmissionConfig, AdmissionQueue,
+                                       poisson_trace)
+    from repro.serve.ann import BatchedSearcher, ServeConfig
+    vecs, idx = _live_world()
+    searcher = BatchedSearcher(idx.handle, _live_params(),
+                               ServeConfig(buckets=(1, 4)))
+    snap0 = idx.handle.current()
+    archived = {snap0.version: snap0}
+
+    def publish_between_cuts(rec, batch):
+        if rec.idx == 1:
+            nid = len(vecs) + rec.idx          # within EF-universe headroom
+            idx.insert(np.array([nid]), (vecs[0] * 1.0001)[None])
+            idx.merge()                        # publishes version+1
+            snap = idx.handle.current()
+            archived[snap.version] = snap
+
+    trace = poisson_trace(vecs[:16] + 0.001, rate_qps=4000, n=16,
+                          deadline_us=50_000.0, seed=1)
+    q = AdmissionQueue(searcher, _model(), AdmissionConfig(max_batch=4),
+                       on_batch=publish_between_cuts)
+    served, report = q.run(trace)
+    assert len(served) == 16
+    versions = [rec.snapshot_version for rec in report.batches]
+    assert versions == sorted(versions)            # swaps at cut boundaries
+    assert len(set(versions)) == 2                 # the publish landed
+    for s in served:                               # no batch ever splits
+        assert s.snapshot_version == \
+            report.batches[s.batch_idx].snapshot_version
+    solos = {}
+    by_rid = {r.rid: r for r in trace}
+    for s in served:
+        if s.snapshot_version not in solos:
+            solos[s.snapshot_version] = BatchedSearcher(
+                SnapshotHandle(archived[s.snapshot_version]),
+                _live_params(), ServeConfig(buckets=(1,)))
+        i1, d1, _ = solos[s.snapshot_version].search(
+            np.asarray(by_rid[s.rid].query)[None])
+        np.testing.assert_array_equal(s.ids, np.asarray(i1)[0])
+        np.testing.assert_array_equal(s.dists, np.asarray(d1)[0])
+
+
+def test_threaded_publisher_never_splits_a_batch():
+    """A publisher THREAD merges while the queue drains (handshake pins the
+    publish between two specific cuts): versions stay monotone per batch,
+    every request in a batch shares its batch's version, and all requests
+    are served — the queued load never observes a torn snapshot."""
+    from repro.serve.admission import (AdmissionConfig, AdmissionQueue,
+                                       poisson_trace)
+    from repro.serve.ann import BatchedSearcher, ServeConfig
+    vecs, idx = _live_world(seed=5)
+    searcher = BatchedSearcher(idx.handle, _live_params(),
+                               ServeConfig(buckets=(1, 4)))
+    publish_now, published, done = (threading.Event(), threading.Event(),
+                                    threading.Event())
+    failures = []
+
+    def publisher():
+        k = 0
+        while publish_now.wait(timeout=30.0):
+            publish_now.clear()
+            if done.is_set():
+                return
+            try:
+                nid = len(vecs) + 50 + k     # within EF-universe headroom
+                k += 1
+                idx.insert(np.array([nid]), (vecs[k] * 1.0003)[None])
+                idx.merge()
+            except Exception as e:           # surfaced in the main thread
+                failures.append(e)
+            published.set()
+
+    def on_batch(rec, batch):
+        if rec.idx in (0, 2):                # land one publish mid-queue,
+            published.clear()                # between THIS cut and the next
+            publish_now.set()
+            assert published.wait(timeout=30.0), "publisher stalled"
+
+    t = threading.Thread(target=publisher)
+    t.start()
+    try:
+        trace = poisson_trace(vecs[:16] + 0.001, rate_qps=4000, n=16,
+                              deadline_us=50_000.0, seed=2)
+        q = AdmissionQueue(searcher, _model(),
+                           AdmissionConfig(max_batch=4), on_batch=on_batch)
+        served, report = q.run(trace)
+    finally:
+        done.set()
+        publish_now.set()
+        t.join(timeout=30.0)
+    assert not failures, failures
+    assert len(served) == 16
+    versions = [rec.snapshot_version for rec in report.batches]
+    assert versions == sorted(versions)
+    assert len(set(versions)) == 3               # both publishes landed
+    for s in served:
+        assert s.snapshot_version == \
+            report.batches[s.batch_idx].snapshot_version
