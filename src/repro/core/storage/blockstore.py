@@ -248,15 +248,22 @@ class BlockStore:
         budget_bytes = self.cache_bytes if cache_bytes is None else cache_bytes
         cap = budget_bytes // max(1, entry_bytes)
         existing = self.partitions.get(name)
-        if existing is not None and self.budget is not None:
-            self.budget.release(existing)
         if floor_bytes and self.budget is not None:
-            reserved = self.budget.floor_bytes + floor_bytes
+            # Validate BEFORE mutating budget state: a rejected
+            # registration must leave the existing partition installed AND
+            # tracked. The existing partition's floor is excluded — it is
+            # the one being replaced.
+            prior = (existing.floor_bytes
+                     if existing is not None
+                     and existing in self.budget._members else 0)
+            reserved = self.budget.floor_bytes - prior + floor_bytes
             if reserved > self.budget.capacity_bytes:
                 raise ValueError(
                     f"cache floors over-commit the shared budget: "
                     f"{reserved} reserved > {self.budget.capacity_bytes} "
                     f"pooled (registering {name!r})")
+        if existing is not None and self.budget is not None:
+            self.budget.release(existing)
         c = LRUCache(cap, entry_bytes, budget=self.budget,
                      floor_bytes=floor_bytes if self.budget is not None else 0)
         self.partitions[name] = c

@@ -106,13 +106,16 @@ class TokenBucket:
         self.grant_log_us: list = []
 
     def _refill(self, now_us: float) -> None:
-        if now_us > self.t_us:
-            if math.isinf(self.rate_qps):
-                self.tokens = self.burst
-            else:
-                self.tokens = min(
-                    self.burst,
-                    self.tokens + self.rate_qps * (now_us - self.t_us) / 1e6)
+        if math.isinf(self.rate_qps):
+            # An unthrottled bucket is always full — even when the clock
+            # has not advanced (equal arrival timestamps are legal input),
+            # so try_acquire never fails where peek_grant_us says "now".
+            self.tokens = self.burst
+            self.t_us = max(self.t_us, now_us)
+        elif now_us > self.t_us:
+            self.tokens = min(
+                self.burst,
+                self.tokens + self.rate_qps * (now_us - self.t_us) / 1e6)
             self.t_us = now_us
 
     def try_acquire(self, now_us: float) -> bool:

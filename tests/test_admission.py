@@ -162,6 +162,10 @@ def test_token_bucket_validates_burst():
 def test_unlimited_bucket_always_grants():
     b = TokenBucket()
     assert all(b.try_acquire(float(t)) for t in range(50))
+    # Repeated same-instant acquires must also grant (rate=inf means no
+    # throttle): an equal-timestamp failure deadlocks the event loop.
+    assert all(b.try_acquire(50.0) for _ in range(10))
+    assert b.peek_grant_us(50.0) == 50.0
 
 
 # ----------------------------------------------------------- service model
@@ -289,6 +293,37 @@ def test_deterministic_replay(world, model):
            [(r.cut_us, r.reason, r.n) for r in b[1].batches]
     for sa, sb in zip(a[0], b[0]):
         np.testing.assert_array_equal(sa.ids, sb.ids)
+
+
+@hypothesize(seed=(0, 2**31), dup=(2, 5))
+def test_equal_arrival_timestamps(world, model, seed, dup):
+    """Equal arrival timestamps are legal input (the trace sort tie-breaks
+    on rid): a burst of same-instant requests from a default (unthrottled)
+    tenant must drain — the rate=inf bucket grants at a repeated clock
+    value instead of deferring forever — and admission order follows rid."""
+    index, queries = world
+    rng = np.random.default_rng(seed)
+    t_shared = float(rng.uniform(0.0, 5e3))
+    trace = [Request(rid=r, tenant="t0", arrival_us=t_shared,
+                     deadline_us=t_shared + 50_000.0,
+                     query=queries[r % len(queries)])
+             for r in range(dup)]
+    # ...plus a throttled tenant colliding at the same instant: the first
+    # same-instant request grants, the rest defer and drain on refill.
+    trace += [Request(rid=dup + r, tenant="slow", arrival_us=t_shared,
+                      deadline_us=t_shared + 200_000.0,
+                      query=queries[r % len(queries)])
+              for r in range(2)]
+    searcher = _searcher(index, buckets=(1, 8), shared_budget=True)
+    q = AdmissionQueue(searcher, model, AdmissionConfig(max_batch=8),
+                       tenants={"slow": TenantConfig(rate_qps=400,
+                                                     burst=1)})
+    served, report = q.run(trace)
+    assert sorted(s.rid for s in served) == list(range(dup + 2))
+    same_instant = [s for s in served if s.tenant == "t0"]
+    assert all(s.admit_us == t_shared for s in same_instant)
+    assert [s.rid for s in same_instant] == sorted(
+        s.rid for s in same_instant)
 
 
 # ----------------------------------------------------- cut-policy shapes

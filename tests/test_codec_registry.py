@@ -604,6 +604,27 @@ def test_quota_floor_overcommit_raises():
     bs.register_tenant_cache("b", 64, floor_bytes=2 * 64)
 
 
+def test_quota_floor_rejected_reregistration_keeps_budget_state():
+    """A rejected RE-registration must leave budget/partition state
+    unchanged: the old partition stays installed AND tracked by the pool,
+    so its bytes never escape the capacity bound."""
+    bs = BlockStore(cache_bytes=8 * 64, shared_budget=True)
+    a = bs.register_tenant_cache("a", 64, floor_bytes=2 * 64)
+    for k in range(4):
+        a.put(k, "a")
+    with pytest.raises(ValueError, match="over-commit"):
+        bs.register_tenant_cache("a", 64, floor_bytes=9 * 64)
+    assert bs.partitions["tenant:a"] is a            # still installed
+    assert bs.budget.used_bytes == a.memory_bytes    # still tracked
+    assert bs.budget.floor_bytes == 2 * 64
+    # The tracked partition still participates in global-LRU eviction.
+    hot = bs.register_tenant_cache("hot", 64)
+    for k in range(100):
+        hot.put(k, "h")
+    assert bs.budget.used_bytes <= 8 * 64
+    assert a.memory_bytes >= 2 * 64                  # floor still enforced
+
+
 def test_quota_floor_survives_clone():
     """clone() (the snapshot warm-handover path) keeps the floor, so a
     published store's cache retains its tenant's quota."""
