@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-reorder test-kernels test-serve bench-smoke bench bench-kernels bench-update bench-storage bench-serve bench-summary quickstart
+.PHONY: test test-fast test-reorder test-kernels test-serve bench-smoke bench bench-kernels bench-update bench-storage bench-serve bench-search bench-summary quickstart
 
 test:            ## tier-1: full test suite, stop at first failure (~2.5 min)
 	$(PY) -m pytest -x -q
@@ -34,6 +34,9 @@ bench-storage:   ## planner vs fixed-codec vs colocated space savings -> BENCH_s
 
 bench-serve:     ## admission-tier SLO tails (Poisson vs bursty) -> BENCH_serve.json
 	$(PY) -m benchmarks.bench_serve
+
+bench-search:    ## blocking vs pipelined vs coresident pipeline arms -> BENCH_search.json
+	$(PY) -m benchmarks.bench_search --smoke
 
 bench-smoke:     ## ~30 s serving-path benchmark (QPS vs batch x shards)
 	$(PY) -m benchmarks.bench_serve_ann --smoke

@@ -11,8 +11,22 @@ The ``--batch`` axis (also swept by ``main``) pushes the same query set
 through the batched device serving path (`repro.serve.ann.BatchedSearcher`)
 and reports measured QPS per bucket size — wall-clock units, not I/O-model
 units, so it complements rather than replaces the frontier above.
+
+**Pipeline arms (Exp#4 companion, written to ``BENCH_search.json``):** the
+same minla-ordered DecoupleVS configuration priced three ways on fresh
+stores — ``blocking`` (every stall serial), ``pipelined`` (speculative
+multi-hop prefetch + overlap pricing), ``pipelined_coresident`` (prefetch
+over the co-residency block packing). Results are bit-identical by
+construction (asserted), so recall is pinned equal and the arms differ
+ONLY in modeled latency, blocks/hop and prefetch hit-rate.
+
+Env: REPRO_BENCH_SEARCH_OUT overrides the JSON path. ``--smoke`` runs just
+the pipeline arms on a query subset (the CI gate: pipelined <= blocking
+and coresident < blocking at identical recall).
 """
 import argparse
+import json
+import os
 import time
 
 import numpy as np
@@ -78,6 +92,105 @@ def _frontier(w, system: str):
     return pts
 
 
+# (name, EngineConfig overrides, coresident packing) per pipeline arm.
+PIPELINE_ARMS = (
+    ("blocking", dict(pricing="blocking"), False),
+    ("pipelined", dict(pricing="pipelined_overlap", prefetch_depth=8), False),
+    ("pipelined_coresident",
+     dict(pricing="pipelined_overlap", prefetch_depth=8), True),
+)
+
+
+def _pipeline_arms(w, l: int = 96, nq: int = 0, quiet: bool = False):
+    """Blocking vs pipelined vs pipelined+coresident on FRESH minla-ordered
+    stores (cold caches per arm, same queries). Returns the per-arm dict;
+    asserts bit-identical ids across arms (recall pinned equal) and the
+    latency ordering the overlap model guarantees."""
+    g = w["graph"]
+    queries = w["queries"][:nq] if nq else w["queries"]
+    gt = w["gt"][:len(queries)]
+    out, ids_ref = {}, None
+    for name, overrides, coresident in PIPELINE_ARMS:
+        ix = CompressedIndexStore.from_graph(
+            g.adjacency, g.medoid, R, cache_bytes=CACHE_BYTES,
+            order="minla", coresident=coresident)
+        cfg = EngineConfig(l_size=l, latency_aware=True, compressed=True,
+                           **overrides)
+        ids_all, stats = [], []
+        for q in queries:
+            ids, st = search_decoupled(ix, w["vs"], w["codes"], w["cb"],
+                                       q, cfg)
+            ids_all.append(np.pad(ids, (0, 10 - len(ids)),
+                                  constant_values=-1))
+            stats.append(st)
+        ids_arr = np.stack(ids_all)
+        if ids_ref is None:
+            ids_ref = ids_arr
+        else:
+            assert np.array_equal(ids_arr, ids_ref), \
+                f"{name}: prefetch/packing changed results"
+        lats = [s.latency_us for s in stats]
+        issued = sum(s.prefetch_issued for s in stats)
+        hits = sum(s.prefetch_hits for s in stats)
+        out[name] = dict(
+            l=l,
+            recall=recall_at_k(ids_arr, gt, 10),
+            latency_us=float(np.mean(lats)),
+            p50_us=float(np.percentile(lats, 50)),
+            p99_us=float(np.percentile(lats, 99)),
+            blocks_per_hop=float(np.mean([s.blocks_per_hop
+                                          for s in stats])),
+            io_rounds=int(sum(s.io_rounds for s in stats)),
+            covered_rounds=int(sum(s.covered_rounds for s in stats)),
+            prefetch_issued=int(issued),
+            prefetch_hits=int(hits),
+            prefetch_wasted=int(sum(s.prefetch_wasted for s in stats)),
+            prefetch_hit_rate=hits / issued if issued else 0.0,
+            overlap_saved_us=float(sum(s.overlap_saved_us for s in stats)),
+            sparse_index_bytes=int(ix.sparse_index_bytes),
+            component_prefetch=ix.blocks.prefetch_stats())
+        if not quiet:
+            a = out[name]
+            csv(f"exp4/pipeline_{name}", a["latency_us"],
+                f"recall={a['recall']:.3f};p50={a['p50_us']:.0f};"
+                f"bph={a['blocks_per_hop']:.2f};"
+                f"pf_hit_rate={a['prefetch_hit_rate']:.2f};"
+                f"covered={a['covered_rounds']};"
+                f"wasted={a['prefetch_wasted']}")
+    # The overlap model's guarantee (io_rounds_blocking = io_rounds +
+    # covered_rounds on an identical traversal): pipelined can never price
+    # above blocking; co-residency must win outright at this scale.
+    assert out["pipelined"]["latency_us"] <= out["blocking"]["latency_us"]
+    assert out["pipelined_coresident"]["latency_us"] \
+        < out["blocking"]["latency_us"]
+    return out
+
+
+def _write_search_json(w, arms: dict, l: int, nq: int) -> str:
+    doc = dict(
+        n=len(w["vecs"]), l=l, n_queries=nq or len(w["queries"]),
+        arms=arms,
+        suite=dict(
+            equal_recall=True,      # asserted: bit-identical ids per arm
+            pipelined_leq_blocking=bool(
+                arms["pipelined"]["latency_us"]
+                <= arms["blocking"]["latency_us"]),
+            coresident_lt_blocking=bool(
+                arms["pipelined_coresident"]["latency_us"]
+                < arms["blocking"]["latency_us"]),
+            prefetch_hit_rate=arms["pipelined"]["prefetch_hit_rate"],
+            coresident_hit_rate=arms["pipelined_coresident"][
+                "prefetch_hit_rate"]))
+    path = os.environ.get("REPRO_BENCH_SEARCH_OUT", "BENCH_search.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {path} (blocking {arms['blocking']['latency_us']:.0f}us "
+          f"-> pipelined {arms['pipelined']['latency_us']:.0f}us -> "
+          f"coresident {arms['pipelined_coresident']['latency_us']:.0f}us "
+          f"at recall={arms['blocking']['recall']:.3f})")
+    return path
+
+
 def _batched_serving(w, batches):
     """Measured QPS of the batched device path per bucket size (exp#3's
     serving companion: same corpus/queries, wall-clock units)."""
@@ -103,8 +216,12 @@ def _batched_serving(w, batches):
             f"cold_cache_hits={rep.cache_hits}")
 
 
-def main(quiet=False, batches=BATCH_SWEEP):
+def main(quiet=False, batches=BATCH_SWEEP, smoke=False):
     w = world("sift-like")
+    if smoke:
+        arms = _pipeline_arms(w, l=48, nq=16, quiet=quiet)
+        _write_search_json(w, arms, l=48, nq=16)
+        return arms
     out = {}
     for system in ("diskann", "pipeann", "decouplevs",
                    "decouplevs_reorder"):
@@ -144,6 +261,8 @@ def main(quiet=False, batches=BATCH_SWEEP):
         f"dvs_vs_diskann_qps_gain="
         f"{best_dvs['qps']/match_dk['qps']:.2f}x_at_recall~"
         f"{best_dvs['recall']:.3f}")
+    arms = _pipeline_arms(w, l=96, quiet=quiet)
+    _write_search_json(w, arms, l=96, nq=0)
     _batched_serving(w, batches)
     return out
 
@@ -152,5 +271,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", default="1,8,32",
                     help="comma-separated serving bucket sizes to sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="pipeline arms only, query subset (CI gate)")
     args = ap.parse_args()
-    main(batches=tuple(int(x) for x in args.batch.split(",")))
+    main(batches=tuple(int(x) for x in args.batch.split(",")),
+         smoke=args.smoke)

@@ -16,6 +16,9 @@ JSON artifacts (written in-harness, one per experiment family):
   bench_kernels     -> BENCH_kernels.json     (ref vs pallas vs auto-tuned)
   bench_serve       -> BENCH_serve.json       (modeled p50/p95/p99 + QPS +
                                                bursty-over-poisson p99 gate)
+  bench_search      -> BENCH_search.json      (blocking vs pipelined vs
+                                               pipelined+coresident arms at
+                                               pinned-equal recall)
 
 ``python -m benchmarks.run --summary`` folds every BENCH_*.json in the
 working directory into one trajectory row appended to ``BENCH_summary.json``
@@ -51,6 +54,13 @@ def _digest(name: str, doc: dict):
                 if r["op"] == "rerank_l2" and "c=130" in r["size"]})
     if name == "BENCH_storage.json":
         return dict(suite=doc.get("suite"))
+    if name == "BENCH_search.json":
+        return dict(
+            suite=doc.get("suite"),
+            latency_us={k: v.get("latency_us")
+                        for k, v in doc.get("arms", {}).items()},
+            blocks_per_hop={k: v.get("blocks_per_hop")
+                            for k, v in doc.get("arms", {}).items()})
     if name == "BENCH_serve.json":
         return dict(
             suite=doc.get("suite"),

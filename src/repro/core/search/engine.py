@@ -113,7 +113,14 @@ def manifest_dec_costs(manifest, backend: str = "ref"
     """(t_dec_index, t_dec_vector) in µs from a manifest's resolved codecs
     (adjacency + vector_chunks components; a missing manifest prices both
     at the legacy T_DEC; absent components price at the layer defaults:
-    elias_fano index records, xor_delta_huffman vector records)."""
+    elias_fano index records, xor_delta_huffman vector records).
+
+    Precedence, pinned by test_engine.py: the manifest picks WHICH codec
+    each tier decodes (its per-record base cost from CODEC_DEC_US);
+    ``kernel_backend`` scales HOW FAST it decodes (the backend's dec
+    ratio, via :func:`t_dec_for`). Both tiers get the backend scaling —
+    including the vector tier — so a manifest-priced engine on the pallas
+    backend pays pallas-rate vector decodes, never the ref constant."""
     if manifest is None:
         *_, dec = compute_costs(dec_backend=backend)
         return dec, dec
@@ -217,7 +224,9 @@ def merge_topk(ids, dists, k: int):
 
 @dataclass
 class QueryStats:
-    graph_ios: int = 0
+    graph_ios: int = 0              # DEMAND-equivalent graph block reads
+                                    # (wasted speculative reads excluded —
+                                    # reported in prefetch_wasted)
     vector_ios: int = 0
     cache_hits: int = 0
     pq_ops: int = 0
@@ -226,11 +235,22 @@ class QueryStats:
     graph_decs: int = 0             # adjacency-record decodes (index tier)
     vector_decs: int = 0            # vector-record decodes (data tier)
     traversal_rounds: int = 0
-    io_rounds: int = 0              # rounds with >=1 uncached block read
+    io_rounds: int = 0              # rounds with >=1 STALLING block read
+                                    # (prefetch-covered rounds excluded)
     rerank_batches: int = 0
     latency_us: float = 0.0
     blocks_per_hop: float = 0.0     # graph block reads / traversal round —
                                     # the locality metric reordering shrinks
+    # Speculative multi-hop prefetch (the I/O pipeline's warm path):
+    prefetch_issued: int = 0        # speculative block reads issued
+    prefetch_hits: int = 0          # speculations consumed by a demand read
+    prefetch_wasted: int = 0        # speculations never consumed (<= budget)
+    covered_rounds: int = 0         # rounds whose every fetch was
+                                    # prefetch-served (no stall: in the
+                                    # blocking run these rounds pay T_IO)
+    overlap_saved_us: float = 0.0   # blocking price of the same traversal
+                                    # (covered rounds stall, io+cpu serial)
+                                    # minus the overlapped price; >= 0
 
 
 @dataclass
@@ -247,6 +267,23 @@ class EngineConfig:
     manifest: object = None         # StorageManifest: price each tier's
                                     # T_DEC from its resolved codec
                                     # (CODEC_DEC_US) instead of one constant
+    prefetch_depth: int = 0         # >0: speculative multi-hop prefetch —
+                                    # issue hop k+1's provisional frontier
+                                    # blocks while hop k reranks, window
+                                    # bounded to this many blocks
+    prefetch_budget: int = 32       # max wasted speculations per query
+    pricing: str = "legacy"         # latency model: "legacy" keeps each
+                                    # arm's historical formula; "blocking"
+                                    # prices every stall serially
+                                    # (io + cpu); "pipelined_overlap"
+                                    # prices each stalled round at
+                                    # max(T_IO_eff, compute) + a pipeline
+                                    # fill term (see PRICING_MODES)
+
+
+#: Valid EngineConfig.pricing modes (validated at search time — a typo
+#: silently priced as legacy would make arm comparisons lie).
+PRICING_MODES = ("legacy", "blocking", "pipelined_overlap")
 
 
 class _CandidateList:
@@ -288,12 +325,22 @@ class _CandidateList:
 def _traverse(store_get_neighbors, pq_codes: np.ndarray, lut: np.ndarray,
               medoid: int, cfg: EngineConfig, st: QueryStats,
               colocated_vectors: dict | None = None,
-              store_get_record=None, io=None, store=None) -> _CandidateList:
+              store_get_record=None, io=None, store=None,
+              cache=None, prefetch_hint=None) -> _CandidateList:
     # Stores exposing get_neighbors_batch (CompressedIndexStore) serve each
     # beam round as ONE batched fetch with block dedup: frontier lists that
     # share a 4 KiB block cost one read — after locality reordering that is
     # the common case (blocks-per-hop < beam width). Decode + expansion
     # accounting per vertex is unchanged either way.
+    #
+    # Speculative multi-hop prefetch (prefetch_hint set): at the end of hop
+    # k — while its distances compute — the engine issues the blocks that
+    # hop k+1's PROVISIONAL frontier (the top-W unexpanded candidates
+    # *before* hop k's discoveries are pushed) would touch. Genuine
+    # speculation: a vertex hop k discovers that displaces the provisional
+    # frontier makes those issues waste. Prefetch only warms the residency
+    # window consulted for stall accounting — traversal, ids and distances
+    # are bit-identical with prefetch on or off, by construction.
     batch_fetch = getattr(store, "get_neighbors_batch", None) \
         if store_get_record is None else None
     cl = _CandidateList(cfg.l_size)
@@ -308,11 +355,17 @@ def _traverse(store_get_neighbors, pq_codes: np.ndarray, lut: np.ndarray,
         if not frontier:
             break
         st.traversal_rounds += 1
+        for vid in frontier:
+            cl.expanded.add(vid)
+        # Hop k+1's provisional frontier, read BEFORE this hop's pushes.
+        provisional = cl.next_frontier(cfg.beam_width) \
+            if prefetch_hint is not None else None
         reads_before = io.reads if io is not None else 0
+        miss_before = cache.misses if cache is not None else None
+        pfh_before = cache.prefetch_hits if cache is not None else 0
         fetched_lists = batch_fetch(frontier) if batch_fetch is not None \
             else None
         for vid in frontier:
-            cl.expanded.add(vid)
             if store_get_record is not None:             # co-located read
                 vec, nbrs = store_get_record(vid)
                 colocated_vectors[vid] = vec
@@ -328,7 +381,20 @@ def _traverse(store_get_neighbors, pq_codes: np.ndarray, lut: np.ndarray,
                 st.pq_ops += len(new)
                 for v, d in zip(new, nd):
                     cl.push(float(d), int(v))
-        if io is not None and io.reads > reads_before:
+        if prefetch_hint is not None:
+            # Issued after this hop's demand reads (which entered the
+            # residency window) so speculation never re-reads them.
+            st.prefetch_issued += prefetch_hint(provisional)
+        if cache is not None:
+            # Stall-or-not per round from the cache's classification: a
+            # remaining miss means a demand block read stalled the round; a
+            # round whose every fetch reclassified to prefetch-hit was
+            # fully covered by speculative reads already in flight.
+            if cache.misses > miss_before:
+                st.io_rounds += 1
+            elif cache.prefetch_hits > pfh_before:
+                st.covered_rounds += 1
+        elif io is not None and io.reads > reads_before:
             st.io_rounds += 1       # this round stalls on at least one read
         kb_now = tuple(cl.top_ids(cfg.k + cfg.rerank_batch))
         if kb_now == kb_prev:
@@ -342,18 +408,35 @@ def _traverse(store_get_neighbors, pq_codes: np.ndarray, lut: np.ndarray,
     return cl
 
 
+def _enable_prefetch(store, cfg: EngineConfig):
+    """Resolve the store's speculative-read hook for this search: returns
+    (hint_fn, queue) or (None, None) when prefetch is off or the store
+    does not support it. Draining is the caller's job (end of query)."""
+    if cfg.prefetch_depth <= 0:
+        return None, None
+    enable = getattr(store, "enable_prefetch", None)
+    if enable is None:
+        return None, None
+    q = enable(cfg.prefetch_depth, cfg.prefetch_budget)
+    return store.prefetch_hint, q
+
+
 def search_decoupled(index_store, vector_store, pq_codes: np.ndarray,
                      cb: PQCodebook, query: np.ndarray, cfg: EngineConfig
                      ) -> tuple[np.ndarray, QueryStats]:
     """DecoupleVS / Decouple / DecoupleComp search paths."""
     st = QueryStats()
+    _check_pricing(cfg)
+    hint, pfq = _enable_prefetch(index_store, cfg)
+    pf0 = pfq.snapshot() if pfq is not None else None
     io0 = index_store.io.snapshot()
     vio0 = vector_store.io.snapshot()
     h0 = index_store.cache.hits
     lut = build_lut(query, cb)
     cl = _traverse(index_store.get_neighbors, pq_codes, lut,
                    index_store.medoid, cfg, st, io=index_store.io,
-                   store=index_store)
+                   store=index_store, cache=index_store.cache,
+                   prefetch_hint=hint)
     K, B = cfg.k, cfg.rerank_batch
     cand = cl.top_ids(cfg.l_size)
 
@@ -400,6 +483,14 @@ def search_decoupled(index_store, vector_store, pq_codes: np.ndarray,
     st.graph_ios = io1["reads"] - io0["reads"]
     st.vector_ios = vio1["reads"] - vio0["reads"]
     st.cache_hits = index_store.cache.hits - h0
+    if pfq is not None:
+        index_store.drain_prefetch()
+        pf1 = pfq.snapshot()
+        st.prefetch_hits = pf1["hits"] - pf0["hits"]
+        st.prefetch_wasted = pf1["wasted"] - pf0["wasted"]
+        # Demand-equivalent graph I/O: a consumed speculation replaced the
+        # demand read it pre-empted, so only wasted issues are extra.
+        st.graph_ios -= st.prefetch_wasted
     st.blocks_per_hop = st.graph_ios / max(1, st.traversal_rounds)
     st.latency_us = _latency_decoupled(st, cfg)
     return np.asarray([vid for _, vid in heap], np.int64), st
@@ -410,13 +501,16 @@ def search_colocated(store, pq_codes: np.ndarray, cb: PQCodebook,
                      ) -> tuple[np.ndarray, QueryStats]:
     """DiskANN (blocking) / PipeANN (pipelined) search on co-located layout."""
     st = QueryStats()
+    _check_pricing(cfg)
+    hint, pfq = _enable_prefetch(store, cfg)
+    pf0 = pfq.snapshot() if pfq is not None else None
     io0 = store.io.snapshot()
     h0 = store.cache.hits
     lut = build_lut(query, cb)
     fetched: dict[int, np.ndarray] = {}
     cl = _traverse(None, pq_codes, lut, store.medoid, cfg, st,
                    colocated_vectors=fetched, store_get_record=store.get_record,
-                   io=store.io)
+                   io=store.io, cache=store.cache, prefetch_hint=hint)
     # Final re-rank over the vectors already co-fetched during traversal.
     ids = [vid for vid in cl.top_ids(cfg.l_size) if vid in fetched]
     vecs = np.stack([fetched[i] for i in ids]).astype(np.float32)
@@ -426,6 +520,13 @@ def search_colocated(store, pq_codes: np.ndarray, cb: PQCodebook,
     io1 = store.io.snapshot()
     st.graph_ios = io1["reads"] - io0["reads"]
     st.cache_hits = store.cache.hits - h0
+    if pfq is not None:
+        store.drain_prefetch()
+        pf1 = pfq.snapshot()
+        st.prefetch_hits = pf1["hits"] - pf0["hits"]
+        st.prefetch_wasted = pf1["wasted"] - pf0["wasted"]
+        # Each wasted issue read a whole page group on this layout.
+        st.graph_ios -= st.prefetch_wasted * store.blocks_per_record
     st.blocks_per_hop = st.graph_ios / max(1, st.traversal_rounds)
     st.latency_us = _latency_colocated(st, cfg)
     return np.asarray([vid for _, vid in heap], np.int64), st
@@ -445,11 +546,48 @@ def _cpu_us(st: QueryStats, cfg: EngineConfig | None = None) -> float:
     return st.pq_ops * t_pq + st.exact_ops * t_ex + dec_us
 
 
+def rerank_tail_us(rerank_batches: int) -> float:
+    """§3.4 rerank tail in µs: with the next batch always in flight
+    (lookahead prefetch), only the batches beyond the first outlast
+    traversal, each half-overlapped with the previous batch's read. The
+    ONE pricing of that term — the engine's latency model and the serving
+    tier's trace replay (serve/ann.py) both call this, so the two paths
+    cannot drift."""
+    return max(0, int(rerank_batches) - 1) * T_IO * 0.5
+
+
+def _check_pricing(cfg: EngineConfig) -> None:
+    if cfg.pricing not in PRICING_MODES:
+        raise ValueError(f"unknown pricing mode {cfg.pricing!r}; "
+                         f"expected {PRICING_MODES}")
+
+
+def _overlap_us(st: QueryStats, io: float, cpu: float) -> float:
+    """"pipelined_overlap" traversal price: stalled rounds overlap with
+    compute — round cost max(T_IO_eff, compute) — plus a pipeline fill
+    term when any round was prefetch-covered (the first covered round's
+    speculative read was issued only one hop ahead, so on average it is
+    half a block read short of resident when demanded). Covered rounds
+    themselves pay NO T_IO: ``io`` here already counts stalling rounds
+    only. Records on ``st`` the saving vs the "blocking" price of the
+    identical traversal — where covered rounds stall too (the
+    io_rounds_blocking = io_rounds + covered_rounds identity) and io+cpu
+    serialize — which is >= 0 by construction."""
+    fill = 0.5 * T_IO if st.covered_rounds > 0 else 0.0
+    out = max(io, cpu) + fill
+    st.overlap_saved_us = (io + st.covered_rounds * T_IO + cpu) - out
+    return out
+
+
 def _latency_colocated(st: QueryStats, cfg: EngineConfig) -> float:
     # W reads per round are issued in parallel; rounds fully served by the
     # LRU cache do not stall (cache-hit fast path).
     io = st.io_rounds * T_IO
     cpu = _cpu_us(st, cfg)
+    if cfg.pricing == "blocking":
+        return io + cpu
+    if cfg.pricing == "pipelined_overlap":
+        return _overlap_us(st, io, cpu)
     return max(io, cpu) + min(io, cpu) * 0.1 if cfg.pipelined else io + cpu
 
 
@@ -459,8 +597,12 @@ def _latency_decoupled(st: QueryStats, cfg: EngineConfig) -> float:
     if cfg.latency_aware:
         # Vector I/O off the critical path (§3.4): only the final rerank
         # batches that outlast traversal add latency.
-        tail = max(0, st.rerank_batches - 1) * T_IO * 0.5
-        return max(io, cpu) + min(io, cpu) * 0.1 + tail
-    # Vector reads serialize after traversal (the Exp#1 "Decouple" penalty).
-    vio = st.vector_ios * T_IO / max(1, cfg.beam_width)
-    return max(io, cpu) + min(io, cpu) * 0.1 + vio
+        tail = rerank_tail_us(st.rerank_batches)
+    else:
+        # Vector reads serialize after traversal (Exp#1 "Decouple" penalty).
+        tail = st.vector_ios * T_IO / max(1, cfg.beam_width)
+    if cfg.pricing == "blocking":
+        return io + cpu + tail
+    if cfg.pricing == "pipelined_overlap":
+        return _overlap_us(st, io, cpu) + tail
+    return max(io, cpu) + min(io, cpu) * 0.1 + tail

@@ -25,7 +25,8 @@ from dataclasses import dataclass, field
 
 from .layout import BLOCK_SIZE
 
-__all__ = ["BLOCK_SIZE", "IOStats", "LRUCache", "SharedBudget", "BlockStore"]
+__all__ = ["BLOCK_SIZE", "IOStats", "LRUCache", "SharedBudget",
+           "PrefetchQueue", "BlockStore"]
 
 
 @dataclass
@@ -121,7 +122,15 @@ class LRUCache:
     """Fixed-entry-size LRU (paper §3.4): capacity in entries, every entry
     reserves ``entry_bytes`` regardless of the stored value's actual size.
     Attach a :class:`SharedBudget` to pool the byte budget across several
-    partitions (the per-entry recency tick enables global LRU eviction)."""
+    partitions (the per-entry recency tick enables global LRU eviction).
+
+    Lookups split three ways under speculative prefetch: ``hits`` (entry
+    resident), ``misses`` (a demand block read stalls), and
+    ``prefetch_hits`` (entry absent but its block was speculative- or
+    buffer-resident — no stall; the owning store reclassifies via
+    :meth:`note_prefetch_hit`). ``lookups`` is counted independently so
+    ``hits + misses + prefetch_hits == lookups`` is a checkable invariant,
+    not a definition."""
 
     def __init__(self, capacity: int, entry_bytes: int,
                  budget: SharedBudget | None = None, floor_bytes: int = 0):
@@ -135,8 +144,11 @@ class LRUCache:
             budget.add(self)
         self.hits = 0
         self.misses = 0
+        self.prefetch_hits = 0
+        self.lookups = 0
 
     def get(self, key: int):
+        self.lookups += 1
         if key in self._d:
             self._d.move_to_end(key)
             if self.budget is not None:
@@ -145,6 +157,18 @@ class LRUCache:
             return self._d[key]
         self.misses += 1
         return None
+
+    def peek(self, key: int):
+        """Non-mutating, non-counted presence probe — prefetch planning
+        must not skew hit/miss stats or recency order."""
+        return self._d.get(key)
+
+    def note_prefetch_hit(self) -> None:
+        """Reclassify the most recent miss as prefetch-served: the record
+        was absent from the cache but its 4 KiB block was already resident
+        in the speculative read window, so the lookup paid no T_IO stall."""
+        self.misses -= 1
+        self.prefetch_hits += 1
 
     def put(self, key: int, value) -> None:
         if self.capacity <= 0:
@@ -188,7 +212,109 @@ class LRUCache:
         return len(self._d) * self.entry_bytes
 
     def reset_stats(self) -> None:
-        self.hits = self.misses = 0
+        self.hits = self.misses = self.prefetch_hits = self.lookups = 0
+
+
+class PrefetchQueue:
+    """Bounded speculative block-read window (the async prefetch stage of
+    the I/O-pipelined beam search).
+
+    The engine issues blocks that hop k+1's *provisional* frontier would
+    touch while hop k's distances compute (:meth:`offer`); a later demand
+    read finding its block resident (:meth:`take`) skips the T_IO stall.
+    Demand reads also enter the window (as already-consumed entries), so
+    the queue doubles as a bounded read buffer: a block fetched this hop
+    is not re-read for a different record next hop.
+
+    Two bounds keep speculation honest:
+
+    - ``depth``: the residency window holds at most this many blocks
+      (FIFO — issuing past it retires the oldest entry, and an
+      unconsumed retiree counts as waste).
+    - ``budget``: the waste cap per :meth:`drain` interval (one search).
+      ``offer`` refuses once ``wasted + outstanding`` would reach it, so
+      ``wasted <= budget`` holds at every drain even if every in-flight
+      speculation misses.
+
+    Correctness is by construction: the queue only warms residency state
+    consulted for *accounting* (stall-or-not); traversal never reads data
+    through it, so results are bit-identical with prefetch on or off.
+    """
+
+    def __init__(self, depth: int = 8, budget: int = 32):
+        if depth <= 0 or budget < 0:
+            raise ValueError(f"need depth > 0 and budget >= 0, got "
+                             f"depth={depth} budget={budget}")
+        self.depth = depth
+        self.budget = budget
+        self._resident: OrderedDict[int, bool] = OrderedDict()  # key->consumed
+        self.issued = 0          # speculative reads issued (lifetime)
+        self.hits = 0            # speculations consumed by a demand read
+        self.wasted = 0          # speculations never consumed (lifetime)
+        self._window_wasted = 0  # waste since the last drain (budget window)
+
+    @property
+    def outstanding(self) -> int:
+        """Speculative entries not yet consumed by a demand read."""
+        return sum(1 for c in self._resident.values() if not c)
+
+    def _retire_oldest(self) -> None:
+        _, consumed = self._resident.popitem(last=False)
+        if not consumed:
+            self.wasted += 1
+            self._window_wasted += 1
+
+    def offer(self, key: int) -> bool:
+        """Issue a speculative read for ``key`` unless it is already
+        resident or the waste budget is exhausted. Returns True when a
+        read was issued — the caller accounts the block I/O."""
+        key = int(key)
+        if key in self._resident:
+            return False
+        if self._window_wasted + self.outstanding >= self.budget:
+            return False              # worst case every in-flight one misses
+        self._resident[key] = False
+        self.issued += 1
+        while len(self._resident) > self.depth:
+            self._retire_oldest()
+        return True
+
+    def fill(self, key: int) -> None:
+        """Record a DEMAND read in the window (already consumed: it can
+        satisfy later :meth:`take` calls but never counts as waste)."""
+        self._resident[int(key)] = True
+        self._resident.move_to_end(int(key))
+        while len(self._resident) > self.depth:
+            self._retire_oldest()
+
+    def take(self, key: int) -> bool:
+        """Demand-side probe: True iff ``key`` is resident (speculative or
+        buffered) — the read already happened, no stall. First consumption
+        of a speculative entry counts as a prefetch hit."""
+        key = int(key)
+        if key not in self._resident:
+            return False
+        if not self._resident[key]:
+            self._resident[key] = True
+            self.hits += 1
+        return True
+
+    def drain(self) -> int:
+        """End of one search: unconsumed speculations become waste, the
+        window empties, and the per-search waste budget resets. Returns
+        the waste charged by this drain."""
+        n = 0
+        for consumed in self._resident.values():
+            if not consumed:
+                n += 1
+        self.wasted += n
+        self._resident.clear()
+        self._window_wasted = 0
+        return n
+
+    def snapshot(self) -> dict:
+        return dict(issued=self.issued, hits=self.hits, wasted=self.wasted,
+                    depth=self.depth, budget=self.budget)
 
 
 class BlockStore:
@@ -209,6 +335,7 @@ class BlockStore:
         self.budget = SharedBudget(cache_bytes) if shared_budget else None
         self.components: dict[str, IOStats] = {}
         self.partitions: dict[str, LRUCache] = {}
+        self.prefetch_queues: dict[str, PrefetchQueue] = {}
 
     # ----------------------------------------------------------- components
     def component_io(self, name: str) -> IOStats:
@@ -278,6 +405,19 @@ class BlockStore:
         return self.register_cache(f"tenant:{tenant}", entry_bytes,
                                    floor_bytes=floor_bytes)
 
+    def register_prefetch(self, name: str, depth: int = 8,
+                          budget: int = 32) -> PrefetchQueue:
+        """The component's speculative-read window. Idempotent for
+        unchanged bounds (the engine enables prefetch per search config,
+        and re-enabling must not reset lifetime counters); changed bounds
+        install a fresh queue."""
+        q = self.prefetch_queues.get(name)
+        if q is not None and (q.depth, q.budget) == (depth, budget):
+            return q
+        q = PrefetchQueue(depth, budget)
+        self.prefetch_queues[name] = q
+        return q
+
     def replace_cache(self, name: str, cache: LRUCache) -> LRUCache:
         """Install an externally-built partition (e.g. the ``clone()`` an
         incremental merge hands the published store) as the component's
@@ -301,18 +441,28 @@ class BlockStore:
         invariant ``total hits+misses == sum(partition hits+misses)`` holds
         by construction — the partitions ARE the pool's members."""
         per = {name: dict(hits=c.hits, misses=c.misses,
+                          prefetch_hits=c.prefetch_hits, lookups=c.lookups,
                           memory_bytes=c.memory_bytes)
                for name, c in self.partitions.items()}
         return dict(
             hits=sum(p["hits"] for p in per.values()),
             misses=sum(p["misses"] for p in per.values()),
+            prefetch_hits=sum(p["prefetch_hits"] for p in per.values()),
+            lookups=sum(p["lookups"] for p in per.values()),
             memory_bytes=sum(p["memory_bytes"] for p in per.values()),
             shared_budget=self.budget is not None,
             budget_bytes=self.cache_bytes,
             partitions=per)
 
+    def prefetch_stats(self) -> dict:
+        """Per-component speculative-read counters (hit rate = consumed
+        speculations / issued — the bench's per-component report)."""
+        return {name: q.snapshot()
+                for name, q in self.prefetch_queues.items()}
+
     def stats(self) -> dict:
         return dict(total=self.io.snapshot(),
                     components={n: s.snapshot()
                                 for n, s in self.components.items()},
-                    cache=self.cache_stats())
+                    cache=self.cache_stats(),
+                    prefetch=self.prefetch_stats())

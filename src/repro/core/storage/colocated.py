@@ -18,7 +18,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .blockstore import BlockStore, IOStats, LRUCache
+from .blockstore import BlockStore, IOStats, LRUCache, PrefetchQueue
 from .layout import BLOCK_SIZE
 
 #: BlockStore component this baseline accounts under (see blockstore.py).
@@ -34,6 +34,7 @@ class ColocatedStore:
     io: IOStats = None
     cache: LRUCache = None     # keyed by BLOCK index (block granularity)
     blocks: BlockStore = None
+    prefetch: PrefetchQueue = None   # speculative block window (engine-set)
 
     @classmethod
     def build(cls, vectors: np.ndarray, adjacency: list, medoid: int, r: int,
@@ -86,13 +87,53 @@ class ColocatedStore:
 
     def get_record(self, vid: int) -> tuple[np.ndarray, np.ndarray]:
         """One I/O returns (vector, neighbor list) — co-located semantics.
-        The block is cached, so neighbors packed into the same page hit."""
+        The block is cached, so neighbors packed into the same page hit; a
+        block resident in the prefetch window skips the read (and the
+        lookup reclassifies miss -> prefetch hit: no stall)."""
         bid = self.block_of(int(vid))
         if self.cache.get(bid) is None:
-            nblocks = self.blocks_per_record
-            self.io.read(nblocks * BLOCK_SIZE, n=nblocks)
+            if self.prefetch is not None and self.prefetch.take(bid):
+                self.cache.note_prefetch_hit()
+            else:
+                nblocks = self.blocks_per_record
+                self.io.read(nblocks * BLOCK_SIZE, n=nblocks)
+                if self.prefetch is not None:
+                    self.prefetch.fill(bid)
             self.cache.put(bid, True)
         return (self.vectors[int(vid)], self.neighbors[int(vid)])
+
+    # ---------------------------------------------------------- prefetch
+    def enable_prefetch(self, depth: int = 8, budget: int = 32
+                        ) -> PrefetchQueue:
+        """Attach the speculative block-read window (PipeANN-style
+        overlap on the co-located layout; idempotent for unchanged
+        bounds)."""
+        bs = self.blocks if self.blocks is not None else BlockStore()
+        self.blocks = bs
+        self.prefetch = bs.register_prefetch(COMPONENT, depth, budget)
+        return self.prefetch
+
+    def prefetch_hint(self, ids) -> int:
+        """Speculatively read the pages holding ``ids``'s records (hop
+        k+1's provisional frontier). Accounting-only warm-up; returns
+        page-group issues (a record wider than a page reads all its
+        blocks, same as the demand path)."""
+        if self.prefetch is None:
+            return 0
+        n = 0
+        for vid in ids:
+            bid = self.block_of(int(vid))
+            if self.cache.peek(bid) is not None:
+                continue
+            if self.prefetch.offer(bid):
+                nblocks = self.blocks_per_record
+                self.io.read(nblocks * BLOCK_SIZE, n=nblocks)
+                n += 1
+        return n
+
+    def drain_prefetch(self) -> int:
+        """End-of-search barrier: unconsumed speculations become waste."""
+        return self.prefetch.drain() if self.prefetch is not None else 0
 
     def rewrite_all(self) -> IOStats:
         """Full index rewrite (what FreshDiskANN merges pay on this layout),

@@ -16,12 +16,13 @@ import numpy as np
 
 from ..codec import elias_fano as ef
 from ..codec import registry as codecs
-from .blockstore import BlockStore, IOStats, LRUCache  # noqa: F401  (one
-                                              # definition, in blockstore.py;
-                                              # re-exported for the
-                                              # historical import path)
-from .layout import (BLOCK_SIZE, block_bytes_needed, pack_block_image,
-                     pack_blocks)
+from .blockstore import (BlockStore, IOStats, LRUCache,  # noqa: F401  (one
+                         PrefetchQueue)           # definition, in
+                                              # blockstore.py; re-exported
+                                              # for the historical import
+                                              # path)
+from .layout import (BLOCK_SIZE, block_bytes_needed, locate_block_runs,
+                     pack_block_image, pack_blocks, pack_blocks_coresident)
 
 #: BlockStore component this tier accounts under (see blockstore.py).
 COMPONENT = "adjacency"
@@ -83,6 +84,17 @@ class CompressedIndexStore:
     #: codecs win the planner) and frontier lists co-resident in few blocks
     #: (``get_neighbors_batch`` dedupes the reads).
     order: object = None
+    #: Co-resident seal layout: blocks group each record with its hottest
+    #: in-order graph neighbors (pack_blocks_coresident) instead of packing
+    #: id-order-first-fit; the sparse index stays sorted through the runs
+    #: indirection (run_first_id/run_block).
+    coresident: bool = False
+    run_first_id: np.ndarray = None
+    run_block: np.ndarray = None
+    #: Speculative block-read window (blockstore.PrefetchQueue), enabled by
+    #: the engine via :meth:`enable_prefetch`. Only warms residency
+    #: accounting — reads/decodes return identical data either way.
+    prefetch: PrefetchQueue = None
 
     @classmethod
     def from_graph(cls, adjacency: list, medoid: int, r: int,
@@ -91,11 +103,17 @@ class CompressedIndexStore:
                    fill_factor: float = 1.0,
                    codec: str = "elias_fano",
                    block_store: BlockStore = None,
-                   order=None) -> "CompressedIndexStore":
+                   order=None,
+                   coresident: bool = False) -> "CompressedIndexStore":
         """``order`` may be a :class:`~repro.core.graph.reorder.GraphOrder`
         or an ordering-kind string (``"bfs"``/``"bisection"``/``"identity"``,
         computed here from the graph + medoid). The permutation is applied
-        at THIS seal point; everything above keeps speaking external ids."""
+        at THIS seal point; everything above keeps speaking external ids.
+
+        ``coresident=True`` packs each adjacency record into the same 4 KiB
+        block as its hottest in-order neighbors (composes with the
+        orderings: positions near each other are graph-near, so the greedy
+        grouping finds whole neighborhoods that fit one block)."""
         n = len(adjacency)
         universe = universe or n
         if isinstance(order, str):
@@ -106,15 +124,20 @@ class CompressedIndexStore:
             if order.n != n:
                 raise ValueError(f"order covers {order.n} vertices, "
                                  f"graph has {n}")
-            records = [cdc.encode(
+            internal_adj = [
                 np.sort(order.perm[np.asarray(adjacency[int(ext)],
-                                              np.int64)]).astype(np.uint64),
-                universe=universe) for ext in order.inv]
+                                              np.int64)]) for ext in order.inv]
         else:
-            records = [cdc.encode(np.sort(np.asarray(adj, np.uint64)),
-                                  universe=universe) for adj in adjacency]
-        pk = pack_blocks(np.arange(n), records, implicit_ids=True,
-                         fill_factor=fill_factor)
+            internal_adj = [np.sort(np.asarray(adj, np.int64))
+                            for adj in adjacency]
+        records = [cdc.encode(adj.astype(np.uint64), universe=universe)
+                   for adj in internal_adj]
+        if coresident:
+            pk = pack_blocks_coresident(np.arange(n), records, internal_adj,
+                                        fill_factor=fill_factor)
+        else:
+            pk = pack_blocks(np.arange(n), records, implicit_ids=True,
+                             fill_factor=fill_factor)
         bs = block_store or BlockStore()
         entry_bytes = _record_bound(codec, r, universe)
         return cls(data=pk.data, n_blocks=pk.n_blocks,
@@ -125,7 +148,8 @@ class CompressedIndexStore:
                    cache=bs.register_cache(COMPONENT, entry_bytes,
                                            cache_bytes),
                    fill_factor=fill_factor, codec=codec, blocks=bs,
-                   order=order)
+                   order=order, coresident=coresident,
+                   run_first_id=pk.run_first_id, run_block=pk.run_block)
 
     # ------------------------------------------------------ incremental merge
     def rewrite_blocks(self, adjacency: list, dirty_ids,
@@ -160,6 +184,12 @@ class CompressedIndexStore:
             # planner chose from them) would quietly rot. Reject; the
             # full-rebuild fallback computes a fresh ordering over n_new.
             return None
+        if self.coresident and n_new > n_old:
+            # Co-resident grouping is a seal-time decision over the whole
+            # graph: tail-packing appended vertices alone would neither
+            # join their neighborhoods' blocks nor keep the runs sparse
+            # index minimal. Full rebuild recomputes the grouping.
+            return None
         dirty_list = list(dirty_ids)
         dirty = np.unique(np.asarray(dirty_list, np.int64)) \
             if dirty_list else np.zeros(0, np.int64)
@@ -193,13 +223,21 @@ class CompressedIndexStore:
                                   np.zeros(len(appended), np.int32)])
         touched = np.unique(self.rec_block[dirty_pos]) \
             if len(dirty_pos) else np.zeros(0, np.int32)
+        implicit = not self.coresident   # co-resident blocks hold
+        # non-consecutive member ids, so their images carry the explicit
+        # u32-id header layout (same flag from_graph sealed them with).
         for b in touched:
-            # positions are dense-ascending and packed in order, so
-            # rec_block is non-decreasing: block b's members are one
-            # contiguous position range.
-            members = np.arange(
-                np.searchsorted(self.rec_block, b, side="left"),
-                np.searchsorted(self.rec_block, b, side="right"))
+            if self.coresident:
+                # Co-resident grouping scatters a block's members across
+                # the position space: recover them from the assignment.
+                members = np.flatnonzero(self.rec_block == b)
+            else:
+                # positions are dense-ascending and packed in order, so
+                # rec_block is non-decreasing: block b's members are one
+                # contiguous position range.
+                members = np.arange(
+                    np.searchsorted(self.rec_block, b, side="left"),
+                    np.searchsorted(self.rec_block, b, side="right"))
             payloads = []
             for vid in members:
                 vid = int(vid)
@@ -210,12 +248,12 @@ class CompressedIndexStore:
                     payloads.append(self.data[s:s + int(self.rec_len[vid])])
             need = block_bytes_needed(len(members),
                                       sum(len(p) for p in payloads),
-                                      implicit_ids=True)
+                                      implicit_ids=implicit)
             if need > BLOCK_SIZE:                  # grown past the block
                 return None
             base = int(b) * BLOCK_SIZE
             img, offsets = pack_block_image(members, payloads,
-                                            implicit_ids=True)
+                                            implicit_ids=implicit)
             for vid, off, rec in zip(members, offsets, payloads):
                 rec_start[int(vid)] = base + int(off)
                 rec_len[int(vid)] = len(rec)
@@ -256,7 +294,9 @@ class CompressedIndexStore:
             universe=self.universe, r=self.r,
             medoid=self.medoid if medoid is None else medoid,
             io=io, cache=cache, fill_factor=self.fill_factor,
-            codec=self.codec, blocks=self.blocks, order=self.order)
+            codec=self.codec, blocks=self.blocks, order=self.order,
+            coresident=self.coresident,
+            run_first_id=self.run_first_id, run_block=self.run_block)
         return store, report
 
     # ------------------------------------------------------------- reads
@@ -282,11 +322,24 @@ class CompressedIndexStore:
             vals = np.sort(self.order.inv[vals])
         return vals
 
+    def _demand_block(self, bid: int) -> bool:
+        """Account one demand block fetch. Returns True when the block was
+        already resident in the prefetch window (speculative or buffered) —
+        no new read, no stall; otherwise accounts the read and enters the
+        block into the window as a buffered (consumed) entry."""
+        if self.prefetch is not None and self.prefetch.take(bid):
+            return True
+        self.io.read(BLOCK_SIZE)
+        if self.prefetch is not None:
+            self.prefetch.fill(bid)
+        return False
+
     def get_neighbors(self, vid: int) -> np.ndarray:
         cached = self.cache.get(vid)
         if cached is not None:
             return cached
-        self.io.read(BLOCK_SIZE)                 # one block read
+        if self._demand_block(self.block_of(int(vid))):
+            self.cache.note_prefetch_hit()       # absent list, resident block
         out = self._decode_record(int(vid))
         self.cache.put(int(vid), out)
         return out
@@ -297,7 +350,8 @@ class CompressedIndexStore:
         locality reordering exists for (co-resident frontiers). Returns
         {external id -> sorted external neighbor ids}; per-list decode
         accounting is unchanged (each miss still decompresses its own
-        record)."""
+        record). Blocks already resident in the prefetch window skip the
+        read (their lists reclassify miss -> prefetch hit)."""
         out: dict[int, np.ndarray] = {}
         misses: list[int] = []
         for vid in ids:
@@ -308,13 +362,50 @@ class CompressedIndexStore:
             else:
                 misses.append(vid)
         if misses:
-            for _ in np.unique([self.block_of(v) for v in misses]):
-                self.io.read(BLOCK_SIZE)
+            served = {int(b) for b in
+                      np.unique([self.block_of(v) for v in misses])
+                      if self._demand_block(int(b))}
             for vid in misses:
+                if self.block_of(vid) in served:
+                    self.cache.note_prefetch_hit()
                 rec = self._decode_record(vid)
                 self.cache.put(vid, rec)
                 out[vid] = rec
         return out
+
+    # ---------------------------------------------------------- prefetch
+    def enable_prefetch(self, depth: int = 8, budget: int = 32
+                        ) -> PrefetchQueue:
+        """Attach the speculative block-read window (idempotent for
+        unchanged bounds; registered on the owning BlockStore so the
+        per-component counters live with the rest of the engine stats)."""
+        bs = self.blocks if self.blocks is not None else BlockStore()
+        self.blocks = bs
+        self.prefetch = bs.register_prefetch(COMPONENT, depth, budget)
+        return self.prefetch
+
+    def prefetch_hint(self, ids) -> int:
+        """Speculatively read the blocks holding ``ids``'s records (the
+        engine calls this with hop k+1's provisional frontier while hop
+        k's distances compute). Pure accounting warm-up: never decodes,
+        never touches the record cache's stats, never changes traversal.
+        Returns the number of block reads issued."""
+        if self.prefetch is None:
+            return 0
+        n = 0
+        for vid in ids:
+            vid = int(vid)
+            if self.cache.peek(vid) is not None:   # list already decoded
+                continue
+            if self.prefetch.offer(self.block_of(vid)):
+                self.io.read(BLOCK_SIZE)
+                n += 1
+        return n
+
+    def drain_prefetch(self) -> int:
+        """End-of-search barrier: unconsumed speculations become waste and
+        the per-search waste budget resets."""
+        return self.prefetch.drain() if self.prefetch is not None else 0
 
     # ------------------------------------------------------------- sizes
     @property
@@ -323,7 +414,22 @@ class CompressedIndexStore:
 
     @property
     def sparse_index_bytes(self) -> int:
+        if self.coresident and self.run_first_id is not None:
+            # Runs indirection: 4 B boundary id + 4 B block per run.
+            return 8 * len(self.run_first_id)
         return 4 * self.n_blocks                  # 4 B/entry (§3.3)
+
+    def locate(self, vid: int) -> int:
+        """Sparse-index block lookup for ``vid`` (external id) — the
+        modeled in-memory structure a disk deployment would consult. Must
+        agree with ``block_of`` (which indexes the full ``rec_block``
+        array) for every stored id; the co-resident tier answers through
+        the sorted runs indirection."""
+        pos = self._pos(vid)
+        if self.coresident and self.run_first_id is not None:
+            return locate_block_runs(self.run_first_id, self.run_block, pos)
+        from .layout import locate_block
+        return locate_block(self.sparse_index, pos)
 
     @classmethod
     def sparse_index_worst_case_bytes(cls, n: int, r: int) -> int:

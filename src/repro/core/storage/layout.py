@@ -44,13 +44,28 @@ def chunk_metadata_bytes(c_bytes: int, v_bytes: int, alpha: float = 1.0) -> int:
 
 @dataclass
 class PackedBlocks:
-    """Records packed into 4 KiB blocks (one physical byte image)."""
+    """Records packed into 4 KiB blocks (one physical byte image).
+
+    In-order packings (:func:`pack_blocks`) keep ``rec_block``
+    non-decreasing and ``block_first_id`` sorted, so a plain boundary
+    search (:func:`locate_block`) maps ids to blocks. Co-resident packings
+    (:func:`pack_blocks_coresident`) group each record with its graph
+    neighbors instead, so a block holds a non-consecutive id set; the
+    sparse index then stays sorted via the *runs* indirection —
+    ``run_first_id`` (sorted maximal same-block id runs) pointing into
+    ``run_block`` (:func:`locate_block_runs`)."""
     data: np.ndarray          # uint8 [n_blocks * BLOCK_SIZE]
     n_blocks: int
     rec_block: np.ndarray     # [m] int32 block index per record
     rec_start: np.ndarray     # [m] int64 absolute payload offset in `data`
     rec_len: np.ndarray       # [m] int32
     block_first_id: np.ndarray  # [n_blocks] int64 (boundary ids, §3.3)
+    run_first_id: np.ndarray = None   # [n_runs] sorted first id per run
+    run_block: np.ndarray = None      # [n_runs] block of each run
+
+    @property
+    def coresident(self) -> bool:
+        return self.run_first_id is not None
 
     @property
     def physical_bytes(self) -> int:
@@ -166,6 +181,118 @@ def locate_block(block_first_id: np.ndarray, vector_id: int) -> int:
     """Sparse-index lookup: boundary ids -> block index (§3.3)."""
     b = int(np.searchsorted(block_first_id, vector_id, side="right")) - 1
     return max(b, 0)
+
+
+def id_runs(ids: np.ndarray, rec_block: np.ndarray
+            ) -> tuple[np.ndarray, np.ndarray]:
+    """Runs sparse index for an arbitrary id->block assignment: walk the
+    ids in sorted order and cut a run wherever the block changes. Returns
+    ``(run_first_id, run_block)`` — the boundary array stays sorted (the
+    §3.3 searchsorted lookup survives co-resident packing), and the block
+    column is the indirection table. For an in-order packing this
+    degenerates to exactly one run per block."""
+    ids = np.asarray(ids, np.int64)
+    rec_block = np.asarray(rec_block, np.int64)
+    if not len(ids):
+        return np.zeros(0, np.int64), np.zeros(0, np.int32)
+    order = np.argsort(ids, kind="stable")
+    sid, sblk = ids[order], rec_block[order]
+    cut = np.flatnonzero(np.diff(sblk) != 0) + 1
+    starts = np.concatenate([[0], cut])
+    return sid[starts].astype(np.int64), sblk[starts].astype(np.int32)
+
+
+def locate_block_runs(run_first_id: np.ndarray, run_block: np.ndarray,
+                      vector_id: int) -> int:
+    """Sparse-index lookup through the runs indirection table: sorted
+    boundary search, then one indexed read of the block column."""
+    r = int(np.searchsorted(run_first_id, vector_id, side="right")) - 1
+    return int(run_block[max(r, 0)])
+
+
+def pack_blocks_coresident(ids: np.ndarray,
+                           records: list[bytes | np.ndarray],
+                           neighbors: list,
+                           fill_factor: float = 1.0) -> PackedBlocks:
+    """Greedy co-residency packing: group each record into the same 4 KiB
+    block as its hottest in-order graph neighbors, so one block read
+    serves several members of a beam hop's frontier.
+
+    ``neighbors[i]`` lists the RECORD INDICES adjacent to record ``i``
+    (for a seal-ordered store these are internal positions — the packing
+    composes with bfs/bisection/minla orderings, which is what makes
+    "nearest position" a good hotness proxy). Seeds are taken in record
+    order; each open block greedily admits the unplaced neighbor of its
+    members whose position is closest to the seed (ties to the lower id)
+    until the fill cap is reached. Every record keeps its array slot:
+    ``rec_block``/``rec_start`` stay indexed by record position, only the
+    physical placement is grouped.
+
+    Block images use the explicit-id header layout (member ids are not
+    consecutive, so the implicit-id elision of :func:`pack_blocks` cannot
+    apply — 6 B/record instead of 2 B; the runs sparse index prices the
+    rest of the difference). ``run_first_id``/``run_block`` are populated
+    for the sorted-boundary lookup."""
+    import heapq as _hq
+
+    m = len(records)
+    ids = np.asarray(ids, dtype=np.int64)
+    lens = np.array([len(r) for r in records], dtype=np.int64)
+    if np.any(lens + _HDR_FIXED + _HDR_PER_REC > BLOCK_SIZE):
+        raise ValueError("record larger than a block")
+    if not 0.0 < fill_factor <= 1.0:
+        raise ValueError(f"fill_factor must be in (0, 1], got {fill_factor}")
+    limit = int(BLOCK_SIZE * fill_factor)
+    placed = np.full(m, -1, np.int32)       # record -> block
+    blocks: list[list[int]] = []
+    for seed in range(m):
+        if placed[seed] >= 0:
+            continue
+        b = len(blocks)
+        blocks.append([seed])
+        placed[seed] = b
+        used = _HDR_FIXED + _HDR_PER_REC + int(lens[seed])
+        # Hotness heap over unplaced neighbors of current members:
+        # closest in-order position to the seed first.
+        heap: list[tuple[int, int]] = []
+        for v in neighbors[seed]:
+            v = int(v)
+            if 0 <= v < m and placed[v] < 0:
+                _hq.heappush(heap, (abs(v - seed), v))
+        while heap:
+            _, cand = _hq.heappop(heap)
+            if placed[cand] >= 0:
+                continue
+            need = _HDR_PER_REC + int(lens[cand])
+            if used + need > limit:
+                continue            # try a smaller/closer record instead
+            blocks[b].append(cand)
+            placed[cand] = b
+            used += need
+            for v in neighbors[cand]:
+                v = int(v)
+                if 0 <= v < m and placed[v] < 0:
+                    _hq.heappush(heap, (abs(v - seed), v))
+    n_blocks = len(blocks)
+    data = np.zeros(n_blocks * BLOCK_SIZE, dtype=np.uint8)
+    rec_start = np.zeros(m, np.int64)
+    block_first_id = np.zeros(n_blocks, np.int64)
+    for b, members in enumerate(blocks):
+        members = sorted(members)
+        base = b * BLOCK_SIZE
+        img, offsets = pack_block_image(ids[members],
+                                        [records[i] for i in members],
+                                        implicit_ids=False)
+        data[base:base + BLOCK_SIZE] = img
+        block_first_id[b] = ids[members[0]]
+        for j, i in enumerate(members):
+            rec_start[i] = base + offsets[j]
+    run_first_id, run_block = id_runs(ids, placed)
+    return PackedBlocks(data=data, n_blocks=n_blocks,
+                        rec_block=placed.astype(np.int32),
+                        rec_start=rec_start, rec_len=lens.astype(np.int32),
+                        block_first_id=block_first_id,
+                        run_first_id=run_first_id, run_block=run_block)
 
 
 # ---------------------------------------------------------------------------

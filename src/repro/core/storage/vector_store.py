@@ -28,7 +28,8 @@ from .blockstore import BlockStore, IOStats  # noqa: F401  (one definition,
                                              # in blockstore.py; re-exported
                                              # for the historical import path)
 from .layout import (BLOCK_SIZE, PackedBlocks, beta_for_chunk,
-                     chunk_metadata_bytes, chunk_size_for_beta, pack_blocks)
+                     chunk_metadata_bytes, chunk_size_for_beta, id_runs,
+                     pack_blocks, pack_blocks_coresident)
 
 #: BlockStore component this tier accounts under (see blockstore.py).
 COMPONENT = "vector_chunks"
@@ -45,11 +46,17 @@ class ChunkMeta:
     n_blocks: int
     boundary_ids: np.ndarray     # first id of each block in this chunk
     base: np.ndarray | None      # XOR base (None -> delta not applied)
+    n_runs: int = 0              # coresident packing: sorted id runs in the
+                                 # indirection sparse index (0 = in-order
+                                 # layout, one boundary id per block)
 
     @property
     def meta_bytes(self) -> int:
-        # offset(4) + n_blocks(4) + 4 per boundary id + base vector V bytes
-        return 8 + 4 * len(self.boundary_ids) + (len(self.base) if self.base is not None else 0)
+        # offset(4) + n_blocks(4) + base vector V bytes + sparse index:
+        # 4 per boundary id in order, 8 per run (id + block) co-resident.
+        base = len(self.base) if self.base is not None else 0
+        index = 8 * self.n_runs if self.n_runs else 4 * len(self.boundary_ids)
+        return 8 + index + base
 
 
 @dataclass
@@ -189,6 +196,13 @@ class StoreConfig:
                                         # (vecs[inv], codes[inv], relabeled
                                         # graph) asserts against; the store
                                         # itself stays id-transparent
+    coresident: bool = False            # seal-time co-residency packing:
+                                        # group each chunk's records into
+                                        # blocks with their graph neighbors
+                                        # (set_affinity) so one block read
+                                        # serves several frontier vectors;
+                                        # the chunk sparse index becomes the
+                                        # runs indirection (ChunkMeta.n_runs)
 
     @property
     def v_bytes(self) -> int:
@@ -244,6 +258,7 @@ class DecoupledVectorStore:
         self.active = self._new_mutable()
         self.loc: dict[int, tuple[int, int]] = {}   # id -> (segment, row); -1 = active
         self.compress_count = 0
+        self._affinity = None       # id -> neighbor ids (coresident seals)
 
     # ------------------------------------------------------------- writes
     def _new_mutable(self) -> MutableSegment:
@@ -263,6 +278,25 @@ class DecoupledVectorStore:
         # Active-segment locations (rows never move until seal).
         for j, i in enumerate(self.active.ids):
             self.loc[int(i)] = (-1, j)
+
+    def set_affinity(self, adjacency) -> None:
+        """Install the graph adjacency (external id -> neighbor id array;
+        a list indexed by id or a dict) that coresident seals group
+        blocks by. Only consulted when ``cfg.coresident``; affects future
+        seals, never already-sealed segments. Because lookups stay routed
+        through record-indexed ``rec_block``/``rec_start``, reads are
+        bit-identical with or without affinity — only block grouping (and
+        thus blocks-per-fetch I/O) changes."""
+        self._affinity = adjacency
+
+    def _affinity_of(self, vid: int) -> np.ndarray:
+        a = self._affinity
+        if a is None:
+            return np.zeros(0, np.int64)
+        adj = a.get(vid) if hasattr(a, "get") else \
+            (a[vid] if 0 <= vid < len(a) else None)
+        return np.asarray(adj, np.int64) if adj is not None \
+            else np.zeros(0, np.int64)
 
     def seal_active(self) -> None:
         seg = self.active
@@ -329,13 +363,29 @@ class DecoupledVectorStore:
             table, bases = None, [None] * len(chunk_slices)
             records = [vb[i] for i in range(m)]
         # Pack per chunk so blocks never span chunks (Fig. 4).
+        coresident = self.cfg.coresident and self._affinity is not None
         chunk_packs, chunks = [], []
         first_block = 0
         for ci, (lo, hi) in enumerate(chunk_slices):
-            pk = pack_blocks(ids[lo:hi], records[lo:hi])
+            if coresident:
+                # Affinity restricted to the chunk: neighbor external ids
+                # mapped to in-chunk rows (records never span chunks, so
+                # cross-chunk edges cannot be honored).
+                cids = ids[lo:hi]
+                nbrs = []
+                for vid in cids:
+                    adj = self._affinity_of(int(vid))
+                    pos = np.searchsorted(cids, adj)
+                    np.clip(pos, 0, len(cids) - 1, out=pos)
+                    nbrs.append(pos[cids[pos] == adj])
+                pk = pack_blocks_coresident(cids, records[lo:hi], nbrs)
+            else:
+                pk = pack_blocks(ids[lo:hi], records[lo:hi])
             chunks.append(ChunkMeta(first_block=first_block, n_blocks=pk.n_blocks,
                                     boundary_ids=pk.block_first_id,
-                                    base=bases[ci]))
+                                    base=bases[ci],
+                                    n_runs=len(pk.run_first_id)
+                                    if pk.coresident else 0))
             chunk_packs.append(pk)
             first_block += pk.n_blocks
         data = np.concatenate([pk.data for pk in chunk_packs]) if chunk_packs \
@@ -350,13 +400,17 @@ class DecoupledVectorStore:
             if chunk_packs else np.zeros(0, np.int64)
         rec_len = np.concatenate([pk.rec_len for pk in chunk_packs]) \
             if chunk_packs else np.zeros(0, np.int32)
+        run_first_id = run_block = None
+        if coresident and chunk_packs:
+            run_first_id, run_block = id_runs(ids, rec_block)
         merged = PackedBlocks(data=data, n_blocks=first_block,
                               rec_block=rec_block.astype(np.int32),
                               rec_start=rec_start.astype(np.int64),
                               rec_len=rec_len.astype(np.int32),
                               block_first_id=np.concatenate(
                                   [pk.block_first_id for pk in chunk_packs])
-                              if chunk_packs else np.zeros(0, np.int64))
+                              if chunk_packs else np.zeros(0, np.int64),
+                              run_first_id=run_first_id, run_block=run_block)
         seg = SealedSegment(ids=ids, packed=merged, chunks=chunks, huff=table,
                             v_bytes=self.cfg.v_bytes,
                             dtype=np.dtype(self.cfg.dtype), dim=self.cfg.dim)

@@ -47,8 +47,8 @@ from repro.core.search.beam import (DeviceIndex, SearchParams,
                                     resolve_kernels, search)
 from repro.core.search.engine import (T_IO, beam_compute_costs,
                                       compute_costs, manifest_dec_costs,
-                                      merge_topk)
-from repro.core.storage.blockstore import BlockStore, LRUCache
+                                      merge_topk, rerank_tail_us)
+from repro.core.storage.blockstore import BlockStore, LRUCache, PrefetchQueue
 from repro.core.update.consistency import SnapshotHandle, memtable_topk
 
 __all__ = ["ServeConfig", "BatchReport", "BatchedSearcher", "plan_buckets",
@@ -70,6 +70,13 @@ class ServeConfig:
     max_chunks: int = 0             # >0: cap the bucket plan's dispatch
                                     # count per batch (overflow raises
                                     # instead of silently growing the plan)
+    prefetch_depth: int = 0         # >0: the trace replay models the
+                                    # engine's speculative multi-hop
+                                    # prefetch — hop k+1's blocks issued
+                                    # while hop k computes, window bounded
+                                    # to this many entries; covered rounds
+                                    # skip the T_IO stall (overlap pricing)
+    prefetch_budget: int = 32       # max wasted speculations per query
 
 
 @dataclass
@@ -88,8 +95,19 @@ class BatchReport:
     pq_ops: int = 0
     exact_ops: int = 0
     decompressions: int = 0
-    io_rounds: int = 0              # traversal rounds with >=1 uncached read
+    io_rounds: int = 0              # traversal rounds with >=1 STALLING read
+                                    # (prefetch-covered rounds excluded)
     rerank_batches: int = 0
+    # Speculative prefetch replay (ServeConfig.prefetch_depth > 0):
+    prefetch_issued: int = 0        # speculative block reads issued
+    prefetch_hits: int = 0          # speculations consumed by a demand fetch
+    prefetch_wasted: int = 0        # speculations never consumed (<= budget
+                                    # per query, window evictions included)
+    covered_rounds: int = 0         # rounds fully served by speculation
+                                    # (no stall — blocking pays T_IO there)
+    overlap_saved_us: float = 0.0   # blocking price of the same traversal
+                                    # minus the overlapped price, summed
+                                    # over queries; >= 0
     modeled_latency_us: float = 0.0   # mean per-query modeled latency
     modeled_p99_us: float = 0.0
     snapshot_version: int = -1      # live mode: the snapshot pinned for this
@@ -393,31 +411,62 @@ class BatchedSearcher:
         pq_ops = np.asarray(stats.pq_dists)[:count]
         exact = np.asarray(stats.exact_dists)[:count]
         batches = np.asarray(stats.rerank_batches)[:count]
+        pf_on = self.cfg.prefetch_depth > 0
         lat = np.zeros(count)
         for qi in range(count):
             cache, component = caches[qi], components[qi]
-            misses = hits = io_rounds = 0
-            for round_ids in trace[qi]:
-                round_miss = 0
+            # Per-query speculative window: the replay's predictor is the
+            # recorded trace itself (hop k+1's fetches are known), so
+            # speculation here is near-perfect — wasted counts only window
+            # evictions and the end-of-query drain. The engine's live
+            # provisional-frontier predictor is the lossy one; this replay
+            # prices the serving tier's best case of the same pipeline.
+            pfq = PrefetchQueue(self.cfg.prefetch_depth,
+                                self.cfg.prefetch_budget) if pf_on else None
+            misses = hits = io_rounds = covered = pf_hits = 0
+            rounds = trace[qi]
+            for ri, round_ids in enumerate(rounds):
+                round_miss = round_pf = 0
                 for vid in round_ids:
                     if vid < 0:
                         continue
                     key = int(vid) + key_offset
                     if cache.get(key) is not None:
                         hits += 1
+                        continue
+                    if pfq is not None and pfq.take(key):
+                        cache.note_prefetch_hit()
+                        pf_hits += 1
+                        round_pf += 1
                     else:
-                        cache.put(key, True)
                         self.blocks.read(component)    # one 4 KiB block
                         misses += 1
                         round_miss += 1
+                        if pfq is not None:
+                            pfq.fill(key)
+                    cache.put(key, True)
                 if round_miss:
-                    io_rounds += 1
+                    io_rounds += 1      # at least one read stalls the round
+                elif round_pf:
+                    covered += 1        # fully served by in-flight reads
+                if pfq is not None and ri + 1 < len(rounds):
+                    # Issue hop ri+1's blocks while hop ri's compute runs.
+                    for vid in rounds[ri + 1]:
+                        if vid < 0:
+                            continue
+                        key = int(vid) + key_offset
+                        if cache.peek(key) is None and pfq.offer(key):
+                            self.blocks.read(component)
+                            report.prefetch_issued += 1
             # decompressions: EF list decode per fetched list (graph tier)
             # + per-record decompress on the vector tier (§3.3 layout).
-            dec_ix = (misses + hits) if self.p.use_ef else 0
+            dec_ix = (misses + pf_hits + hits) if self.p.use_ef else 0
             dec_vec = int(exact[qi])
             dec = dec_ix + dec_vec
-            report.graph_ios += misses
+            # graph_ios stays DEMAND-equivalent (engine.QueryStats
+            # semantics): a consumed speculation replaced the demand read
+            # it pre-empted; wasted issues are reported separately.
+            report.graph_ios += misses + pf_hits
             report.cache_hits += hits
             report.vector_ios += int(exact[qi])
             report.pq_ops += int(pq_ops[qi])
@@ -428,6 +477,22 @@ class BatchedSearcher:
             io = io_rounds * T_IO
             cpu = (int(pq_ops[qi]) * self._t_pq + int(exact[qi]) * self._t_ex
                    + dec_ix * self._t_dec_ix + dec_vec * self._t_dec_vec)
-            tail = max(0, int(batches[qi]) - 1) * T_IO * 0.5
-            lat[qi] = max(io, cpu) + min(io, cpu) * 0.1 + tail
+            tail = rerank_tail_us(batches[qi])
+            if pfq is not None:
+                pfq.drain()
+                report.prefetch_hits += pf_hits
+                report.prefetch_wasted += pfq.wasted
+                report.covered_rounds += covered
+                # Overlap pricing (engine "pipelined_overlap"): stalled
+                # rounds overlap compute, covered rounds pay no T_IO, plus
+                # a half-read pipeline fill when anything was covered.
+                # Saved is measured against the blocking price of the SAME
+                # traversal, where covered rounds stall too (>= 0 always).
+                fill = 0.5 * T_IO if covered else 0.0
+                overlapped = max(io, cpu) + fill
+                report.overlap_saved_us += \
+                    (io + covered * T_IO + cpu) - overlapped
+                lat[qi] = overlapped + tail
+            else:
+                lat[qi] = max(io, cpu) + min(io, cpu) * 0.1 + tail
         return lat

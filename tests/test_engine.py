@@ -105,3 +105,34 @@ def test_decoupled_modeled_latency_ordering(world):
     assert lat["pa"] < lat["dk"]          # pipelining helps
     assert lat["dec"] > lat["pa"]         # decoupling alone hurts (paper)
     assert lat["dvs"] < lat["dk"]         # full DecoupleVS wins
+
+
+def test_manifest_vs_kernel_backend_dec_precedence():
+    """S6 pin: the manifest picks WHICH codec each tier decodes (base cost
+    from CODEC_DEC_US); kernel_backend scales HOW FAST (the backend's dec
+    ratio). Both tiers get the backend scaling — including the vector
+    tier — so a manifest-priced engine on a fast backend never pays the
+    ref constant for vector decodes."""
+    from repro.core.search.engine import (CODEC_DEC_US, KERNEL_COST_US,
+                                          manifest_dec_costs)
+    from repro.core.storage.layout import ComponentPlan, StorageManifest
+
+    def plan(comp, codec):
+        return ComponentPlan(component=comp, codec=codec, raw_bytes=100,
+                             est_bytes=50, candidates={}, params={})
+
+    man = StorageManifest(components={
+        "adjacency": plan("adjacency", "delta_varint"),
+        "vector_chunks": plan("vector_chunks", "ans_id")})
+    for backend, row in KERNEL_COST_US.items():
+        scale = row["dec"] / KERNEL_COST_US["ref"]["dec"]
+        ti, tv = manifest_dec_costs(man, backend)
+        assert ti == pytest.approx(CODEC_DEC_US["delta_varint"] * scale)
+        assert tv == pytest.approx(CODEC_DEC_US["ans_id"] * scale)
+    # No manifest: both tiers price at the backend's legacy T_DEC.
+    ti, tv = manifest_dec_costs(None, "pallas")
+    assert ti == tv == KERNEL_COST_US["pallas"]["dec"]
+    # Components absent from the manifest price at the layer defaults.
+    ti, tv = manifest_dec_costs(StorageManifest(components={}), "ref")
+    assert ti == pytest.approx(CODEC_DEC_US["elias_fano"])
+    assert tv == pytest.approx(CODEC_DEC_US["xor_delta_huffman"])

@@ -1,0 +1,264 @@
+"""Speculative multi-hop prefetch + co-resident packing property tier.
+
+Pinned contracts (ISSUE 9 / docs/STORAGE.md):
+
+- **Prefetch invariance**: search results are bit-identical with prefetch
+  on or off — speculation only warms the residency window consulted by
+  stall accounting, never the traversal — across rerank batch sizes and
+  seal orderings, on both the decoupled and co-located layouts.
+- **Waste budget**: wasted speculations per query never exceed
+  ``prefetch_budget`` (the ``offer()`` guard refuses past the bound).
+- **LRU conservation**: ``hits + misses + prefetch_hits == lookups``.
+- **Latency identity**: ``io_rounds_blocking == io_rounds_prefetch +
+  covered_rounds`` on the identical traversal, hence the overlap price
+  can never exceed the blocking price.
+- **Co-resident seals** are lossless (same neighbor lists, same vectors)
+  and the runs sparse index locates every id's block exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph.pq import encode_pq, train_pq
+from repro.core.graph.vamana import build_vamana
+from repro.core.search.engine import (EngineConfig, PRICING_MODES,
+                                      search_colocated, search_decoupled)
+from repro.core.storage.blockstore import PrefetchQueue
+from repro.core.storage.colocated import ColocatedStore
+from repro.core.storage.index_store import CompressedIndexStore
+from repro.core.storage.vector_store import DecoupledVectorStore, StoreConfig
+from repro.data.synthetic import make_queries, make_vector_dataset
+
+N, DIM, R = 900, 48, 16
+CACHE = 12 << 10
+
+
+@pytest.fixture(scope="module")
+def art():
+    vecs = make_vector_dataset("prop-like", n=N, dim=DIM, seed=5)
+    vf = vecs.astype(np.float32)
+    graph = build_vamana(vf, r=R, l_build=32, seed=0)
+    cb = train_pq(vf, m=8, seed=0)
+    codes = encode_pq(vf, cb)
+    queries = make_queries("prop-like", 12, DIM).astype(np.float32)
+    vs = DecoupledVectorStore(StoreConfig(dim=DIM, dtype=vecs.dtype,
+                                          segment_capacity=512))
+    vs.append(np.arange(N), vecs)
+    vs.seal_active()
+    return dict(vecs=vecs, graph=graph, cb=cb, codes=codes,
+                queries=queries, vs=vs)
+
+
+def _fresh_ix(art, order=None, coresident=False):
+    g = art["graph"]
+    return CompressedIndexStore.from_graph(g.adjacency, g.medoid, R,
+                                           cache_bytes=CACHE, order=order,
+                                           coresident=coresident)
+
+
+def _fresh_colo(art):
+    g = art["graph"]
+    return ColocatedStore.build(art["vecs"], g.adjacency, g.medoid, R,
+                                cache_bytes=CACHE)
+
+
+def _run_decoupled(art, ix, **cfg_kw):
+    cfg = EngineConfig(l_size=48, latency_aware=True, compressed=True,
+                       **cfg_kw)
+    ids, stats = [], []
+    for q in art["queries"]:
+        i, s = search_decoupled(ix, art["vs"], art["codes"], art["cb"],
+                                q, cfg)
+        ids.append(np.pad(i, (0, 10 - len(i)), constant_values=-1))
+        stats.append(s)
+    return np.stack(ids), stats
+
+
+# --------------------------------------------------------- queue semantics
+def test_prefetch_queue_offer_take_drain():
+    q = PrefetchQueue(depth=2, budget=3)
+    assert q.offer(1) and q.offer(2)
+    assert not q.offer(1), "resident key must not re-issue"
+    assert q.take(1) and q.hits == 1
+    assert not q.take(99), "absent key is a demand miss"
+    assert q.offer(3), "consumed entries retire without waste"
+    assert q.offer(4) and q.wasted == 1, \
+        "depth eviction of an unconsumed entry is waste"
+    assert q.drain() == 2 and q.wasted == 3
+    assert q.outstanding == 0, "drain empties the window"
+
+
+def test_prefetch_queue_budget_refuses():
+    q = PrefetchQueue(depth=8, budget=2)
+    assert q.offer(1) and q.offer(2)
+    assert not q.offer(3), \
+        "window waste + outstanding at budget: offer must refuse"
+    assert q.take(1)                       # consumption frees budget room
+    assert q.offer(3)
+    q.drain()
+    assert q.wasted <= 2, "drain keeps wasted within the per-query budget"
+    assert q.offer(4), "budget window resets after drain"
+
+
+# ------------------------------------------------------ prefetch invariance
+@pytest.mark.parametrize("order", [None, "minla"])
+@pytest.mark.parametrize("rerank_batch", [1, 7, 32])
+def test_prefetch_invariance_decoupled(art, order, rerank_batch):
+    """ids bit-identical with prefetch on/off; per-query waste <= budget;
+    stall identity io_rounds_off == io_rounds_on + covered_rounds."""
+    budget = 16
+    ids_off, st_off = _run_decoupled(art, _fresh_ix(art, order=order),
+                                     rerank_batch=rerank_batch)
+    ids_on, st_on = _run_decoupled(art, _fresh_ix(art, order=order),
+                                   rerank_batch=rerank_batch,
+                                   prefetch_depth=6, prefetch_budget=budget,
+                                   pricing="pipelined_overlap")
+    assert np.array_equal(ids_off, ids_on)
+    for a, b in zip(st_off, st_on):
+        assert b.prefetch_wasted <= budget
+        assert a.io_rounds == b.io_rounds + b.covered_rounds
+        assert a.traversal_rounds == b.traversal_rounds
+
+
+def test_prefetch_invariance_coresident(art):
+    ids_plain, _ = _run_decoupled(art, _fresh_ix(art, order="minla"))
+    ids_cor, st = _run_decoupled(art,
+                                 _fresh_ix(art, order="minla",
+                                           coresident=True),
+                                 prefetch_depth=6,
+                                 pricing="pipelined_overlap")
+    assert np.array_equal(ids_plain, ids_cor)
+    assert sum(s.prefetch_hits for s in st) > 0
+
+
+def test_prefetch_invariance_colocated(art):
+    def run(**kw):
+        store = _fresh_colo(art)
+        cfg = EngineConfig(l_size=48, **kw)
+        ids, stats = [], []
+        for q in art["queries"]:
+            i, s = search_colocated(store, art["codes"], art["cb"], q, cfg)
+            ids.append(np.pad(i, (0, 10 - len(i)), constant_values=-1))
+            stats.append(s)
+        return np.stack(ids), stats
+
+    ids_off, st_off = run(pricing="blocking")
+    ids_on, st_on = run(prefetch_depth=6, prefetch_budget=16,
+                        pricing="pipelined_overlap")
+    assert np.array_equal(ids_off, ids_on)
+    for a, b in zip(st_off, st_on):
+        assert b.prefetch_wasted <= 16
+        assert a.io_rounds == b.io_rounds + b.covered_rounds
+        assert b.latency_us <= a.latency_us
+
+
+def test_lru_conservation(art):
+    """Every lookup is exactly one of hit / miss / prefetch-hit."""
+    ix = _fresh_ix(art, order="minla")
+    _run_decoupled(art, ix, prefetch_depth=6, pricing="pipelined_overlap")
+    c = ix.cache
+    assert c.lookups == c.hits + c.misses + c.prefetch_hits
+    assert c.prefetch_hits > 0
+
+
+def test_overlap_never_prices_above_blocking(art):
+    """Per query: max(io, cpu) + fill <= io_blocking + cpu, guaranteed by
+    the stall identity (covered rounds each repay a full T_IO against the
+    at-most-half-T_IO fill); overlap_saved_us records the gap (>= 0)."""
+    _, st_blk = _run_decoupled(art, _fresh_ix(art, order="minla"),
+                               pricing="blocking")
+    _, st_ovl = _run_decoupled(art, _fresh_ix(art, order="minla"),
+                               prefetch_depth=6,
+                               pricing="pipelined_overlap")
+    assert sum(s.covered_rounds for s in st_ovl) > 0
+    for a, b in zip(st_blk, st_ovl):
+        assert b.latency_us <= a.latency_us
+        assert b.overlap_saved_us >= 0.0
+        if b.covered_rounds:
+            assert b.latency_us < a.latency_us
+
+
+def test_pricing_mode_validated(art):
+    assert "legacy" in PRICING_MODES
+    with pytest.raises(ValueError, match="pricing"):
+        _run_decoupled(art, _fresh_ix(art), pricing="typo")
+    with pytest.raises(ValueError, match="pricing"):
+        cfg = EngineConfig(pricing="typo")
+        search_colocated(_fresh_colo(art), art["codes"], art["cb"],
+                         art["queries"][0], cfg)
+
+
+# ------------------------------------------------------- co-resident seals
+@pytest.mark.parametrize("order", [None, "minla"])
+def test_coresident_index_roundtrip(art, order):
+    """Losslessness + sparse-index equivalence: the co-resident store
+    serves exactly the legacy store's neighbor lists, and the runs
+    indirection locates every id's true block."""
+    legacy = _fresh_ix(art, order=order)
+    cor = _fresh_ix(art, order=order, coresident=True)
+    assert cor.coresident and cor.run_first_id is not None
+    assert cor.sparse_index_bytes == 8 * len(cor.run_first_id)
+    for vid in range(N):
+        assert np.array_equal(legacy.get_neighbors(vid),
+                              cor.get_neighbors(vid)), vid
+        assert cor.locate(vid) == cor.block_of(vid), vid
+        assert legacy.locate(vid) == legacy.block_of(vid), vid
+
+
+def test_coresident_rewrite_blocks(art):
+    g = art["graph"]
+    cor = CompressedIndexStore.from_graph(g.adjacency, g.medoid, R,
+                                          cache_bytes=CACHE,
+                                          coresident=True, fill_factor=0.6)
+    adj = [np.asarray(a, np.int64).copy() for a in g.adjacency]
+    victim = 7
+    adj[victim] = np.sort(np.unique(np.concatenate(
+        [adj[victim], [(victim + 11) % N]])))
+    out = cor.rewrite_blocks(adj, [victim])
+    assert out is not None, "in-place growth within fill slack must work"
+    new_store, report = out
+    assert new_store.coresident
+    assert report.blocks_rewritten == 1
+    for vid in (victim, 0, N - 1):
+        assert np.array_equal(new_store.get_neighbors(vid),
+                              np.sort(adj[vid])), vid
+    # Appended vertices invalidate the seal-time grouping: full rebuild.
+    assert cor.rewrite_blocks(adj + [np.array([0, 1])],
+                              [len(adj)]) is None
+
+
+def _hood_blocks(vs, adjacency):
+    """Total distinct 4 KiB blocks touched fetching every vertex's
+    neighborhood (the beam-search access pattern decode_rows prices)."""
+    total = 0
+    for vid in range(N):
+        hood = np.unique(np.concatenate([[vid], adjacency[vid]]))
+        for seg in vs.sealed.values():
+            mine = hood[np.isin(hood, seg.ids)]
+            if len(mine):
+                rows = seg.rows_of(mine)
+                total += len(np.unique(seg.packed.rec_block[rows]))
+    return total
+
+
+def test_coresident_vector_seal_roundtrip(art):
+    g = art["graph"]
+    vecs = art["vecs"]
+
+    def build(coresident):
+        vs = DecoupledVectorStore(StoreConfig(dim=DIM, dtype=vecs.dtype,
+                                              segment_capacity=512,
+                                              coresident=coresident))
+        if coresident:
+            vs.set_affinity(g.adjacency)
+        vs.append(np.arange(N), vecs)
+        vs.seal_active()
+        return vs
+
+    plain, cor = build(False), build(True)
+    assert np.array_equal(cor.get(np.arange(N)), vecs), "seal is lossless"
+    for seg in cor.sealed.values():
+        assert seg.packed.coresident
+        assert all(c.n_runs >= c.n_blocks for c in seg.chunks)
+    # Co-residency exists to cut distinct blocks per neighborhood fetch:
+    # the greedy packer must beat append-order packing on the real graph.
+    assert _hood_blocks(cor, g.adjacency) < _hood_blocks(plain, g.adjacency)
