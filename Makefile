@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-fast test-reorder test-kernels test-serve bench-smoke bench bench-kernels bench-update bench-storage bench-serve bench-search bench-summary quickstart
+.PHONY: test test-fast test-reorder test-kernels test-serve test-sharded bench-smoke bench bench-kernels bench-update bench-storage bench-serve bench-search bench-shard bench-summary quickstart
 
 test:            ## tier-1: full test suite, stop at first failure (~2.5 min)
 	$(PY) -m pytest -x -q
@@ -19,6 +19,9 @@ test-kernels:    ## kernel conformance + backend-equivalence tier
 
 test-serve:      ## admission/serving tier: simulated-clock properties + hot swap + quota floors
 	$(PY) -m pytest -x -q tests/test_admission.py tests/test_serve_ann.py tests/test_snapshot.py tests/test_codec_registry.py
+
+test-sharded:    ## mesh-scale sharding tier: 8/16/32-device merges + routing + hot swap
+	$(PY) -m pytest -x -q tests/test_sharded.py
 
 bench-kernels:   ## ref-vs-pallas-vs-auto-tuned per op + e2e -> BENCH_kernels.json (+ autotune cache)
 	$(PY) -m benchmarks.bench_kernels
@@ -37,6 +40,9 @@ bench-serve:     ## admission-tier SLO tails (Poisson vs bursty) -> BENCH_serve.
 
 bench-search:    ## blocking vs pipelined vs coresident pipeline arms -> BENCH_search.json
 	$(PY) -m benchmarks.bench_search --smoke
+
+bench-shard:     ## QPS-vs-shards scaling + routing + failed-shard arms -> BENCH_shard.json
+	$(PY) -m benchmarks.bench_shard
 
 bench-smoke:     ## ~30 s serving-path benchmark (QPS vs batch x shards)
 	$(PY) -m benchmarks.bench_serve_ann --smoke

@@ -31,9 +31,16 @@ SHARDS = (1, 2)
 
 
 def _unshard(sharded):
-    """ShardedIndex with S=1 -> the underlying DeviceIndex."""
+    """ShardedIndex with S=1 -> the underlying DeviceIndex (named fields:
+    ShardedIndex also carries row_ids, which DeviceIndex does not)."""
     from repro.core.search.beam import DeviceIndex
-    return DeviceIndex(*(f[0] for f in sharded))
+    return DeviceIndex(neighbors=sharded.neighbors[0],
+                       counts=sharded.counts[0],
+                       ef_slots=sharded.ef_slots[0],
+                       pq_codes=sharded.pq_codes[0],
+                       pq_centroids=sharded.pq_centroids[0],
+                       vectors=sharded.vectors[0],
+                       medoid=sharded.medoid[0])
 
 
 def _bench_point(index, per, queries, gt, p, bucket, reps):

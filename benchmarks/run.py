@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Mapping:
   bench_kernels      Pallas kernel oracles
   bench_serve_ann    Serving path: QPS vs batch size vs shard count
   bench_serve        Admission tier: SLO tails under Poisson vs bursty load
+  bench_shard        Mesh-scale sharding: QPS vs shards, routing, hier merge
 
 JSON artifacts (written in-harness, one per experiment family):
   bench_storage     -> BENCH_storage.json     (planner vs fixed vs colocated)
@@ -19,6 +20,9 @@ JSON artifacts (written in-harness, one per experiment family):
   bench_search      -> BENCH_search.json      (blocking vs pipelined vs
                                                pipelined+coresident arms at
                                                pinned-equal recall)
+  bench_shard       -> BENCH_shard.json       (QPS-vs-shards scaling curve,
+                                               route_frac sweep, failed-
+                                               shard arm, scaling-eff gate)
 
 ``python -m benchmarks.run --summary`` folds every BENCH_*.json in the
 working directory into one trajectory row appended to ``BENCH_summary.json``
@@ -61,6 +65,13 @@ def _digest(name: str, doc: dict):
                         for k, v in doc.get("arms", {}).items()},
             blocks_per_hop={k: v.get("blocks_per_hop")
                             for k, v in doc.get("arms", {}).items()})
+    if name == "BENCH_shard.json":
+        suite = doc.get("suite", {})
+        return dict(
+            suite=suite,
+            qps_vs_shards=suite.get("qps"),
+            route_sweep={k: v.get("recall")
+                         for k, v in doc.get("route_sweep", {}).items()})
     if name == "BENCH_serve.json":
         return dict(
             suite=doc.get("suite"),
@@ -116,13 +127,14 @@ def summarize(out: str = SUMMARY_OUT) -> dict:
 def main() -> None:
     from . import (bench_breakdown, bench_components, bench_compression,
                    bench_entropy, bench_kernels, bench_roofline,
-                   bench_search, bench_serve, bench_serve_ann, bench_storage,
-                   bench_update)
+                   bench_search, bench_serve, bench_serve_ann, bench_shard,
+                   bench_storage, bench_update)
     print("name,us_per_call,derived")
     t00 = time.time()
     for mod in (bench_entropy, bench_storage, bench_components, bench_search,
                 bench_breakdown, bench_update, bench_compression,
-                bench_kernels, bench_roofline, bench_serve_ann, bench_serve):
+                bench_kernels, bench_roofline, bench_serve_ann, bench_serve,
+                bench_shard):
         t0 = time.time()
         try:
             mod.main(quiet=True)

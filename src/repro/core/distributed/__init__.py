@@ -1,4 +1,5 @@
 from . import sharded_index  # noqa: F401
-from .sharded_index import (ShardedIndex, build_sharded_index,  # noqa: F401
+from .sharded_index import (ShardedIndex, ShardRouter,  # noqa: F401
+                            build_router, build_sharded_index,
                             lower_production_search, make_sharded_search,
-                            place_on_mesh)
+                            merge_comm_rows, place_on_mesh, route_mask)

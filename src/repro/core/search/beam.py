@@ -84,6 +84,11 @@ class SearchParams(NamedTuple):
     trace_fetches: bool = False  # record the per-round adjacency-fetch ids so
                                  # the serving tier can replay them through
                                  # the §3.4 LRU / I/O model (serve/ann.py)
+    trace_hints: bool = False    # also record each round's PROVISIONAL next
+                                 # frontier (top-W unexpanded candidates
+                                 # before the round's neighbors merge) — the
+                                 # honest lossy predictor the serving tier's
+                                 # speculative prefetch issues from
     kernels: KernelConfig | None = None  # per-op compute backend (dispatch
                                  # layer); None -> REPRO_KERNELS env default.
                                  # Resolve at config time (resolve_kernels).
@@ -101,6 +106,10 @@ class SearchStats(NamedTuple):
     pq_dists: jnp.ndarray          # [nq] PQ (ADC) distance computations
     fetch_trace: jnp.ndarray       # [nq, max_iters, W] fetched vertex ids
                                    # (-1 = none; empty unless trace_fetches)
+    hint_trace: jnp.ndarray        # [nq, max_iters, W] provisional next-
+                                   # frontier ids recorded DURING round r as
+                                   # the speculation for round r+1 (-1 =
+                                   # none; empty unless trace_hints)
 
 
 def resolve_kernels(p: SearchParams, platform: str | None = None,
@@ -180,6 +189,7 @@ def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
     use_hash = p.visited_hash_bits > 0
     rows = jnp.arange(nq, dtype=jnp.int32)
     trace_len = p.max_iters if p.trace_fetches else 0
+    hint_len = p.max_iters if p.trace_hints else 0
 
     entry = jnp.broadcast_to(index.medoid.astype(jnp.int32), (nq,))
     e_d = _adc_batch(index.pq_codes[entry][:, None, :], luts, p.kernels)[:, 0]
@@ -201,7 +211,8 @@ def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
              jnp.zeros((nq,), jnp.int32),           # stability counter
              jnp.full((nq,), -1, jnp.int32),        # prefetch iteration
              jnp.full((nq, KB), -1, jnp.int32),     # prev top-(K+B)
-             jnp.full((nq, trace_len, W), -1, jnp.int32))  # fetch trace
+             jnp.full((nq, trace_len, W), -1, jnp.int32),   # fetch trace
+             jnp.full((nq, hint_len, W), -1, jnp.int32))    # hint trace
 
     def _unexpanded(cand_ids, expanded):
         valid = cand_ids >= 0
@@ -220,7 +231,7 @@ def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
 
     def step(st):
         (cand_ids, cand_d, visited, expanded, iters, fetched, pq_ct,
-         stab, pf_iter, prev_top, trace) = st
+         stab, pf_iter, prev_top, trace, hints) = st
         active = _active(cand_ids, expanded, iters)
         unexp = _unexpanded(cand_ids, expanded)
         frontier_d = jnp.where(unexp & active[:, None], cand_d, jnp.inf)
@@ -237,6 +248,19 @@ def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
         fetched = fetched + jnp.sum(sel_ids >= 0, 1).astype(jnp.int32)
         if p.trace_fetches:
             trace = trace.at[rows, iters].set(sel_ids, mode="drop")
+        if p.trace_hints:
+            # Provisional frontier for round r+1, read BEFORE this round's
+            # neighbors merge (its fetches are still in flight): the top-W
+            # unexpanded survivors of the current list. Honest speculation —
+            # it misses whatever this round discovers closer, which is
+            # exactly the engine's live predictor loss.
+            prov_d = jnp.where(_unexpanded(cand_ids, expanded)
+                               & active[:, None], cand_d, jnp.inf)
+            neg_p, prov_slot = jax.lax.top_k(-prov_d, W)
+            prov_ids = jnp.where(
+                jnp.isfinite(neg_p),
+                jnp.take_along_axis(cand_ids, prov_slot, 1), -1)
+            hints = hints.at[rows, iters].set(prov_ids, mode="drop")
 
         nbrs = _gather_neighbors(index, sel_ids, p, n)        # [nq, W*R]
         # Dedupe within the round: single-key sort (fast path on XLA CPU —
@@ -291,12 +315,13 @@ def traverse(index: DeviceIndex, luts: jnp.ndarray, p: SearchParams):
         iters = iters + active.astype(jnp.int32)
         prev_top = jnp.where(active[:, None], top_now, prev_top)
         return (cand_ids, cand_d, visited, expanded, iters, fetched, pq_ct,
-                stab, pf_iter, prev_top, trace)
+                stab, pf_iter, prev_top, trace, hints)
 
     st = jax.lax.while_loop(has_frontier, step, state)
     cand_ids, cand_d = st[0], st[1]
-    iters, fetched, pq_ct, _, pf_iter, _, trace = st[4:]
-    return cand_ids, cand_d, (iters, fetched, pf_iter, pq_ct + 1, trace)
+    iters, fetched, pq_ct, _, pf_iter, _, trace, hints = st[4:]
+    return cand_ids, cand_d, (iters, fetched, pf_iter, pq_ct + 1, trace,
+                              hints)
 
 
 def rerank(index: DeviceIndex, queries: jnp.ndarray, cand_ids: jnp.ndarray,
@@ -386,11 +411,11 @@ def search_batched(index: DeviceIndex, queries: jnp.ndarray, p: SearchParams):
     luts = jax.vmap(
         lambda q: build_lut_jnp(q.astype(jnp.float32), index.pq_centroids)
     )(queries)
-    cand_ids, cand_d, (iters, fetched, pf_iter, pq_ct, trace) = \
+    cand_ids, cand_d, (iters, fetched, pf_iter, pq_ct, trace, hints) = \
         traverse(index, luts, p)
     ids, dists, (batches, exact_ct) = rerank(index, queries, cand_ids, p)
     stats = SearchStats(iters, fetched, pf_iter, batches, exact_ct,
-                        pq_ct, trace)
+                        pq_ct, trace, hints)
     return ids, dists, stats
 
 

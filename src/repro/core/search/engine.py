@@ -208,6 +208,45 @@ def merge_cost_us(blocks_written: int, lists_reencoded: int,
     return blocks_written * T_IO_WRITE + lists_reencoded * t_dec
 
 
+# Cross-shard top-K merge pricing (core/distributed hierarchical merge):
+# each gathered (id, dist) row is ~12 B over ICI/host links, priced per row
+# received; every collective stage (one ppermute step, or the single flat
+# all_gather) adds a launch latency. The row counts come from
+# ``repro.core.distributed.merge_comm_rows`` — flat receives K·S rows in
+# one stage, the butterfly receives K·log2(axis) rows over log2(axis)
+# stages per mesh axis, so flat wins at tiny S (fewer launches) and the
+# tree wins once K·S row traffic dominates — the crossover the shard bench
+# reports.
+T_MERGE_ROW_US = 0.05
+T_MERGE_STAGE_US = 2.0
+
+
+def shard_merge_cost_us(k: int, axis_sizes, mode: str = "hier",
+                        t_row: float = T_MERGE_ROW_US,
+                        t_stage: float = T_MERGE_STAGE_US) -> float:
+    """Modeled per-query cost (µs) of the cross-shard top-K merge over mesh
+    axes of the given sizes. Mirrors ``merge_comm_rows``: non-power-of-two
+    axes fall back to a flat gather for that axis."""
+    sizes = [int(s) for s in (axis_sizes if np.ndim(axis_sizes) else
+                              [axis_sizes])]
+    if mode == "flat":
+        return k * int(np.prod(sizes)) * t_row + t_stage
+    if mode != "hier":
+        raise ValueError(f"merge mode must be 'hier' or 'flat', got {mode!r}")
+    rows = stages = 0
+    for s in sizes:
+        if s <= 1:
+            continue
+        if s & (s - 1):                 # non-pow2 axis: flat on this axis
+            rows += k * s
+            stages += 1
+        else:
+            st = int(round(np.log2(s)))
+            rows += k * st
+            stages += st
+    return rows * t_row + stages * t_stage
+
+
 def merge_topk(ids, dists, k: int):
     """[S, nq, K] per-shard globally-translated ids + dists -> global top-K
     (host-side mirror of the gather + top_k merge that runs inside

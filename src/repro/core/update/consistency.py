@@ -171,3 +171,51 @@ class SnapshotHandle:
             merged = dict(self._snap.mem_rows)
             merged.update(rows)
             self._snap = replace(self._snap, mem_rows=merged)
+
+
+class ShardedSnapshotHandle:
+    """Per-shard publication points for the sharded serving tier: each shard
+    carries its OWN :class:`SnapshotHandle` (its updater publishes
+    independently), and a batch pins a consistent **version vector** — one
+    :meth:`pin` reads every shard's current snapshot once, so no served
+    batch spans a publish on any shard (the §3.5 batch-visible guarantee,
+    generalized from the single-index handle).
+
+    ``offsets[i]`` translates shard *i*'s local ids to global ids. The
+    default reserves each shard's full id headroom — the previous shards'
+    EF slot universes — so ids stay disjoint even as shards grow toward
+    their universe; pass explicit offsets for a pre-assigned global id
+    space. Shards must share one EF geometry (r, universe): the serving
+    tier compiles ONE bucket program for all shards.
+    """
+
+    def __init__(self, handles: list, offsets: list | None = None):
+        if not handles:
+            raise ValueError("need at least one shard handle")
+        self.handles = list(handles)
+        if offsets is None:
+            offsets, off = [], 0
+            for h in self.handles:
+                offsets.append(off)
+                snap = h.current()
+                store = snap.index_store
+                off += int(store.universe if store is not None
+                           else snap.device.pq_codes.shape[0])
+        if len(offsets) != len(self.handles):
+            raise ValueError(f"{len(offsets)} offsets for "
+                             f"{len(self.handles)} shards")
+        self.offsets = [int(o) for o in offsets]
+
+    def __len__(self) -> int:
+        return len(self.handles)
+
+    def pin(self) -> list:
+        """One consistent snapshot per shard (the batch's version vector:
+        ``[s.version for s in pin()]``). Each handle's read is atomic and
+        the returned objects are immutable, so the caller's batch serves
+        every bucket and shard from exactly these snapshots no matter what
+        publishes land mid-batch."""
+        return [h.current() for h in self.handles]
+
+    def versions(self) -> list:
+        return [h.current().version for h in self.handles]

@@ -41,6 +41,20 @@ def make_vector_dataset(kind: str, n: int, dim: int, seed: int = 0) -> np.ndarra
         raw = rng.normal(0, 1.0, size=(n, dim)) * spectrum[None, :]
         raw /= np.linalg.norm(raw, axis=1, keepdims=True) + 1e-12
         return np.round(raw, 3).astype(np.float32)
+    if kind == "cluster-like":
+        # Mixture-of-Gaussians embeddings: well-separated centers with
+        # tight within-cluster spread. This is the regime the sharded
+        # serving tier's SELECTIVE ROUTING assumes (SPANN-style): a
+        # clustered partition puts each mode on few shards, so a query's
+        # nearest-centroid shards hold nearly all its true neighbors and
+        # a sub-1.0 route_frac keeps recall. Cluster count scales with n
+        # so shards at S=32 still see multiple modes.
+        n_clusters = max(8, min(64, n // 64))
+        centers = rng.normal(0, 1.0, size=(n_clusters, dim))
+        centers /= np.linalg.norm(centers, axis=1, keepdims=True) + 1e-12
+        who = rng.integers(0, n_clusters, size=n)
+        raw = centers[who] + rng.normal(0, 0.08, size=(n, dim))
+        return raw.astype(np.float32)
     raise ValueError(f"unknown dataset kind {kind!r}")
 
 

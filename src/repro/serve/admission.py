@@ -80,6 +80,13 @@ class TenantConfig:
 class AdmissionConfig:
     max_batch: int = 32          # cut when this many granted requests queue
     drain_partial: bool = True   # cut the final partial batch at trace end
+    align_buckets: bool = False  # deadline cuts snap to the searcher's
+                                 # plan_buckets grid: serve the largest
+                                 # zero-padding prefix now and defer the
+                                 # ragged tail — IFF every deferred request
+                                 # still makes its deadline at the next
+                                 # possible cut (slack pays for alignment,
+                                 # never the other way around)
 
 
 # ------------------------------------------------------------ token bucket
@@ -188,6 +195,9 @@ class BatchRecord:
     snapshot_version: int
     was_busy_until_us: float  # server busy horizon when this cut fired
     forced_rid: int = -1      # the request whose slack forced a deadline cut
+    aligned_from: int = -1    # pre-alignment queue depth when a deadline
+                              # cut was snapped to the bucket grid (-1: no
+                              # alignment applied)
     tenants: dict = field(default_factory=dict)
     admit_us_max: float = 0.0  # latest token grant in the batch
     latest_cut_min_us: float = 0.0  # tightest latest-cut bound in the batch
@@ -352,6 +362,20 @@ class AdmissionQueue:
         report = self._report(reqs, served, records)
         return served, report
 
+    def _aligned_prefix(self, n: int) -> int:
+        """Largest m ≤ n expressible as a sum of the searcher's dispatch
+        buckets (greedy, largest-first) — the prefix that pads to zero on
+        the ``plan_buckets`` grid. 0 when the searcher exposes no bucket
+        config or nothing fits."""
+        cfg = getattr(self.searcher, "cfg", None)
+        if cfg is None or not getattr(cfg, "buckets", None):
+            return 0
+        m, rem = 0, n
+        for b in sorted(cfg.buckets, reverse=True):
+            m += (rem // b) * b
+            rem -= (rem // b) * b
+        return m
+
     def _cut(self, queued: list, now: float, busy_until: float,
              draining: bool, served: list, records: list) -> float:
         n_before = len(queued)
@@ -370,6 +394,33 @@ class AdmissionQueue:
                 reason, forced_rid = "deadline", forced.req.rid
             else:
                 reason, forced_rid = "drain", -1
+        aligned_from = -1
+        if reason == "deadline" and self.cfg.align_buckets:
+            # Snap the deadline cut to the dispatch grid: a ragged n pads
+            # its last bucket with repeated queries the engine prices but
+            # nobody asked for. Serve the largest zero-padding prefix and
+            # push the tail back to the queue head — but only when every
+            # deferred request can still be cut no later than its own
+            # latest-cut bound at the NEXT opportunity (this batch's
+            # departure), so alignment spends slack, never deadlines.
+            from repro.serve.ann import plan_buckets
+            scfg = self.searcher.cfg
+            m = self._aligned_prefix(n)
+            if 0 < m < n:
+                tail = batch[m:]
+                depart_if = now + self.model.service_us(m)
+                cur_pad = sum(b - c for _, c, b in plan_buckets(
+                    n, scfg.buckets, scfg.max_chunks))
+                new_pad = sum(b - c for _, c, b in plan_buckets(
+                    m, scfg.buckets, scfg.max_chunks))
+                if cur_pad > 0 and new_pad == 0 and all(
+                        self.model.latest_cut_us(p.req.deadline_us,
+                                                 len(tail)) >= depart_if
+                        for p in tail):
+                    queued[0:0] = tail      # head of queue, order kept
+                    batch = batch[:m]
+                    n = m
+                    aligned_from = n_before
         queries = np.stack([np.asarray(p.req.query, np.float32)
                             for p in batch])
         tenants = [p.req.tenant for p in batch]
@@ -381,7 +432,7 @@ class AdmissionQueue:
             service_us=service, depart_us=depart,
             snapshot_version=rep.snapshot_version,
             was_busy_until_us=busy_until, forced_rid=forced_rid,
-            tenants=dict(rep.tenants),
+            aligned_from=aligned_from, tenants=dict(rep.tenants),
             admit_us_max=max(p.admit_us for p in batch),
             latest_cut_min_us=min(
                 self.model.latest_cut_us(p.req.deadline_us, n)

@@ -42,14 +42,16 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.codec import elias_fano as ef
-from repro.core.distributed.sharded_index import ShardedIndex
+from repro.core.distributed.sharded_index import (ShardedIndex, ShardRouter,
+                                                  route_mask)
 from repro.core.search.beam import (DeviceIndex, SearchParams,
                                     resolve_kernels, search)
 from repro.core.search.engine import (T_IO, beam_compute_costs,
                                       compute_costs, manifest_dec_costs,
                                       merge_topk, rerank_tail_us)
-from repro.core.storage.blockstore import BlockStore, LRUCache, PrefetchQueue
-from repro.core.update.consistency import SnapshotHandle, memtable_topk
+from repro.core.storage.blockstore import BlockStore, LRUCache
+from repro.core.update.consistency import (ShardedSnapshotHandle,
+                                           SnapshotHandle, memtable_topk)
 
 __all__ = ["ServeConfig", "BatchReport", "BatchedSearcher", "plan_buckets",
            "merge_topk"]
@@ -77,6 +79,13 @@ class ServeConfig:
                                     # to this many entries; covered rounds
                                     # skip the T_IO stall (overlap pricing)
     prefetch_budget: int = 32       # max wasted speculations per query
+    route_frac: float = 1.0         # selective shard routing (needs a
+                                    # router): each query's candidates come
+                                    # from its top ceil(route_frac * S)
+                                    # shards by router score; the rest
+                                    # contribute (-1, +inf) rows at ZERO
+                                    # modeled I/O. 1.0 == full fan-out
+                                    # (bit-identical to no router).
 
 
 @dataclass
@@ -112,7 +121,21 @@ class BatchReport:
     modeled_p99_us: float = 0.0
     snapshot_version: int = -1      # live mode: the snapshot pinned for this
                                     # batch (-1 for frozen indexes)
+    shard_versions: list = field(default_factory=list)  # sharded-live mode:
+                                    # the per-shard version vector pinned
+                                    # for this batch (no batch spans a
+                                    # publish on any shard)
     mem_candidates: int = 0         # live mode: memtable rows side-scanned
+    # Selective shard routing (ServeConfig.route_frac < 1 with a router):
+    routed_rows: int = 0            # (query, shard) pairs actually searched
+    fanout_frac: float = 1.0        # routed_rows / (nq * n_shards)
+    failed_shards: list = field(default_factory=list)  # shards skipped by
+                                    # the graceful-degradation arm
+    shard_busy_us: list = field(default_factory=list)  # per-shard summed
+                                    # modeled latency — the scaling bench's
+                                    # critical-path raw material
+    prefetch_queues: dict = field(default_factory=dict)  # component ->
+                                    # blockstore PrefetchQueue counters
     # Component-aware storage engine metrics (BlockStore partitions):
     component_io: dict = field(default_factory=dict)     # shard -> IOStats
     component_cache: dict = field(default_factory=dict)  # shard -> hit/miss
@@ -199,11 +222,22 @@ class BatchedSearcher:
     """
 
     def __init__(self, index, p: SearchParams, cfg: ServeConfig = None,
-                 shard_size: int = 0):
+                 shard_size: int = 0, router: ShardRouter = None):
         cfg = cfg or ServeConfig()
         if cfg.account_io:
-            p = p._replace(trace_fetches=True)
+            # trace_hints rides along when the speculative window is on:
+            # the replay issues speculation from the beam's provisional-
+            # frontier hints (the honest predictor), not the ground truth.
+            p = p._replace(trace_fetches=True,
+                           trace_hints=cfg.prefetch_depth > 0)
         self._handle = index if isinstance(index, SnapshotHandle) else None
+        self._shandle = index if isinstance(index, ShardedSnapshotHandle) \
+            else None
+        self._router = router
+        if router is not None and not isinstance(index, ShardedIndex):
+            raise ValueError("selective shard routing needs a frozen "
+                             "ShardedIndex (routers score data partitions, "
+                             "not live handles)")
         if self._handle is not None:
             snap = self._handle.current()
             store = snap.index_store
@@ -212,6 +246,9 @@ class BatchedSearcher:
             # universe carries id headroom past the current max id).
             p = p._replace(filter_tombstones=True, universe=store.universe,
                            r_max=store.r)
+        elif self._shandle is not None:
+            u, r = self._sharded_geometry(self._shandle.pin())
+            p = p._replace(filter_tombstones=True, universe=u, r_max=r)
         # Config time: pin the per-op kernel backends here, once — every
         # bucket program this searcher compiles dispatches statically, and
         # the I/O model prices compute with the matching cost constants.
@@ -229,25 +266,53 @@ class BatchedSearcher:
                                                    p.kernels.ef_decode)
             _, self._t_dec_vec = manifest_dec_costs(cfg.manifest,
                                                     p.kernels.byteplane)
+        self._row_ids = None           # frozen sharded: global-id maps
+        self._key_maps = None          # frozen sharded: accounting keys
         if self._handle is not None:
             self._shards = None        # resolved per batch (snapshot pin)
             self.shard_size = int(snap.device.pq_codes.shape[0])
+            n_caches = 1
+        elif self._shandle is not None:
+            self._shards = None        # resolved per batch (version vector)
+            self.shard_size = 0        # ids translate via handle offsets
+            n_caches = len(self._shandle)
         elif isinstance(index, ShardedIndex):
             s = index.pq_codes.shape[0]
+            # Named-field construction: ShardedIndex carries fields a
+            # DeviceIndex does not (row_ids), so positional splatting
+            # would silently land them in the tombstone slot.
             self._shards = [
-                DeviceIndex(*(jnp.asarray(f[i]) for f in index))
+                DeviceIndex(neighbors=jnp.asarray(index.neighbors[i]),
+                            counts=jnp.asarray(index.counts[i]),
+                            ef_slots=jnp.asarray(index.ef_slots[i]),
+                            pq_codes=jnp.asarray(index.pq_codes[i]),
+                            pq_centroids=jnp.asarray(index.pq_centroids[i]),
+                            vectors=jnp.asarray(index.vectors[i]),
+                            medoid=jnp.asarray(index.medoid[i]))
                 for i in range(s)]
             self.shard_size = shard_size or int(index.pq_codes.shape[1])
+            self._row_ids = np.asarray(index.row_ids).astype(np.int64)
+            # Accounting keys stay globally unique even for pad rows
+            # (row_id -1): pads map past the real-id space so one tenant
+            # partition spanning shards never collides.
+            n_total = int((self._row_ids >= 0).sum())
+            per = self._row_ids.shape[1]
+            self._key_maps = self._row_ids.copy()
+            for i in range(s):
+                pad = self._key_maps[i] < 0
+                self._key_maps[i, pad] = (n_total + i * per
+                                          + np.nonzero(pad)[0])
+            n_caches = s
         else:
             self._shards = [index]
             self.shard_size = int(index.pq_codes.shape[0])
+            n_caches = 1
         # The modeled storage engine: one BlockStore whose partitions are
         # the per-shard §3.4 fixed-entry LRUs (entries sized to the EF
         # worst case so capacity is a hard bound — index_store semantics);
         # the fetch-trace replay accounts reads per shard component.
         universe = p.universe or self.shard_size
         entry_bytes = ef.worst_case_record_bytes(p.r_max, universe)
-        n_caches = 1 if self._handle is not None else len(self._shards)
         self.blocks = BlockStore(cache_bytes=cfg.cache_bytes,
                                  shared_budget=cfg.shared_budget)
         self._entry_bytes = entry_bytes
@@ -279,12 +344,40 @@ class BatchedSearcher:
             self.register_tenant(tenant)
         return self._tenant_caches[tenant]
 
+    # ----------------------------------------------------- sharded-live pin
+    @staticmethod
+    def _sharded_geometry(snaps: list) -> tuple:
+        """The (universe, r) every shard of a version vector must share —
+        the serving tier compiles ONE bucket program for all shards, so a
+        per-shard EF geometry drift is a configuration error, not a
+        hot-swap."""
+        geos = {(int(s.index_store.universe), int(s.index_store.r))
+                for s in snaps}
+        if len(geos) != 1:
+            raise ValueError(f"sharded serving requires a uniform EF "
+                             f"geometry across shards, got {sorted(geos)}")
+        return geos.pop()
+
+    def _renew_geometry(self, entry_bytes: int, n_caches: int) -> None:
+        """A fallback full rebuild renewed the EF geometry; re-size the
+        modeled LRUs to the new worst-case entry bound (§3.4). Tenant
+        partitions re-register at the new bound, keeping their quota
+        floors (cold caches, same quotas)."""
+        self._entry_bytes = entry_bytes
+        self._caches = [self.blocks.register_cache(f"shard{i}", entry_bytes)
+                        for i in range(n_caches)]
+        self._tenant_caches = {
+            t: self.blocks.register_tenant_cache(t, entry_bytes,
+                                                 floor_bytes=f)
+            for t, f in self._tenant_floors.items()}
+
     # ------------------------------------------------------------- serving
-    def search(self, queries: np.ndarray, tenants: list = None):
+    def search(self, queries: np.ndarray, tenants: list = None,
+               failed_shards=None):
         """queries [nq, d] -> (ids [nq, K], dists [nq, K], BatchReport).
 
-        ids are global (shard offset applied); rows are sorted by exact
-        re-ranked distance, -1 = no result.
+        ids are global (shard offset / row_ids map applied); rows are
+        sorted by exact re-ranked distance, -1 = no result.
 
         ``tenants`` (one label per row, arrival order) switches the I/O
         accounting to per-tenant LRU partitions: row qi's fetch trace
@@ -293,44 +386,67 @@ class BatchedSearcher:
         the ``tenant:<name>`` component. The ids/dists path is untouched —
         tenancy changes what is *measured*, never what is *returned*
         (bit-exactness is the admission tier's acceptance gate).
+
+        ``failed_shards`` (iterable of shard indices) is the graceful-
+        degradation arm: those shards are treated as unresponsive — the
+        merge runs over whatever shards respond, recall degrades, nothing
+        crashes. With a router and ``ServeConfig(route_frac < 1)``, each
+        query only searches (and is only charged I/O for) its routed
+        shards.
         """
         queries = np.asarray(queries, np.float32)
         nq = len(queries)
         if tenants is not None and len(tenants) != nq:
             raise ValueError(f"tenants ({len(tenants)}) must label every "
                              f"query row ({nq})")
-        # Live mode: pin ONE snapshot for the whole batch — every bucket and
-        # shard below reads this snapshot's device view, so a merge that
-        # publishes mid-batch is invisible until the next search() call
-        # (hot swap at batch granularity, §3.5 consistency).
+        # Live mode: pin ONE snapshot (or one per-shard version VECTOR) for
+        # the whole batch — every bucket and shard below reads these
+        # snapshots' device views, so a merge that publishes mid-batch on
+        # any shard is invisible until the next search() call (hot swap at
+        # batch granularity, §3.5 consistency).
         snap = self._handle.current() if self._handle is not None else None
+        snaps = self._shandle.pin() if self._shandle is not None else None
+        offsets = None
         if snap is not None:
             store = snap.index_store
             if (store.universe != self.p.universe
                     or store.r != self.p.r_max):
                 # A fallback full rebuild renewed the EF geometry; re-pin
-                # (recompiles the bucket programs once) and re-size the
-                # modeled LRU to the new worst-case entry bound (§3.4).
+                # (recompiles the bucket programs once) at the new bound.
                 self.p = self.p._replace(universe=store.universe,
                                          r_max=store.r)
-                entry_bytes = ef.worst_case_record_bytes(store.r,
-                                                         store.universe)
-                self._entry_bytes = entry_bytes
-                self._caches = [self.blocks.register_cache("shard0",
-                                                           entry_bytes)]
-                # Tenant partitions re-register at the new entry bound,
-                # keeping their quota floors (cold caches, same quotas).
-                self._tenant_caches = {
-                    t: self.blocks.register_tenant_cache(
-                        t, entry_bytes, floor_bytes=f)
-                    for t, f in self._tenant_floors.items()}
+                self._renew_geometry(
+                    ef.worst_case_record_bytes(store.r, store.universe), 1)
             shards = [snap.device]
             self.shard_size = int(snap.device.pq_codes.shape[0])
+        elif snaps is not None:
+            u, r = self._sharded_geometry(snaps)
+            if u != self.p.universe or r != self.p.r_max:
+                self.p = self.p._replace(universe=u, r_max=r)
+                self._renew_geometry(ef.worst_case_record_bytes(r, u),
+                                     len(snaps))
+            shards = [s.device for s in snaps]
+            offsets = self._shandle.offsets
         else:
             shards = self._shards
-        n_lanes = len(shards) + (1 if snap is not None else 0)
+        failed = {int(s) for s in (failed_shards or ())}
+        route = None
+        if self._router is not None and self.cfg.route_frac < 1.0:
+            route = np.asarray(route_mask(self._router.centroids, queries,
+                                          self.cfg.route_frac))
+        mem_lanes = 1 if snap is not None else \
+            (len(shards) if snaps is not None else 0)
+        n_lanes = len(shards) + mem_lanes
         report = BatchReport(n_queries=nq, n_shards=len(shards),
-                             snapshot_version=snap.version if snap else -1)
+                             snapshot_version=snap.version if snap else -1,
+                             failed_shards=sorted(failed))
+        if snaps is not None:
+            report.shard_versions = [s.version for s in snaps]
+        if route is not None:
+            report.routed_rows = int(route.sum())
+            report.fanout_frac = report.routed_rows / max(1, nq * len(shards))
+        else:
+            report.routed_rows = nq * len(shards)
         if tenants is not None:
             for t in tenants:
                 report.tenants[t] = report.tenants.get(t, 0) + 1
@@ -347,36 +463,77 @@ class BatchedSearcher:
                 q = np.concatenate([q, np.repeat(q[-1:], bucket - count, 0)])
             qj = jnp.asarray(q)
             for si, shard in enumerate(shards):
+                if si in failed:
+                    continue        # unresponsive: merge the rest
+                active = None
+                if route is not None:
+                    active = route[start:start + count, si]
+                    if not active.any():
+                        continue    # no query routed here: zero I/O
                 ids, dists, stats = search(shard, qj, self.p)
                 ids = np.asarray(ids)[:count]
-                gids = np.where(ids >= 0,
-                                ids.astype(np.int64) + si * self.shard_size,
-                                -1)
+                d = np.asarray(dists)[:count]
+                if self._row_ids is not None:
+                    # Frozen sharded: global ids through the shard's
+                    # row_ids map; pad rows (row_id -1) are masked to
+                    # (-1, +inf) so they never surface in the merge.
+                    rm = self._row_ids[si]
+                    gids = np.where(ids >= 0,
+                                    rm[np.clip(ids, 0, len(rm) - 1)], -1)
+                    d = np.where(gids >= 0, d, np.inf).astype(np.float32)
+                else:
+                    off = offsets[si] if offsets is not None \
+                        else si * self.shard_size
+                    gids = np.where(ids >= 0, ids.astype(np.int64) + off, -1)
+                if active is not None:
+                    gids = np.where(active[:, None], gids, -1)
+                    d = np.where(active[:, None], d,
+                                 np.inf).astype(np.float32)
                 out_ids[si, start:start + count] = gids
-                out_d[si, start:start + count] = np.asarray(dists)[:count]
+                out_d[si, start:start + count] = d
                 if self.cfg.account_io:
+                    key_map = None
                     if tenants is not None:
                         rows = tenants[start:start + count]
                         caches = [self._tenant_cache(t) for t in rows]
                         comps = [f"tenant:{t}" for t in rows]
-                        off = si * self.shard_size
+                        if self._key_maps is not None:
+                            off, key_map = 0, self._key_maps[si]
+                        else:
+                            off = offsets[si] if offsets is not None \
+                                else si * self.shard_size
                     else:
                         caches = [self._caches[si]] * count
                         comps = [f"shard{si}"] * count
                         off = 0
                     lat[si, start:start + count] = self._account(
-                        report, stats, count, caches, comps, key_offset=off)
+                        report, stats, count, caches, comps, key_offset=off,
+                        key_map=key_map, active=active)
         if snap is not None:
             # Memtable side-scan: buffered inserts are one more "shard" in
             # the global merge (ids are globally unique fresh dense ids).
             out_ids[-1], out_d[-1] = memtable_topk(
                 snap, queries, self.p.k, self.p.kernels)
             report.mem_candidates = len(snap.mem_rows)
+        elif snaps is not None:
+            # One memtable lane per shard, local fresh ids translated by
+            # the handle's per-shard offset.
+            for si, s in enumerate(snaps):
+                if si in failed:
+                    continue
+                mids, md = memtable_topk(s, queries, self.p.k,
+                                         self.p.kernels)
+                out_ids[len(shards) + si] = np.where(
+                    mids >= 0, mids + offsets[si], -1)
+                out_d[len(shards) + si] = md
+                report.mem_candidates += len(s.mem_rows)
         ids, dists = merge_topk(out_ids, out_d, self.p.k)
         report.wall_s = time.perf_counter() - t0
         report.qps = nq / max(report.wall_s, 1e-9)
         if self.cfg.account_io:
             per_q = lat.max(axis=0)     # shards fan out in parallel
+            report.shard_busy_us = [float(lat[si].sum())
+                                    for si in range(len(shards))]
             report.modeled_latency_us = float(per_q.mean())
             report.modeled_p99_us = float(np.percentile(per_q, 99))
             report.per_query_latency_us = [float(v) for v in per_q]
@@ -386,43 +543,64 @@ class BatchedSearcher:
             report.component_io = {n: s.snapshot() for n, s in
                                    self.blocks.components.items()}
             report.component_cache = self.blocks.cache_stats()["partitions"]
+            if self.cfg.prefetch_depth > 0:
+                report.prefetch_queues = self.blocks.prefetch_stats()
         if snap is not None:
             report.storage_bytes = dict(
                 adjacency=snap.index_store.physical_bytes,
                 adjacency_sparse_index=snap.index_store.sparse_index_bytes,
                 vector_chunks=snap.vector_store.physical_bytes,
                 vector_metadata=snap.vector_store.metadata_bytes)
+        elif snaps is not None:
+            report.storage_bytes = dict(
+                adjacency=sum(s.index_store.physical_bytes for s in snaps),
+                adjacency_sparse_index=sum(
+                    s.index_store.sparse_index_bytes for s in snaps),
+                vector_chunks=sum(
+                    s.vector_store.physical_bytes for s in snaps),
+                vector_metadata=sum(
+                    s.vector_store.metadata_bytes for s in snaps))
         return ids, dists, report
 
     # ------------------------------------------------------ I/O accounting
     def _account(self, report: BatchReport, stats, count: int,
-                 caches: list, components: list,
-                 key_offset: int = 0) -> np.ndarray:
+                 caches: list, components: list, key_offset: int = 0,
+                 key_map=None, active=None) -> np.ndarray:
         """Replay one bucket's fetch traces (arrival order) through each
         row's fixed-entry LRU partition (per-shard in the classic path, per
         TENANT in admission mode — one entry per row); price counters with
         the engine.py latency model (latency_aware arm: vector reads off
         the traversal critical path). Uncached fetches are accounted as
-        block reads on the row's BlockStore component; ``key_offset``
-        translates shard-local ids to global keys so one tenant partition
-        spans shards without collisions. Returns per-query modeled latency
+        block reads on the row's BlockStore component; ``key_offset`` (or
+        ``key_map``, the frozen-sharded row_ids table) translates shard-
+        local ids to global keys so one tenant partition spans shards
+        without collisions. Rows with ``active[qi]`` false (the router
+        skipped this shard for that query) are priced at zero — a
+        non-routed shard does no I/O. Returns per-query modeled latency
         [count] in µs."""
         trace = np.asarray(stats.fetch_trace)[:count]       # [c, iters, W]
         pq_ops = np.asarray(stats.pq_dists)[:count]
         exact = np.asarray(stats.exact_dists)[:count]
         batches = np.asarray(stats.rerank_batches)[:count]
         pf_on = self.cfg.prefetch_depth > 0
+        hints = np.asarray(stats.hint_trace)[:count] if pf_on else None
         lat = np.zeros(count)
         for qi in range(count):
+            if active is not None and not active[qi]:
+                continue            # routed away: zero modeled I/O here
             cache, component = caches[qi], components[qi]
-            # Per-query speculative window: the replay's predictor is the
-            # recorded trace itself (hop k+1's fetches are known), so
-            # speculation here is near-perfect — wasted counts only window
-            # evictions and the end-of-query drain. The engine's live
-            # provisional-frontier predictor is the lossy one; this replay
-            # prices the serving tier's best case of the same pipeline.
-            pfq = PrefetchQueue(self.cfg.prefetch_depth,
-                                self.cfg.prefetch_budget) if pf_on else None
+            # Speculative window: hop ri's HINT row (the provisional
+            # frontier the engine recorded BEFORE merging that hop's
+            # neighbors — the honest, lossy predictor) is issued while hop
+            # ri's compute runs; hop ri+1's demand reads then consume
+            # whatever the hints got right. The queue lives on the shared
+            # BlockStore (one per component), so its depth/budget bound
+            # speculation across the whole batch, and `wasted` is a
+            # lifetime counter — charged here by delta.
+            pfq = self.blocks.register_prefetch(
+                component, self.cfg.prefetch_depth,
+                self.cfg.prefetch_budget) if pf_on else None
+            w0 = pfq.wasted if pfq is not None else 0
             misses = hits = io_rounds = covered = pf_hits = 0
             rounds = trace[qi]
             for ri, round_ids in enumerate(rounds):
@@ -430,7 +608,8 @@ class BatchedSearcher:
                 for vid in round_ids:
                     if vid < 0:
                         continue
-                    key = int(vid) + key_offset
+                    key = int(key_map[vid]) if key_map is not None \
+                        else int(vid) + key_offset
                     if cache.get(key) is not None:
                         hits += 1
                         continue
@@ -449,12 +628,15 @@ class BatchedSearcher:
                     io_rounds += 1      # at least one read stalls the round
                 elif round_pf:
                     covered += 1        # fully served by in-flight reads
-                if pfq is not None and ri + 1 < len(rounds):
-                    # Issue hop ri+1's blocks while hop ri's compute runs.
-                    for vid in rounds[ri + 1]:
+                if pfq is not None and ri < len(hints[qi]):
+                    # Issue this hop's provisional-frontier guesses while
+                    # its compute runs (live path: guesses can be wrong —
+                    # unconsumed issues surface in prefetch_wasted).
+                    for vid in hints[qi][ri]:
                         if vid < 0:
                             continue
-                        key = int(vid) + key_offset
+                        key = int(key_map[vid]) if key_map is not None \
+                            else int(vid) + key_offset
                         if cache.peek(key) is None and pfq.offer(key):
                             self.blocks.read(component)
                             report.prefetch_issued += 1
@@ -481,7 +663,7 @@ class BatchedSearcher:
             if pfq is not None:
                 pfq.drain()
                 report.prefetch_hits += pf_hits
-                report.prefetch_wasted += pfq.wasted
+                report.prefetch_wasted += pfq.wasted - w0
                 report.covered_rounds += covered
                 # Overlap pricing (engine "pipelined_overlap"): stalled
                 # rounds overlap compute, covered rounds pay no T_IO, plus

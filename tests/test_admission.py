@@ -454,3 +454,69 @@ def test_bursty_trace_validates_duty(world):
     _, queries = world
     with pytest.raises(ValueError, match="duty"):
         bursty_trace(queries, rate_qps=100, n=4, duty=1.5)
+
+
+# ------------------------------------------- bucket-grid-aligned deadline cuts
+def _alignment_trace(queries, model, n_head=9, n_tail=7):
+    """n_head near-simultaneous arrivals, the first with slack that forces
+    a deadline cut once all n_head are queued; n_tail stragglers arrive
+    long after that batch departs."""
+    tight = model.service_us(n_head) + 100.0
+    reqs = [Request(rid=i, tenant="t0", arrival_us=float(i) * 0.1,
+                    deadline_us=tight if i == 0 else 1e9,
+                    query=queries[i]) for i in range(n_head)]
+    late = 10.0 * model.service_us(n_head)
+    reqs += [Request(rid=i, tenant="t0", arrival_us=late + i,
+                     deadline_us=1e9, query=queries[i])
+             for i in range(n_head, n_head + n_tail)]
+    return reqs
+
+
+def test_aligned_deadline_cut_eliminates_padding(world, model):
+    """ACCEPTANCE: with align_buckets, a deadline cut of 9 on a (8, 32)
+    grid serves the zero-padding prefix of 8 and defers the tail — total
+    padded rows drop to ZERO (vs 8 unaligned), every request is still
+    served exactly once with bit-identical ids, and no new deadline is
+    missed (alignment spends slack, never deadlines)."""
+    index, queries = world
+
+    def run(align):
+        searcher = _searcher(index, buckets=(8, 32))
+        q = AdmissionQueue(searcher, model,
+                           AdmissionConfig(max_batch=32,
+                                           align_buckets=align))
+        return q.run(_alignment_trace(queries, model))
+
+    served0, rep0 = run(False)
+    served1, rep1 = run(True)
+    pad0 = sum(r.report.n_padded for r in rep0.batches)
+    pad1 = sum(r.report.n_padded for r in rep1.batches)
+    assert pad0 > 0                      # the ragged cut really padded
+    assert pad1 == 0                     # aligned: zero padded rows
+    assert any(r.aligned_from > r.n for r in rep1.batches)
+    assert rep1.deadline_misses <= rep0.deadline_misses
+    by0 = {s.rid: s for s in served0}
+    by1 = {s.rid: s for s in served1}
+    assert set(by0) == set(by1) and len(served1) == len(by1)
+    for rid in by0:                      # alignment never changes results
+        np.testing.assert_array_equal(by0[rid].ids, by1[rid].ids)
+        np.testing.assert_array_equal(by0[rid].dists, by1[rid].dists)
+
+
+def test_alignment_never_sacrifices_a_deadline(world, model):
+    """A tail request whose slack cannot survive deferral vetoes the
+    alignment: the cut stays ragged and everyone departs on time."""
+    index, queries = world
+    searcher = _searcher(index, buckets=(8, 32))
+    q = AdmissionQueue(searcher, model,
+                       AdmissionConfig(max_batch=32, align_buckets=True))
+    tight = model.service_us(9) + 100.0
+    # rid 8 (the would-be deferred tail) has just enough slack to be served
+    # in THIS batch but not after it — alignment must refuse.
+    reqs = [Request(rid=i, tenant="t0", arrival_us=float(i) * 0.1,
+                    deadline_us=tight if i in (0, 8) else 1e9,
+                    query=queries[i]) for i in range(9)]
+    served, rep = q.run(reqs)
+    assert [r.aligned_from for r in rep.batches] == [-1] * len(rep.batches)
+    assert rep.deadline_misses == 0
+    assert len(served) == 9

@@ -49,7 +49,7 @@ def test_sharded_search_matches_single_index():
         index = place_on_mesh(index, mesh)
         p = SearchParams(l_size=32, beam_width=4, k=5, rerank_batch=5,
                          r_max=16, universe=per, max_iters=64)
-        run = make_sharded_search(mesh, p, shard_size=per)
+        run = make_sharded_search(mesh, p)
         ids, dists = run(index, queries)
         ids = np.asarray(ids)
         hits = sum(len(set(ids[i].tolist()) & set(gt[i].tolist()))

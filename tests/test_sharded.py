@@ -1,0 +1,276 @@
+"""Mesh-scale sharded serving (ROADMAP item 3).
+
+Three layers, matching the tier's three claims:
+
+1. **Device tier** (subprocess, XLA host devices forced before jax import):
+   at 8/16/32 simulated devices the hierarchical butterfly merge is
+   BIT-IDENTICAL to the flat K·S all_gather merge (the deterministic
+   (dist, id) tie-break makes top-K independent of merge topology), and a
+   router at ``route_frac=1.0`` is bit-identical to no router.
+2. **Serving tier** (host): selective routing at full fan-out is bitwise
+   the unrouted path; pad rows (duplicate last member, ``row_ids`` -1)
+   never surface in results even when k exceeds a shard's real rows.
+3. **Consistency tier** (host, threaded): a ``ShardedSnapshotHandle`` pins
+   one version VECTOR per batch — element-wise monotone across batches
+   under a concurrent publisher, and every recorded batch re-searches
+   bit-identically on its archived version vector.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from test_distributed import _run
+
+
+# --------------------------------------------------------------------------
+# 1. Device tier: hierarchical merge == flat merge, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("devices", [8, 16, 32])
+def test_mesh_merge_bit_identical_and_routed(devices):
+    out = _run(f"""
+        import numpy as np, jax
+        from repro.core.distributed import (build_router,
+                                            build_sharded_index,
+                                            make_sharded_search,
+                                            place_on_mesh)
+        from repro.core.search.beam import SearchParams
+        from repro.data.synthetic import ground_truth, make_vector_dataset
+        S = {devices}
+        vecs = make_vector_dataset("cluster-like", 960, 16,
+                                   seed=0).astype(np.float32)
+        rng = np.random.default_rng(1)
+        qid = rng.choice(len(vecs), size=12, replace=False)
+        queries = (vecs[qid] + 0.001).astype(np.float32)
+        gt = ground_truth(vecs, queries, k=5)
+        mesh = jax.make_mesh((S,), ("data",))
+        index, per = build_sharded_index(vecs, S, r=16, l_build=32, pq_m=4,
+                                         partition="cluster")
+        index = place_on_mesh(index, mesh)
+        router = build_router(index, c=4)
+        p = SearchParams(l_size=32, beam_width=4, k=5, rerank_batch=5,
+                         r_max=16, universe=per, max_iters=64)
+        ids_h, d_h = make_sharded_search(mesh, p, merge="hier")(index,
+                                                               queries)
+        ids_f, d_f = make_sharded_search(mesh, p, merge="flat")(index,
+                                                               queries)
+        ids_r, d_r = make_sharded_search(mesh, p, merge="hier",
+                                         router=router,
+                                         route_frac=1.0)(index, queries)
+        ids_h, ids_f, ids_r = map(np.asarray, (ids_h, ids_f, ids_r))
+        hits = sum(len(set(ids_h[i].tolist()) & set(gt[i].tolist()))
+                   for i in range(len(gt)))
+        result = {{
+            "hier_eq_flat": bool(np.array_equal(ids_h, ids_f)
+                                 and np.array_equal(np.asarray(d_h),
+                                                    np.asarray(d_f))),
+            "routed_eq_full": bool(np.array_equal(ids_h, ids_r)
+                                   and np.array_equal(np.asarray(d_h),
+                                                      np.asarray(d_r))),
+            "recall": hits / gt.size,
+            "max_id": int(ids_h.max()),
+        }}
+    """, devices=devices)
+    assert out["hier_eq_flat"], out
+    assert out["routed_eq_full"], out
+    assert out["recall"] >= 0.9, out
+    assert out["max_id"] >= 960 // 2     # ids from late shards present
+
+
+# --------------------------------------------------------------------------
+# 2. Serving tier: routing identity + pad-row regression
+# --------------------------------------------------------------------------
+
+def _frozen_world(n=130, s=4, dim=16, seed=0):
+    from repro.core.distributed.sharded_index import (build_router,
+                                                      build_sharded_index)
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    index, per = build_sharded_index(vecs, s, r=8, l_build=24, pq_m=4,
+                                     seed=seed, partition="cluster")
+    return vecs, index, per, build_router(index, c=3, seed=seed)
+
+
+def test_router_full_frac_bit_identical_serving():
+    """route_frac=1.0 through the serving tier is bitwise the unrouted
+    path — the router can only ever REMOVE shards from a query's fan-out."""
+    from repro.core.search.beam import SearchParams
+    from repro.serve.ann import BatchedSearcher, ServeConfig
+    vecs, index, per, router = _frozen_world()
+    queries = vecs[:9] + 0.001
+    p = SearchParams(k=10, l_size=24, r_max=8, universe=per, max_iters=24)
+    i0, d0, _ = BatchedSearcher(index, p,
+                                ServeConfig(buckets=(16,))).search(queries)
+    i1, d1, rep = BatchedSearcher(index, p,
+                                  ServeConfig(buckets=(16,),
+                                              route_frac=1.0),
+                                  router=router).search(queries)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(d0, d1)
+    assert rep.fanout_frac == 1.0
+    # routed: strictly fewer (query, shard) pairs, recall still sane
+    i2, _, rep2 = BatchedSearcher(index, p,
+                                  ServeConfig(buckets=(16,),
+                                              route_frac=0.5),
+                                  router=router).search(queries)
+    assert rep2.routed_rows < rep.routed_rows
+    assert (np.asarray(i2) >= 0).any()
+
+
+def test_pad_rows_never_duplicate_results():
+    """Shards pad ragged partitions by repeating their last member; row_ids
+    masks the pads (-1 -> +inf) so a returned row never contains the same
+    global id twice — even when k exceeds a shard's real row count."""
+    from repro.core.search.beam import SearchParams
+    from repro.serve.ann import BatchedSearcher, ServeConfig
+    vecs, index, per, _ = _frozen_world(n=21, s=4)
+    assert (np.asarray(index.row_ids) < 0).any()     # pads exist
+    queries = vecs[:5] + 0.001
+    p = SearchParams(k=8, l_size=16, rerank_batch=8, r_max=8, universe=per,
+                     max_iters=24)
+    ids, dists, _ = BatchedSearcher(index, p,
+                                    ServeConfig(buckets=(8,))).search(queries)
+    ids = np.asarray(ids)
+    for row, drow in zip(ids, np.asarray(dists)):
+        real = row[row >= 0]
+        assert len(set(real.tolist())) == len(real), row
+        assert real.max() < 21
+        assert (np.diff(drow[np.isfinite(drow)]) >= 0).all()
+
+
+def test_failed_shard_degrades_not_crashes():
+    from repro.core.search.beam import SearchParams
+    from repro.serve.ann import BatchedSearcher, ServeConfig
+    vecs, index, per, _ = _frozen_world()
+    queries = vecs[:6] + 0.001
+    p = SearchParams(k=5, l_size=24, r_max=8, universe=per, max_iters=24)
+    searcher = BatchedSearcher(index, p, ServeConfig(buckets=(8,)))
+    ids_all, _, _ = searcher.search(queries)
+    ids_deg, _, rep = searcher.search(queries, failed_shards=[2])
+    assert rep.failed_shards == [2]
+    dead = set(np.asarray(index.row_ids)[2].tolist()) - {-1}
+    assert not (set(np.asarray(ids_deg).ravel().tolist()) & dead)
+    assert (np.asarray(ids_deg) >= 0).sum() > 0
+
+
+# --------------------------------------------------------------------------
+# 3. Consistency tier: per-shard hot swap, version vector per batch
+# --------------------------------------------------------------------------
+
+def _sharded_live_world(seed=7, n_per_shard=90, n_shards=2):
+    from conftest import make_streaming_index
+    from repro.core.update.consistency import ShardedSnapshotHandle
+    from repro.data.synthetic import make_vector_dataset
+    vecs = make_vector_dataset("prop-like", n=n_per_shard * n_shards,
+                               dim=16, seed=seed).astype(np.float32)
+    idxs = [make_streaming_index(vecs[i * n_per_shard:(i + 1) * n_per_shard],
+                                 r=12, m=4)
+            for i in range(n_shards)]
+    return vecs, idxs, ShardedSnapshotHandle([i.handle for i in idxs])
+
+
+def _live_params():
+    from repro.core.search.beam import SearchParams
+    return SearchParams(l_size=32, k=5, rerank_batch=5, max_iters=64,
+                        benefit_threshold=0.0)
+
+
+def test_version_vector_pins_batch_and_reexecutes():
+    """Publishes on ONE shard move only that shard's version; each batch's
+    recorded version vector re-searches bit-identically on the archived
+    snapshots (per-shard hot swap at batch granularity)."""
+    from repro.core.update.consistency import (ShardedSnapshotHandle,
+                                               SnapshotHandle)
+    from repro.serve.ann import BatchedSearcher, ServeConfig
+    vecs, idxs, handle = _sharded_live_world()
+    archived = [{h.current().version: h.current()} for h in handle.handles]
+    searcher = BatchedSearcher(handle, _live_params(),
+                               ServeConfig(buckets=(4,)))
+    queries = vecs[[3, 40, 100, 150]] + 0.001
+    recorded = []
+    ids0, d0, rep0 = searcher.search(queries)
+    recorded.append((rep0.shard_versions, ids0, d0))
+    assert rep0.shard_versions == [0, 0]
+    # publish on shard 1 only: insert within its EF headroom, then merge
+    nid = 90 + 30
+    idxs[1].insert(np.array([nid]), (vecs[100] * 1.0002)[None])
+    idxs[1].merge()
+    snap = idxs[1].handle.current()
+    archived[1][snap.version] = snap
+    ids1, d1, rep1 = searcher.search(queries)
+    recorded.append((rep1.shard_versions, ids1, d1))
+    assert rep1.shard_versions == [0, 1]         # only shard 1 moved
+    assert (nid + handle.offsets[1]) in set(np.asarray(ids1).ravel().tolist())
+    for versions, ids, dists in recorded:
+        pinned = ShardedSnapshotHandle(
+            [SnapshotHandle(archived[i][v]) for i, v in enumerate(versions)],
+            offsets=handle.offsets)
+        re_ids, re_d, _ = BatchedSearcher(pinned, _live_params(),
+                                          ServeConfig(buckets=(4,))) \
+            .search(queries)
+        np.testing.assert_array_equal(ids, re_ids)
+        np.testing.assert_array_equal(dists, re_d)
+
+
+def test_threaded_publisher_version_vector_monotone():
+    """A publisher thread merges shard 1 repeatedly while the main thread
+    serves: every batch's version vector is element-wise monotone
+    non-decreasing (no batch ever observes a torn or rolled-back shard)."""
+    vecs, idxs, handle = _sharded_live_world(seed=9)
+    from repro.serve.ann import BatchedSearcher, ServeConfig
+    searcher = BatchedSearcher(handle, _live_params(),
+                               ServeConfig(buckets=(4,), account_io=False))
+    queries = vecs[[5, 60, 110, 170]] + 0.001
+    n_publishes = 4
+    done = threading.Event()
+
+    def publisher():
+        for j in range(n_publishes):
+            nid = 90 + 40 + j
+            idxs[1].insert(np.array([nid]), (vecs[100 + j] * 1.0003)[None])
+            idxs[1].merge()
+        done.set()
+
+    seen = []
+    t = threading.Thread(target=publisher)
+    t.start()
+    while not done.is_set():
+        _, _, rep = searcher.search(queries)
+        seen.append(rep.shard_versions)
+    t.join()
+    _, _, rep = searcher.search(queries)
+    seen.append(rep.shard_versions)
+    for a, b in zip(seen, seen[1:]):
+        assert all(x <= y for x, y in zip(a, b)), seen
+    assert seen[-1] == [0, n_publishes]          # shard 0 never moved
+
+
+# --------------------------------------------------------------------------
+# Engine pricing + comm-volume units (host, no mesh)
+# --------------------------------------------------------------------------
+
+def test_merge_comm_rows_and_cost():
+    from repro.core.distributed.sharded_index import merge_comm_rows
+    from repro.core.search.engine import shard_merge_cost_us
+    k = 10
+    for s in (8, 16, 32):
+        hier = merge_comm_rows(k, [s], "hier")
+        flat = merge_comm_rows(k, [s], "flat")
+        assert hier == k * int(np.log2(s))
+        assert flat == k * s
+        assert hier < flat
+        # gathered BYTES always favor the tree; modeled LATENCY only does
+        # once row volume outweighs the per-stage launch price
+        assert shard_merge_cost_us(64, [s], "hier") \
+            < shard_merge_cost_us(64, [s], "flat")
+    assert shard_merge_cost_us(k, [32], "hier") \
+        < shard_merge_cost_us(k, [32], "flat")
+    # small S, small K: flat's single stage wins the latency race even
+    # though it gathers more rows — the knob exists for exactly this
+    assert shard_merge_cost_us(k, [8], "flat") \
+        < shard_merge_cost_us(k, [8], "hier")
+    # non-power-of-two axes price flat
+    assert merge_comm_rows(k, [6], "hier") == k * 6
+    with pytest.raises(ValueError):
+        shard_merge_cost_us(k, [8], "nope")
